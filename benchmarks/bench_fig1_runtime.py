@@ -1,0 +1,80 @@
+"""Figure 1: Pixie runtime (a) vs number of steps, (b) vs query-set size.
+
+Paper claims: runtime linear in N (50 ms under 200k steps on their CPU
+fleet); runtime grows slowly with query size (cache effects).  On this CPU
+host the absolute numbers are not the paper's; the claim under test is the
+SHAPE: near-linear in steps, sub-linear in query size.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, sample_query_pins, timed
+from repro.core import walk as walk_lib
+
+
+def run(seed: int = 0) -> Dict:
+    sg = bench_graph()
+    g = sg.graph
+    qs = sample_query_pins(sg, 16, seed)
+
+    out: Dict = {"runtime_vs_steps": [], "runtime_vs_query_size": []}
+
+    # (a) runtime vs steps, |Q| = 1
+    for n_steps in (5_000, 10_000, 20_000, 40_000):
+        cfg = walk_lib.WalkConfig(
+            n_steps=n_steps, n_walkers=256, top_k=100, n_p=10**9, n_v=10**9
+        )
+        qp = jnp.asarray([int(qs[0])], jnp.int32)
+        qw = jnp.ones((1,), jnp.float32)
+        fn = jax.jit(
+            lambda k: walk_lib.recommend(
+                g, qp, qw, jnp.asarray(0, jnp.int32), k, cfg
+            )
+        )
+        t = timed(fn, jax.random.key(seed), warmup=1, iters=3)
+        out["runtime_vs_steps"].append(
+            {"n_steps": n_steps, **t}
+        )
+
+    # (b) runtime vs query size, fixed steps
+    for q_size in (1, 2, 4, 8):
+        cfg = walk_lib.WalkConfig(
+            n_steps=20_000, n_walkers=256, top_k=100, n_p=10**9, n_v=10**9
+        )
+        qp = jnp.full((8,), -1, jnp.int32).at[:q_size].set(
+            jnp.asarray(qs[:q_size])
+        )
+        qw = jnp.zeros((8,), jnp.float32).at[:q_size].set(1.0)
+        fn = jax.jit(
+            lambda k: walk_lib.recommend(
+                g, qp, qw, jnp.asarray(0, jnp.int32), k, cfg
+            )
+        )
+        t = timed(fn, jax.random.key(seed), warmup=1, iters=3)
+        out["runtime_vs_query_size"].append({"q_size": q_size, **t})
+
+    # shape checks
+    r = out["runtime_vs_steps"]
+    lin = r[-1]["mean_ms"] / max(r[0]["mean_ms"], 1e-9)
+    steps_ratio = r[-1]["n_steps"] / r[0]["n_steps"]
+    out["steps_scaling_ratio"] = {
+        "time_ratio": round(lin, 2), "steps_ratio": steps_ratio,
+        "near_linear": bool(lin < 1.6 * steps_ratio),
+    }
+    q = out["runtime_vs_query_size"]
+    out["query_size_sublinear"] = bool(
+        q[-1]["mean_ms"] / max(q[0]["mean_ms"], 1e-9) < 8
+    )
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

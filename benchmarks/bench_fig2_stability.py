@@ -1,0 +1,59 @@
+"""Figure 2: variance of top results vs number of steps.
+
+Run the same query R times with different RNG keys; for each step budget,
+count how many of the top-100 pins appear in >= 50% / 100% of runs.  Paper
+claim: stability grows with steps and saturates (several hundred thousand
+steps suffice at production scale; proportionally fewer here).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, sample_query_pins
+from repro.core import walk as walk_lib
+
+
+def run(n_repeats: int = 10, seed: int = 0) -> Dict:
+    sg = bench_graph()
+    g = sg.graph
+    q = int(sample_query_pins(sg, 1, seed)[0])
+    qp = jnp.asarray([q], jnp.int32)
+    qw = jnp.ones((1,), jnp.float32)
+
+    out = {"stability": []}
+    for n_steps in (5_000, 15_000, 40_000):
+        cfg = walk_lib.WalkConfig(
+            n_steps=n_steps, n_walkers=256, top_k=100, n_p=10**9, n_v=10**9
+        )
+        fn = jax.jit(
+            lambda k: walk_lib.recommend(
+                g, qp, qw, jnp.asarray(0, jnp.int32), k, cfg
+            )
+        )
+        counts: Dict[int, int] = {}
+        for r in range(n_repeats):
+            vals, ids = fn(jax.random.key(seed * 97 + r))
+            ids = np.asarray(ids)[np.asarray(vals) > 0][:100]
+            for p in ids:
+                counts[int(p)] = counts.get(int(p), 0) + 1
+        in_half = sum(1 for c in counts.values() if c >= n_repeats * 0.5)
+        in_all = sum(1 for c in counts.values() if c == n_repeats)
+        out["stability"].append(
+            {"n_steps": n_steps, "in_50pct": in_half, "in_100pct": in_all}
+        )
+    s = out["stability"]
+    out["stability_grows_with_steps"] = bool(
+        s[-1]["in_100pct"] >= s[0]["in_100pct"]
+    )
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,116 @@
+"""Table 1: hit-rate of ranking the related pin — Pixie vs content baselines.
+
+Paper setup: user looking at query pin q saved related pin x; rank all pins,
+report the fraction of queries where x lands in the top-K.  Synthetic
+analogue: x is a co-board pin of q (the same "saved together" relation the
+Pinterest graph encodes); the content baselines rank by noisy topic-vector
+embeddings (textual-cosine / visual-hamming / rank-sum combined), exactly
+the baseline family the paper compares against.
+
+Expected reproduction: Pixie >> combined-content > single-modality content
+(paper: 52.2% vs 10.5% vs ~4.6% at K=1000 — magnitudes differ on a
+synthetic graph; the ORDERING is the claim under test).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, sample_query_pins
+from repro.core import baselines, walk as walk_lib
+
+KS = (10, 100, 1000)
+
+
+def run(n_queries: int = 40, seed: int = 0) -> Dict:
+    sg = bench_graph()
+    g = sg.graph
+    rng = np.random.default_rng(seed)
+    queries = sample_query_pins(sg, n_queries, seed)
+
+    # ground truth: a co-board neighbour of q (the "saved next" pin)
+    p2b_off = np.asarray(g.p2b.offsets)
+    p2b_tgt = np.asarray(g.p2b.targets)
+    b2p_off = np.asarray(g.b2p.offsets)
+    b2p_tgt = np.asarray(g.b2p.targets)
+
+    def co_board_pin(q):
+        lo, hi = p2b_off[q], p2b_off[q + 1]
+        if hi == lo:
+            return None
+        b = p2b_tgt[rng.integers(lo, hi)] - g.n_pins
+        blo, bhi = b2p_off[b], b2p_off[b + 1]
+        cands = b2p_tgt[blo:bhi]
+        cands = cands[cands != q]
+        if cands.size == 0:
+            return None
+        return int(rng.choice(cands))
+
+    text, vis = baselines.make_content_embeddings(sg.pin_topics, seed=seed)
+    text_j, vis_j = jnp.asarray(text), jnp.asarray(vis)
+
+    cfg = walk_lib.WalkConfig(
+        n_steps=30_000, n_walkers=512, top_k=1000, bias_beta=0.0,
+        n_p=10**9, n_v=10**9,
+    )
+
+    hits = {m: {k: 0 for k in KS} for m in
+            ("content_text", "content_visual", "content_combined", "pixie")}
+    n_eval = 0
+    for qi, q in enumerate(queries):
+        x = co_board_pin(int(q))
+        if x is None:
+            continue
+        n_eval += 1
+        scores = {
+            "content_text": np.asarray(
+                baselines.cosine_rank_scores(text_j, int(q))
+            ),
+            "content_visual": np.asarray(
+                baselines.hamming_rank_scores(vis_j, int(q))
+            ),
+            "content_combined": np.asarray(
+                baselines.combined_rank_scores(text_j, vis_j, int(q))
+            ),
+        }
+        for name, s in scores.items():
+            s = s.copy()
+            s[int(q)] = -np.inf
+            rank = int(np.sum(s > s[x]))
+            for k in KS:
+                hits[name][k] += int(rank < k)
+
+        qp = jnp.asarray([int(q)], jnp.int32)
+        qw = jnp.ones((1,), jnp.float32)
+        vals, ids = walk_lib.recommend(
+            g, qp, qw, jnp.asarray(0, jnp.int32),
+            jax.random.key(seed + qi), cfg,
+        )
+        ids = np.asarray(ids)
+        vals = np.asarray(vals)
+        pos = np.where((ids == x) & (vals > 0))[0]
+        rank = int(pos[0]) if pos.size else 10**9
+        for k in KS:
+            hits["pixie"][k] += int(rank < k)
+
+    table = {
+        m: {f"top_{k}": hits[m][k] / max(n_eval, 1) for k in KS}
+        for m in hits
+    }
+    ok = all(
+        table["pixie"][f"top_{k}"] >= table["content_combined"][f"top_{k}"]
+        for k in KS
+    )
+    return {"table": table, "n_queries": n_eval,
+            "ordering_reproduced": bool(ok)}
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

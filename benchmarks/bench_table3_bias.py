@@ -1,0 +1,79 @@
+"""Table 3: personalized (biased) walk — target-language content fraction.
+
+BasicRandomWalk vs PixieRandomWalk with the user's language as the bias
+feature, querying from (a) a dominant-language pin and (b) a target-language
+pin; report % of top-100 recommendations in the target language.  The paper
+shows e.g. En->Japanese 16.35% -> 80.33% and Japanese->Japanese 52.95% ->
+100%; the claim under test is the large lift in both columns.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph
+from repro.core import walk as walk_lib
+
+
+def _lang_frac(sg, ids, vals, lang):
+    ids, vals = np.asarray(ids), np.asarray(vals)
+    ids = ids[vals > 0][:100]
+    if ids.size == 0:
+        return 0.0
+    return float(np.mean(sg.pin_lang[ids] == lang))
+
+
+def run(n_queries: int = 15, seed: int = 0) -> Dict:
+    sg = bench_graph()
+    g = sg.graph
+    rng = np.random.default_rng(seed)
+    degs = np.asarray(g.p2b.degrees())
+
+    base_cfg = walk_lib.WalkConfig(
+        n_steps=20_000, n_walkers=256, top_k=100, n_p=10**9, n_v=10**9,
+    )
+    basic = walk_lib.WalkConfig(**{**base_cfg.__dict__, "bias_beta": 0.0})
+    pixie = walk_lib.WalkConfig(**{**base_cfg.__dict__, "bias_beta": 0.95})
+
+    out: Dict = {}
+    for target in (1, 2, 3):
+        rows = {"basic_from_dominant": [], "pixie_from_dominant": [],
+                "basic_from_target": [], "pixie_from_target": []}
+        dom_pins = np.where((sg.pin_lang == 0) & (degs >= 3))[0]
+        tgt_pins = np.where((sg.pin_lang == target) & (degs >= 3))[0]
+        for i in range(n_queries):
+            for src_name, pool in (("dominant", dom_pins), ("target", tgt_pins)):
+                if pool.size == 0:
+                    continue
+                q = int(rng.choice(pool))
+                qp = jnp.asarray([q], jnp.int32)
+                qw = jnp.ones((1,), jnp.float32)
+                key = jax.random.key(seed * 1000 + target * 100 + i)
+                for cfg_name, cfg in (("basic", basic), ("pixie", pixie)):
+                    vals, ids = walk_lib.recommend(
+                        g, qp, qw, jnp.asarray(target, jnp.int32), key, cfg
+                    )
+                    rows[f"{cfg_name}_from_{src_name}"].append(
+                        _lang_frac(sg, ids, vals, target)
+                    )
+        out[f"lang_{target}"] = {
+            k: float(np.mean(v)) if v else None for k, v in rows.items()
+        }
+    # reproduction check: pixie boosts target-language fraction in both cols
+    lifts = []
+    for t in out.values():
+        if t["pixie_from_dominant"] is not None:
+            lifts.append(t["pixie_from_dominant"] >= t["basic_from_dominant"])
+            lifts.append(t["pixie_from_target"] >= t["basic_from_target"])
+    out["bias_lift_reproduced"] = bool(all(lifts))
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,56 @@
+"""Shared benchmark substrate: one synthetic graph + helpers, reused by all
+paper-table benchmarks so the suite builds the graph once."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import walk as walk_lib
+from repro.graphs.synthetic import SyntheticGraph, SyntheticGraphConfig, generate
+
+
+@functools.lru_cache(maxsize=2)
+def bench_graph(scale: str = "small") -> SyntheticGraph:
+    if scale == "small":
+        cfg = SyntheticGraphConfig(
+            n_pins=20_000, n_boards=2_000, n_topics=16, n_langs=4, seed=7
+        )
+    else:
+        cfg = SyntheticGraphConfig(
+            n_pins=100_000, n_boards=10_000, n_topics=24, n_langs=4, seed=7
+        )
+    return generate(cfg)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> Dict[str, float]:
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            out,
+        )
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            out,
+        )
+        times.append(time.perf_counter() - t0)
+    return {"mean_ms": 1e3 * float(np.mean(times)),
+            "min_ms": 1e3 * float(np.min(times))}
+
+
+def sample_query_pins(sg: SyntheticGraph, n: int, seed: int = 0) -> np.ndarray:
+    """Query pins sampled weighted by degree (active pins, like real queries)."""
+    rng = np.random.default_rng(seed)
+    degs = np.asarray(sg.graph.p2b.degrees()).astype(np.float64)
+    p = degs / degs.sum()
+    return rng.choice(sg.graph.n_pins, size=n, replace=False, p=p).astype(np.int32)

@@ -1,0 +1,135 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --only fig4
+
+Writes results/bench.json and prints a summary with the per-claim
+reproduction verdicts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks import (
+    bench_fig1_runtime,
+    bench_fig2_stability,
+    bench_fig3_earlystop,
+    bench_fig4_pruning,
+    bench_fig5_memory,
+    bench_serving,
+    bench_table1_hitrate,
+    bench_table3_bias,
+)
+
+SUITES = {
+    "table1": ("Table 1: hit-rate vs content baselines",
+               bench_table1_hitrate.run),
+    "table3": ("Table 3: biased-walk language lift", bench_table3_bias.run),
+    "fig1": ("Fig 1: runtime vs steps / query size", bench_fig1_runtime.run),
+    "fig2": ("Fig 2: stability vs steps", bench_fig2_stability.run),
+    "fig3": ("Fig 3: early stopping", bench_fig3_earlystop.run),
+    "fig4": ("Fig 4: pruning link-prediction F1", bench_fig4_pruning.run),
+    "fig5": ("Fig 5: memory/runtime vs pruning", bench_fig5_memory.run),
+    "serving": ("Serving fleet QPS/latency (§3.3)", bench_serving.run),
+}
+
+VERDICT_KEYS = (
+    "ordering_reproduced", "bias_lift_reproduced", "near_linear",
+    "query_size_sublinear", "stability_grows_with_steps",
+    "early_stop_saves_steps", "edges_monotone_in_delta",
+    "pruning_improves_f1", "memory_decreases", "batching_overhead_bounded",
+)
+
+
+def _flatten(d, prefix=""):
+    for k, v in d.items():
+        if isinstance(v, dict):
+            yield from _flatten(v, prefix + k + ".")
+        else:
+            yield k, v
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--out", default="results/bench.json")
+    ap.add_argument("--in-process", action="store_true",
+                    help="run suites in this process (default: one "
+                    "subprocess per suite — XLA CPU JIT memory accumulates "
+                    "across suites otherwise)")
+    args = ap.parse_args(argv)
+
+    names = args.only or list(SUITES)
+
+    if not args.in_process and len(names) > 1:
+        import subprocess
+        import sys
+
+        results = {}
+        os.makedirs("results/bench_parts", exist_ok=True)
+        rc_all = 0
+        for name in names:
+            part = f"results/bench_parts/{name}.json"
+            rc = subprocess.run(
+                [sys.executable, "-m", "benchmarks.run", "--in-process",
+                 "--only", name, "--out", part],
+            ).returncode
+            rc_all |= rc
+            try:
+                with open(part) as f:
+                    results.update(json.load(f))
+            except Exception as e:
+                results[name] = {"error": f"subprocess failed: {e}"}
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        n_claims = n_ok = 0
+        for res in results.values():
+            for k, v in _flatten(res):
+                if k in VERDICT_KEYS:
+                    n_claims += 1
+                    n_ok += bool(v)
+        print(f"\nwrote {args.out}")
+        print(f"paper-claim verdicts: {n_ok}/{n_claims} reproduced")
+        return 0 if (n_ok == n_claims and not rc_all) else 1
+
+    results = {}
+    for name in names:
+        title, fn = SUITES[name]
+        t0 = time.time()
+        print(f"== {title} ==", flush=True)
+        try:
+            res = fn()
+            res["_seconds"] = round(time.time() - t0, 1)
+            results[name] = res
+            verdicts = {
+                k: v for k, v in _flatten(res) if k in VERDICT_KEYS
+            }
+            print(json.dumps(verdicts), f"({res['_seconds']}s)", flush=True)
+        except Exception as e:  # record, keep going
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
+            print("FAILED:", results[name]["error"], flush=True)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\nwrote {args.out}")
+
+    n_claims = n_ok = 0
+    for res in results.values():
+        for k, v in _flatten(res):
+            if k in VERDICT_KEYS:
+                n_claims += 1
+                n_ok += bool(v)
+    print(f"paper-claim verdicts: {n_ok}/{n_claims} reproduced")
+    return 0 if n_ok == n_claims else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""deepseek-moe-16b [arXiv:2401.06066]: 28L d=2048 16H (MHA kv=16)
+expert-ff=1408 vocab=102400 — 2 shared + 64 routed experts top-6,
+fine-grained segmentation; layer 0 is a dense FFN (d_ff=10944)."""
+
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, LM_SHAPES, register
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="deepseek-moe-16b",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=102400,
+    rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2,
+                  ep_shard_map=True),
+    first_dense_ff=10944,
+)
+
+SMOKE = LMConfig(
+    name="deepseek-moe-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=48,
+    vocab_size=512,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=48, n_shared=2),
+    first_dense_ff=96,
+    remat=False,
+    compute_dtype=jnp.float32,
+)
+
+
+@register("deepseek-moe-16b")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="deepseek-moe-16b",
+        family="lm",
+        source="arXiv:2401.06066",
+        config=FULL,
+        smoke_config=SMOKE,
+        shapes=LM_SHAPES,
+    )

@@ -1,0 +1,39 @@
+"""dlrm-mlperf [arXiv:1906.00091]: MLPerf DLRM benchmark config
+(Criteo 1TB): 13 dense + 26 sparse, dim=128, bot 13-512-256-128,
+top 1024-1024-512-256-1, dot interaction, ~188M embedding rows."""
+
+from repro.configs.registry import ArchSpec, CRITEO_ROWS, RECSYS_SHAPES, register
+import jax.numpy as jnp
+
+from repro.models.dlrm import DLRMConfig
+
+FULL = DLRMConfig(
+    name="dlrm-mlperf",
+    n_dense=13,
+    embed_dim=128,
+    bot_mlp=(13, 512, 256, 128),
+    top_mlp=(1024, 1024, 512, 256, 1),
+    feature_rows=CRITEO_ROWS,
+    table_dtype=jnp.bfloat16,
+)
+
+SMOKE = DLRMConfig(
+    name="dlrm-mlperf-smoke",
+    n_dense=13,
+    embed_dim=16,
+    bot_mlp=(13, 32, 16),
+    top_mlp=(64, 32, 1),
+    feature_rows=tuple([100] * 26),
+)
+
+
+@register("dlrm-mlperf")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="dlrm-mlperf",
+        family="recsys",
+        source="arXiv:1906.00091 (MLPerf config)",
+        config=FULL,
+        smoke_config=SMOKE,
+        shapes=RECSYS_SHAPES,
+    )

@@ -1,0 +1,38 @@
+"""dlrm-rm2 [arXiv:1906.00091]: the RM2 variant — dim=64,
+bot 13-512-256-64, top 512-512-256-1, dot interaction."""
+
+from repro.configs.registry import ArchSpec, CRITEO_ROWS, RECSYS_SHAPES, register
+import jax.numpy as jnp
+
+from repro.models.dlrm import DLRMConfig
+
+FULL = DLRMConfig(
+    name="dlrm-rm2",
+    n_dense=13,
+    embed_dim=64,
+    bot_mlp=(13, 512, 256, 64),
+    top_mlp=(512, 512, 256, 1),
+    feature_rows=CRITEO_ROWS,
+    table_dtype=jnp.bfloat16,
+)
+
+SMOKE = DLRMConfig(
+    name="dlrm-rm2-smoke",
+    n_dense=13,
+    embed_dim=8,
+    bot_mlp=(13, 32, 8),
+    top_mlp=(32, 16, 1),
+    feature_rows=tuple([64] * 26),
+)
+
+
+@register("dlrm-rm2")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="dlrm-rm2",
+        family="recsys",
+        source="arXiv:1906.00091",
+        config=FULL,
+        smoke_config=SMOKE,
+        shapes=RECSYS_SHAPES,
+    )

@@ -1,0 +1,38 @@
+"""gin-tu [arXiv:1810.00826]: 5 layers, d_hidden=64, sum aggregator,
+learnable eps — the TU-benchmark GIN config."""
+
+from repro.configs.registry import ArchSpec, GNN_SHAPES, register
+from repro.models.gnn import GINConfig
+
+# d_in / n_classes are shape-cell properties for GNNs; the registry config
+# carries the architecture (depth/width/aggregator) and the dry-run builder
+# specializes d_in per cell.
+FULL = GINConfig(
+    name="gin-tu",
+    n_layers=5,
+    d_hidden=64,
+    d_in=1433,       # overridden per shape cell
+    n_classes=7,
+    train_eps=True,
+)
+
+SMOKE = GINConfig(
+    name="gin-tu-smoke",
+    n_layers=3,
+    d_hidden=16,
+    d_in=32,
+    n_classes=3,
+    train_eps=True,
+)
+
+
+@register("gin-tu")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="gin-tu",
+        family="gnn",
+        source="arXiv:1810.00826",
+        config=FULL,
+        smoke_config=SMOKE,
+        shapes=GNN_SHAPES,
+    )

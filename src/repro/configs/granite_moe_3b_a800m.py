@@ -1,0 +1,59 @@
+"""granite-moe-3b-a800m [hf:ibm-granite/granite-3.0-3b-a800m-base]:
+32L d=1536 24H (GQA kv=8) expert-ff=512 vocab=49155, MoE 40 experts top-8.
+
+40 experts do not divide the 16-way 'model' axis; experts are padded to
+48 (3/device) for expert parallelism with the shard_map dispatch — pad
+experts are router-masked (no tokens, no gradients).  The §Perf log
+records the earlier TP-inside-expert baseline this replaced.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, LM_SHAPES, register
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="granite-moe-3b-a800m",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    pad_heads_to=32,
+    pad_vocab_to=49168,
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff_expert=512, n_shared=0,
+                  pad_experts_to=48, ep_shard_map=True),
+)
+
+SMOKE = LMConfig(
+    name="granite-moe-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=64,
+    vocab_size=512,
+    tie_embeddings=True,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=64, n_shared=0),
+    remat=False,
+    compute_dtype=jnp.float32,
+)
+
+
+@register("granite-moe-3b-a800m")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="granite-moe-3b-a800m",
+        family="lm",
+        source="hf:ibm-granite/granite-3.0-3b-a800m-base",
+        config=FULL,
+        smoke_config=SMOKE,
+        shapes=LM_SHAPES,
+        # EP over 48 padded experts (see MoEConfig.pad_experts_to)
+    )

@@ -1,0 +1,81 @@
+"""pixie — the paper's own architecture as an 11th config (beyond the 40
+assigned cells): the Pixie random-walk recommender at production scale.
+
+  * serve_3b_sharded   — the paper's deployed scale: 3B nodes (2B pins +
+    1B boards) / 17B edges, node-range-sharded across the 'model' axis of
+    one pod; walkers migrate over ICI (core/distributed.py).
+  * serve_200m_replicated — a replicated-graph configuration that fits a
+    single 16 GB chip (the paper's single-machine regime, scaled to HBM).
+"""
+
+import dataclasses
+from typing import Tuple
+
+from repro.configs.registry import ArchSpec, ShapeCell, register
+from repro.core.distributed import ShardedWalkConfig
+from repro.core.walk import WalkConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PixieArchConfig:
+    n_pins: int
+    n_boards: int
+    n_edges: int
+    walk: WalkConfig
+    sharded_walk: ShardedWalkConfig
+    n_slots: int = 16
+
+
+FULL = PixieArchConfig(
+    n_pins=2_000_000_000,
+    n_boards=1_000_000_000,
+    n_edges=17_000_000_000,
+    walk=WalkConfig(n_steps=200_000, n_walkers=8192, top_k=1000),
+    # 24 supersteps x 16 shards x 512 walkers ~ the paper's 200k-step
+    # budget per query; fat supersteps minimize all_to_all rounds
+    # (EXPERIMENTS.md §Perf pixie iteration 2)
+    sharded_walk=ShardedWalkConfig(
+        n_supersteps=24, walkers_per_shard=512, top_k=1000
+    ),
+)
+
+SMOKE = PixieArchConfig(
+    n_pins=300,
+    n_boards=80,
+    n_edges=1500,
+    walk=WalkConfig(n_steps=20_000, n_walkers=256, top_k=50),
+    sharded_walk=ShardedWalkConfig(
+        n_supersteps=32, walkers_per_shard=128, top_k=50
+    ),
+    n_slots=4,
+)
+
+PIXIE_SHAPES = (
+    ShapeCell(
+        "serve_3b_sharded", "pixie_sharded",
+        {"n_pins": FULL.n_pins, "n_boards": FULL.n_boards,
+         "n_edges": FULL.n_edges},
+        note="paper production scale; graph sharded over 'model', queries "
+        "over ('pod','data')",
+    ),
+    ShapeCell(
+        "serve_200m_replicated", "pixie_replicated",
+        {"n_pins": 140_000_000, "n_boards": 60_000_000,
+         "n_edges": 1_200_000_000, "n_slots": 8},
+        note="largest graph that replicates into one 16 GB chip (int32 CSR "
+        "~10.6 GB); the paper's single-machine serving regime. 8 query "
+        "slots keep packed (slot, pin) events in int32",
+    ),
+)
+
+
+@register("pixie")
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="pixie",
+        family="pixie",
+        source="this paper (Eksombatchai et al., 2017)",
+        config=FULL,
+        smoke_config=SMOKE,
+        shapes=PIXIE_SHAPES,
+    )

@@ -1,0 +1,362 @@
+"""Bipartite pin-board graph in contiguous CSR ("edgeVec") form.
+
+This is the JAX port of Pixie's custom graph data structure (paper §3.3):
+
+  * every node gets a dense integer id;
+  * all adjacency lists are concatenated into one contiguous array
+    (``targets``, the paper's ``edgeVec``) with an ``offsets`` array so the
+    neighbours of node ``i`` live in ``targets[offsets[i]:offsets[i+1]]``;
+  * sampling a neighbour is one gather:
+    ``targets[offsets[i] + rand() % (offsets[i+1] - offsets[i])]`` (Eq. 4).
+
+Extensions over the paper's struct, both used by the Pixie walk:
+
+  * **feature-sorted adjacency** — within each node's neighbour slice, edges
+    are sorted by a small categorical edge feature (language/topic bucket) and
+    per-node subrange boundaries are stored, so the paper's
+    ``PersonalizedNeighbor`` "subrange operator" (§3.1(1)) is two extra
+    gathers;
+  * **degrees are derived**, never stored (``offsets`` diff), matching the
+    paper's memory layout.
+
+Pins occupy ids ``[0, n_pins)`` and boards ``[n_pins, n_pins + n_boards)`` in
+a single id space so a walk position is always one integer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """One direction of the bipartite adjacency in edgeVec form.
+
+    Attributes:
+      offsets:     (n_src + 1,) int32/int64 — prefix sums of degrees.
+      targets:     (n_edges,) int — neighbour ids (the paper's edgeVec).
+      feat_bounds: optional (n_src, n_feats + 1) int32 — per-node boundaries
+                   of the feature-sorted sublists, *relative* to the node's
+                   own slice (so values are in [0, degree]).  Column f gives
+                   the start of feature-f edges; column f+1 its end.
+    """
+
+    offsets: Array
+    targets: Array
+    feat_bounds: Optional[Array] = None
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.offsets, self.targets, self.feat_bounds), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- basic queries -------------------------------------------------------
+    @property
+    def n_src(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    @property
+    def n_edges(self) -> int:
+        return self.targets.shape[0]
+
+    @property
+    def n_feats(self) -> int:
+        if self.feat_bounds is None:
+            return 0
+        return self.feat_bounds.shape[1] - 1
+
+    def degrees(self) -> Array:
+        return self.offsets[1:] - self.offsets[:-1]
+
+    def degree(self, node: Array) -> Array:
+        node = jnp.asarray(node)
+        return jnp.take(self.offsets, node + 1) - jnp.take(self.offsets, node)
+
+    def neighbor(self, node: Array, r: Array) -> Array:
+        """Uniform neighbour sample: Eq. 4 of the paper.
+
+        ``node`` and ``r`` are arrays of the same shape; ``r`` is raw random
+        bits (any non-negative int).  Degree-0 nodes return -1.
+        """
+        node = jnp.asarray(node)
+        start = jnp.take(self.offsets, node)
+        deg = jnp.take(self.offsets, node + 1) - start
+        safe_deg = jnp.maximum(deg, 1)
+        idx = start + (r % safe_deg).astype(start.dtype)
+        tgt = jnp.take(self.targets, idx)
+        return jnp.where(deg > 0, tgt, -1)
+
+    def biased_neighbor(self, node: Array, r: Array, feat: Array) -> Array:
+        """PersonalizedNeighbor (§3.1(1)): sample within the feature subrange.
+
+        Falls back to a uniform neighbour when the node has no edges with the
+        requested feature.  ``feat`` broadcasts against ``node``.
+        """
+        if self.feat_bounds is None:
+            return self.neighbor(node, r)
+        node = jnp.asarray(node)
+        start = jnp.take(self.offsets, node)
+        deg = jnp.take(self.offsets, node + 1) - start
+        feat = jnp.broadcast_to(jnp.asarray(feat), node.shape)
+        lo = self.feat_bounds[node, feat].astype(start.dtype)
+        hi = self.feat_bounds[node, feat + 1].astype(start.dtype)
+        span = hi - lo
+        has_feat = span > 0
+        # subrange sample where possible, else uniform over the whole slice
+        sub_idx = start + lo + (r % jnp.maximum(span, 1)).astype(start.dtype)
+        uni_idx = start + (r % jnp.maximum(deg, 1)).astype(start.dtype)
+        idx = jnp.where(has_feat, sub_idx, uni_idx)
+        tgt = jnp.take(self.targets, idx)
+        return jnp.where(deg > 0, tgt, -1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PinBoardGraph:
+    """The full bipartite object graph: pins <-> boards.
+
+    ``p2b`` maps pin id -> board ids; ``b2p`` maps *local* board index
+    (board_id - n_pins) -> pin ids.  Static metadata rides in aux_data so the
+    object is a jit-stable pytree.
+    """
+
+    p2b: CSR
+    b2p: CSR
+    n_pins: int = dataclasses.field(metadata={"static": True})
+    n_boards: int = dataclasses.field(metadata={"static": True})
+    max_pin_degree: int = dataclasses.field(metadata={"static": True})
+
+    def tree_flatten(self):
+        return (self.p2b, self.b2p), (self.n_pins, self.n_boards, self.max_pin_degree)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    # -- queries --------------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return self.n_pins + self.n_boards
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.p2b.n_edges)
+
+    def pin_degree(self, pin: Array) -> Array:
+        return self.p2b.degree(pin)
+
+    def board_local(self, board_id: Array) -> Array:
+        """Global board id -> local row in b2p."""
+        return board_id - self.n_pins
+
+    def nbytes(self) -> int:
+        total = 0
+        for csr in (self.p2b, self.b2p):
+            total += csr.offsets.size * csr.offsets.dtype.itemsize
+            total += csr.targets.size * csr.targets.dtype.itemsize
+            if csr.feat_bounds is not None:
+                total += csr.feat_bounds.size * csr.feat_bounds.dtype.itemsize
+        return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Host-side graph construction (the "graph compiler" of §3.3)
+# ---------------------------------------------------------------------------
+
+
+def _build_csr(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_src: int,
+    edge_feat: Optional[np.ndarray],
+    n_feats: int,
+    offset_dtype=np.int32,
+    target_dtype=np.int32,
+) -> CSR:
+    """Sort edges by (src, feat) and emit edgeVec CSR + feature bounds."""
+    if edge_feat is not None:
+        order = np.lexsort((edge_feat, src))
+    else:
+        order = np.argsort(src, kind="stable")
+    src_s = src[order]
+    dst_s = dst[order].astype(target_dtype)
+    counts = np.bincount(src_s, minlength=n_src)
+    offsets = np.zeros(n_src + 1, dtype=offset_dtype)
+    np.cumsum(counts, out=offsets[1:])
+
+    feat_bounds = None
+    if edge_feat is not None:
+        feat_s = edge_feat[order]
+        # per (src, feat) counts -> relative prefix sums
+        flat = src_s.astype(np.int64) * n_feats + feat_s
+        per = np.bincount(flat, minlength=n_src * n_feats).reshape(n_src, n_feats)
+        feat_bounds = np.zeros((n_src, n_feats + 1), dtype=np.int32)
+        np.cumsum(per, axis=1, out=feat_bounds[:, 1:])
+
+    return CSR(
+        offsets=jnp.asarray(offsets),
+        targets=jnp.asarray(dst_s),
+        feat_bounds=None if feat_bounds is None else jnp.asarray(feat_bounds),
+    )
+
+
+def build_graph(
+    pin_ids: np.ndarray,
+    board_ids: np.ndarray,
+    n_pins: int,
+    n_boards: int,
+    edge_feat: Optional[np.ndarray] = None,
+    n_feats: int = 0,
+    edge_feat_b2p: Optional[np.ndarray] = None,
+) -> PinBoardGraph:
+    """Compile an edge list (pin id, board id in [0, n_boards)) to CSR form.
+
+    Mirrors the paper's offline graph compiler: runs on host (numpy), emits
+    device arrays.  ``edge_feat`` is an optional per-edge small categorical
+    (e.g. the target board's language) enabling the personalized subrange
+    operator in the pin->board direction; ``edge_feat_b2p`` (default: same)
+    is the feature used to sort the board->pin direction (typically the
+    target pin's language).
+    """
+    pin_ids = np.asarray(pin_ids, dtype=np.int64)
+    board_ids = np.asarray(board_ids, dtype=np.int64)
+    if pin_ids.shape != board_ids.shape:
+        raise ValueError("pin_ids and board_ids must align")
+    if edge_feat is not None:
+        edge_feat = np.asarray(edge_feat, dtype=np.int64)
+        if n_feats <= 0:
+            n_feats = int(edge_feat.max()) + 1 if edge_feat.size else 1
+    if edge_feat_b2p is None:
+        edge_feat_b2p = edge_feat
+    else:
+        edge_feat_b2p = np.asarray(edge_feat_b2p, dtype=np.int64)
+
+    p2b = _build_csr(
+        pin_ids, board_ids + n_pins, n_pins, edge_feat, n_feats
+    )
+    b2p = _build_csr(board_ids, pin_ids, n_boards, edge_feat_b2p, n_feats)
+    degs = np.asarray(p2b.degrees())
+    max_deg = int(degs.max()) if degs.size else 0
+    return PinBoardGraph(
+        p2b=p2b,
+        b2p=b2p,
+        n_pins=int(n_pins),
+        n_boards=int(n_boards),
+        max_pin_degree=max_deg,
+    )
+
+
+def edge_list(graph: PinBoardGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """Recover the (pin, local board) edge list from CSR (host-side)."""
+    offsets = np.asarray(graph.p2b.offsets)
+    targets = np.asarray(graph.p2b.targets)
+    pins = np.repeat(np.arange(graph.n_pins, dtype=np.int64), np.diff(offsets))
+    boards = targets.astype(np.int64) - graph.n_pins
+    return pins, boards
+
+
+# ---------------------------------------------------------------------------
+# Persistence: binary shards + metadata, the paper's "persists it to disk in a
+# binary format ... shared easily between machines".
+# ---------------------------------------------------------------------------
+
+
+def save_graph(graph: PinBoardGraph, path: str) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays: Dict[str, np.ndarray] = {
+        "p2b_offsets": np.asarray(graph.p2b.offsets),
+        "p2b_targets": np.asarray(graph.p2b.targets),
+        "b2p_offsets": np.asarray(graph.b2p.offsets),
+        "b2p_targets": np.asarray(graph.b2p.targets),
+    }
+    if graph.p2b.feat_bounds is not None:
+        arrays["p2b_feat_bounds"] = np.asarray(graph.p2b.feat_bounds)
+        arrays["b2p_feat_bounds"] = np.asarray(graph.b2p.feat_bounds)
+    np.savez(os.path.join(path, "graph.npz"), **arrays)
+    meta = {
+        "n_pins": graph.n_pins,
+        "n_boards": graph.n_boards,
+        "max_pin_degree": graph.max_pin_degree,
+        "has_feats": graph.p2b.feat_bounds is not None,
+    }
+    tmp = os.path.join(path, "meta.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, os.path.join(path, "meta.json"))
+
+
+def load_graph(path: str) -> PinBoardGraph:
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "graph.npz"))
+    has_feats = meta["has_feats"]
+    p2b = CSR(
+        offsets=jnp.asarray(data["p2b_offsets"]),
+        targets=jnp.asarray(data["p2b_targets"]),
+        feat_bounds=jnp.asarray(data["p2b_feat_bounds"]) if has_feats else None,
+    )
+    b2p = CSR(
+        offsets=jnp.asarray(data["b2p_offsets"]),
+        targets=jnp.asarray(data["b2p_targets"]),
+        feat_bounds=jnp.asarray(data["b2p_feat_bounds"]) if has_feats else None,
+    )
+    return PinBoardGraph(
+        p2b=p2b,
+        b2p=b2p,
+        n_pins=meta["n_pins"],
+        n_boards=meta["n_boards"],
+        max_pin_degree=meta["max_pin_degree"],
+    )
+
+
+def graph_abstract(
+    n_pins: int,
+    n_boards: int,
+    n_edges: int,
+    n_feats: int = 0,
+    offset_dtype=jnp.int64,
+    target_dtype=jnp.int32,
+) -> PinBoardGraph:
+    """ShapeDtypeStruct stand-in graph for .lower()/.compile() dry-runs.
+
+    Full-production scale (3e9 nodes / 17e9 edges) never materializes on this
+    host; the dry-run lowers against these specs.  Board adjacency reuses the
+    same edge count (each edge appears once per direction).
+    """
+    sds = jax.ShapeDtypeStruct
+    fb = None
+    fb_b = None
+    if n_feats > 0:
+        fb = sds((n_pins, n_feats + 1), jnp.int32)
+        fb_b = sds((n_boards, n_feats + 1), jnp.int32)
+    p2b = CSR(
+        offsets=sds((n_pins + 1,), offset_dtype),
+        targets=sds((n_edges,), target_dtype),
+        feat_bounds=fb,
+    )
+    b2p = CSR(
+        offsets=sds((n_boards + 1,), offset_dtype),
+        targets=sds((n_edges,), target_dtype),
+        feat_bounds=fb_b,
+    )
+    return PinBoardGraph(
+        p2b=p2b,
+        b2p=b2p,
+        n_pins=n_pins,
+        n_boards=n_boards,
+        max_pin_degree=4096,
+    )

@@ -1,0 +1,130 @@
+"""Graph pruning (paper §3.2): board-entropy pruning + degree pruning.
+
+Runs host-side in numpy — this is the paper's offline "graph compiler" stage
+(Hadoop pipeline + single big-RAM compiler box), not the serving path.
+
+1. **Board entropy pruning** — compute each board's topic distribution from
+   the topic vectors of its pins, score by entropy, drop the most-diverse
+   fraction of boards with all their edges.
+2. **Degree pruning** — for every pin with degree d, keep only the
+   ceil(d**delta) edges whose board topic vectors have the highest cosine
+   similarity to the pin's topic vector (Eq.: updated degree |E(p)|^delta).
+
+The paper reports delta = 0.91 peaking link-prediction F1 at +58% with ~20%
+of edges retained; benchmarks/bench_fig4_pruning.py sweeps delta on the
+synthetic graph to reproduce the shape of Figure 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.graph import PinBoardGraph, build_graph, edge_list
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneConfig:
+    entropy_board_frac: float = 0.10   # drop this fraction of highest-entropy boards
+    delta: float = 0.91                # degree pruning factor (Fig. 4 peak)
+    min_keep: int = 2                  # never prune a pin below this degree
+
+
+def board_entropy(
+    pins: np.ndarray,
+    boards: np.ndarray,
+    pin_topics: np.ndarray,
+    n_boards: int,
+    eps: float = 1e-12,
+) -> np.ndarray:
+    """Entropy of each board's aggregated topic distribution (§3.2).
+
+    The paper aggregates topic vectors of the latest pins of a board; the
+    synthetic substrate has no timestamps, so all member pins are used.
+    """
+    nt = pin_topics.shape[1]
+    sums = np.zeros((n_boards, nt), dtype=np.float64)
+    np.add.at(sums, boards, pin_topics[pins].astype(np.float64))
+    counts = np.bincount(boards, minlength=n_boards).astype(np.float64)
+    dist = sums / np.maximum(counts, 1.0)[:, None]
+    dist = dist / np.maximum(dist.sum(axis=1, keepdims=True), eps)
+    ent = -np.sum(dist * np.log(np.maximum(dist, eps)), axis=1)
+    ent[counts == 0] = 0.0
+    return ent.astype(np.float32)
+
+
+def cosine_sim(a: np.ndarray, b: np.ndarray, eps: float = 1e-12) -> np.ndarray:
+    na = np.linalg.norm(a, axis=-1)
+    nb = np.linalg.norm(b, axis=-1)
+    return np.sum(a * b, axis=-1) / np.maximum(na * nb, eps)
+
+
+def prune_graph(
+    graph: PinBoardGraph,
+    pin_topics: np.ndarray,
+    board_topics: np.ndarray | None,
+    cfg: PruneConfig,
+    board_lang: np.ndarray | None = None,
+    pin_lang: np.ndarray | None = None,
+    n_langs: int = 0,
+) -> Tuple[PinBoardGraph, dict]:
+    """Apply both pruning stages; returns (pruned graph, stats)."""
+    pins, boards = edge_list(graph)
+    n_boards = graph.n_boards
+    stats: dict = {"edges_before": int(pins.shape[0])}
+
+    # -- stage 1: entropy-based board removal --------------------------------
+    ent = board_entropy(pins, boards, pin_topics, n_boards)
+    n_drop = int(cfg.entropy_board_frac * n_boards)
+    if n_drop > 0:
+        drop = np.argsort(-ent)[:n_drop]
+        keep_board = np.ones(n_boards, dtype=bool)
+        keep_board[drop] = False
+        mask = keep_board[boards]
+        pins, boards = pins[mask], boards[mask]
+        stats["boards_dropped"] = int(n_drop)
+    stats["edges_after_entropy"] = int(pins.shape[0])
+
+    # board topic dists recomputed on the cleaned edge set
+    if board_topics is None:
+        nt = pin_topics.shape[1]
+        sums = np.zeros((n_boards, nt), dtype=np.float64)
+        np.add.at(sums, boards, pin_topics[pins].astype(np.float64))
+        cnt = np.maximum(np.bincount(boards, minlength=n_boards), 1)
+        board_topics = (sums / cnt[:, None]).astype(np.float32)
+
+    # -- stage 2: degree pruning with cosine similarity ------------------------
+    sim = cosine_sim(pin_topics[pins], board_topics[boards])
+    # sort edges by (pin, -sim); keep the first ceil(deg^delta) per pin
+    order = np.lexsort((-sim, pins))
+    pins_s, boards_s = pins[order], boards[order]
+    deg = np.bincount(pins_s, minlength=graph.n_pins)
+    target = np.maximum(
+        np.ceil(deg.astype(np.float64) ** cfg.delta).astype(np.int64),
+        np.minimum(deg, cfg.min_keep),
+    )
+    # rank of each edge within its pin's sorted slice
+    starts = np.zeros(graph.n_pins + 1, dtype=np.int64)
+    np.cumsum(deg, out=starts[1:])
+    rank = np.arange(pins_s.shape[0], dtype=np.int64) - starts[pins_s]
+    keep = rank < target[pins_s]
+    pins_f, boards_f = pins_s[keep], boards_s[keep]
+    stats["edges_after"] = int(pins_f.shape[0])
+    stats["edge_keep_frac"] = stats["edges_after"] / max(stats["edges_before"], 1)
+
+    ef = board_lang[boards_f] if board_lang is not None else None
+    ef2 = pin_lang[pins_f] if pin_lang is not None else None
+    pruned = build_graph(
+        pins_f,
+        boards_f,
+        n_pins=graph.n_pins,
+        n_boards=n_boards,
+        edge_feat=ef,
+        n_feats=n_langs,
+        edge_feat_b2p=ef2,
+    )
+    stats["bytes_before"] = graph.nbytes()
+    stats["bytes_after"] = pruned.nbytes()
+    return pruned, stats

@@ -1,0 +1,562 @@
+"""The Pixie Random Walk engine (paper §3.1, Algorithms 1-3), vectorized.
+
+The paper's walk is sequential pointer chasing; the TPU-native form runs W
+independent walkers in lockstep.  One *step* for every walker is:
+
+    maybe-restart -> sample board from E(pin) -> sample pin from E(board)
+    -> record visit
+
+which is exactly Algorithm 2's inner loop, with ``SampleWalkLength(alpha)``
+realised as a per-step Bernoulli(alpha) restart (geometric segment lengths,
+E[len] = 1/alpha; see core/sampling.py).
+
+Two counting backends (see core/counter.py):
+  * dense  — per-(query-slot, pin) scatter-add counts; benchmark-scale and
+             per-shard production counting.
+  * events — bounded (slot, pin) event buffer + sort aggregation; scale-free,
+             memory O(N) like the paper's hash table.
+
+Early stopping (Algorithm 2 lines 10-13) is evaluated every chunk: a query
+slot stops once >= n_p pins reached n_v visits or its step budget N_q is
+spent; the whole walk stops when every slot stopped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counter as counter_lib
+from repro.core import sampling
+from repro.core.graph import PinBoardGraph
+
+Array = jax.Array
+
+
+def packed_event_dtype(n_slots: int, n_pins: int):
+    """Smallest int dtype that can hold packed (slot, pin) event ids.
+
+    int32 covers every benchmark-scale graph; the 3B-pin production graph
+    needs int64 (the dry-run launcher enables jax_enable_x64).
+    """
+    if n_slots * n_pins + 1 < 2**31:
+        return jnp.int32
+    return jnp.int64
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkConfig:
+    """Hyper-parameters of the Pixie random walk.
+
+    n_steps:      N — total step budget across all query pins (Eq. 2).
+    alpha:        restart probability; E[walk segment] = 1/alpha.
+    n_walkers:    number of parallel walkers (TPU adaptation; the paper's
+                  sequential walker is n_walkers=1).
+    chunk_steps:  steps fused per while-loop iteration between early-stop
+                  checks (the paper checks per step; chunking trades slack
+                  for device efficiency).
+    n_p, n_v:     early-stopping thresholds (>= n_p pins with >= n_v visits).
+    bias_beta:    probability a step uses the personalized feature subrange
+                  (PersonalizedNeighbor); 0 disables biasing (Algorithm 1).
+    top_k:        number of recommendations extracted from the counter.
+    count_boards: also accumulate board visit counts (for board recs, §5.3).
+    """
+
+    n_steps: int = 100_000
+    alpha: float = 0.5
+    n_walkers: int = 1024
+    chunk_steps: int = 8
+    n_p: int = 2_000
+    n_v: int = 4
+    bias_beta: float = 0.9
+    top_k: int = 1_000
+    count_boards: bool = False
+
+    def max_chunks(self) -> int:
+        per_chunk = self.n_walkers * self.chunk_steps
+        return max(1, -(-self.n_steps // per_chunk))
+
+
+class WalkResult(NamedTuple):
+    """Dense-mode walk output."""
+
+    counts: Array           # (n_slots, n_pins) int32 per-query visit counts
+    board_counts: Optional[Array]  # (n_slots, n_boards) or None
+    steps_taken: Array      # (n_slots,) int32
+    n_high: Array           # (n_slots,) int32 pins that reached n_v visits
+
+
+class EventWalkResult(NamedTuple):
+    """Event-mode walk output (scale-free)."""
+
+    events: Array           # (max_events,) int64 packed slot*n_pins+pin
+    steps_taken: Array      # (n_slots,) int32
+    chunks_run: Array       # () int32
+
+
+# ---------------------------------------------------------------------------
+# One chunk of steps for all walkers (shared by both modes)
+# ---------------------------------------------------------------------------
+
+
+def _walk_chunk(
+    graph: PinBoardGraph,
+    curr: Array,          # (W,) int32 current pin per walker
+    query_of_walker: Array,  # (W,) int32 restart target
+    user_feat: Array,     # () or (W,) int32 personalization feature
+    key: Array,
+    step_base: Array,     # () int32 global step counter (for counter RNG)
+    cfg: WalkConfig,
+    unroll: bool = False,
+) -> Tuple[Array, Array, Array]:
+    """Run cfg.chunk_steps steps; return (new_curr, visited, valid).
+
+    visited/valid: (chunk_steps, W) — pin visited at each step and whether
+    the visit is countable (False when a dead-end forced a restart).
+    ``unroll`` replaces the fori_loop with a Python loop (cost-model mode).
+    """
+    w = curr.shape[0]
+
+    def body(i, carry):
+        curr, visited, valid = carry
+        k = sampling.step_key(key, step_base + i)
+        k_restart, k_bias, k_board, k_pin = jax.random.split(k, 4)
+
+        # (1) restart with probability alpha (SampleWalkLength(alpha))
+        restart = jax.random.bernoulli(k_restart, p=cfg.alpha, shape=(w,))
+        pos = jnp.where(restart, query_of_walker, curr)
+
+        # (2) pin -> board hop, personalized with prob bias_beta
+        r_board = jax.random.randint(k_board, (w,), 0, jnp.iinfo(jnp.int32).max)
+        use_bias = jax.random.bernoulli(k_bias, p=cfg.bias_beta, shape=(w,))
+        if graph.p2b.feat_bounds is not None and cfg.bias_beta > 0.0:
+            board_biased = graph.p2b.biased_neighbor(pos, r_board, user_feat)
+            board_uni = graph.p2b.neighbor(pos, r_board)
+            board = jnp.where(use_bias, board_biased, board_uni)
+        else:
+            board = graph.p2b.neighbor(pos, r_board)
+
+        # (3) board -> pin hop
+        r_pin = jax.random.randint(k_pin, (w,), 0, jnp.iinfo(jnp.int32).max)
+        board_ok = board >= 0
+        board_local = jnp.where(board_ok, board - graph.n_pins, 0)
+        if graph.b2p.feat_bounds is not None and cfg.bias_beta > 0.0:
+            pin_biased = graph.b2p.biased_neighbor(board_local, r_pin, user_feat)
+            pin_uni = graph.b2p.neighbor(board_local, r_pin)
+            nxt = jnp.where(use_bias, pin_biased, pin_uni)
+        else:
+            nxt = graph.b2p.neighbor(board_local, r_pin)
+        ok = board_ok & (nxt >= 0)
+
+        # dead ends restart (uncounted), matching a fresh SampleWalkLength
+        new_curr = jnp.where(ok, nxt, query_of_walker).astype(curr.dtype)
+        visited = visited.at[i].set(jnp.where(ok, new_curr, 0))
+        valid = valid.at[i].set(ok)
+        return new_curr, visited, valid
+
+    visited0 = jnp.zeros((cfg.chunk_steps, w), dtype=curr.dtype)
+    valid0 = jnp.zeros((cfg.chunk_steps, w), dtype=bool)
+    if unroll:
+        carry = (curr, visited0, valid0)
+        for i in range(cfg.chunk_steps):
+            carry = body(i, carry)
+        return carry
+    return jax.lax.fori_loop(0, cfg.chunk_steps, body, (curr, visited0, valid0))
+
+
+def _walk_chunk_boards(
+    graph: PinBoardGraph,
+    curr: Array,
+    query_of_walker: Array,
+    user_feat: Array,
+    key: Array,
+    step_base: Array,
+    cfg: WalkConfig,
+) -> Tuple[Array, Array, Array, Array]:
+    """Like _walk_chunk but also records the intermediate board hop."""
+    w = curr.shape[0]
+
+    def body(i, carry):
+        curr, visited, valid, boards = carry
+        k = sampling.step_key(key, step_base + i)
+        k_restart, k_bias, k_board, k_pin = jax.random.split(k, 4)
+        restart = jax.random.bernoulli(k_restart, p=cfg.alpha, shape=(w,))
+        pos = jnp.where(restart, query_of_walker, curr)
+        r_board = jax.random.randint(k_board, (w,), 0, jnp.iinfo(jnp.int32).max)
+        use_bias = jax.random.bernoulli(k_bias, p=cfg.bias_beta, shape=(w,))
+        if graph.p2b.feat_bounds is not None and cfg.bias_beta > 0.0:
+            board = jnp.where(
+                use_bias,
+                graph.p2b.biased_neighbor(pos, r_board, user_feat),
+                graph.p2b.neighbor(pos, r_board),
+            )
+        else:
+            board = graph.p2b.neighbor(pos, r_board)
+        r_pin = jax.random.randint(k_pin, (w,), 0, jnp.iinfo(jnp.int32).max)
+        board_ok = board >= 0
+        board_local = jnp.where(board_ok, board - graph.n_pins, 0)
+        if graph.b2p.feat_bounds is not None and cfg.bias_beta > 0.0:
+            nxt = jnp.where(
+                use_bias,
+                graph.b2p.biased_neighbor(board_local, r_pin, user_feat),
+                graph.b2p.neighbor(board_local, r_pin),
+            )
+        else:
+            nxt = graph.b2p.neighbor(board_local, r_pin)
+        ok = board_ok & (nxt >= 0)
+        new_curr = jnp.where(ok, nxt, query_of_walker).astype(curr.dtype)
+        visited = visited.at[i].set(jnp.where(ok, new_curr, 0))
+        valid = valid.at[i].set(ok)
+        boards = boards.at[i].set(jnp.where(board_ok, board_local, 0))
+        return new_curr, visited, valid, boards
+
+    visited0 = jnp.zeros((cfg.chunk_steps, w), dtype=curr.dtype)
+    valid0 = jnp.zeros((cfg.chunk_steps, w), dtype=bool)
+    boards0 = jnp.zeros((cfg.chunk_steps, w), dtype=curr.dtype)
+    return jax.lax.fori_loop(
+        0, cfg.chunk_steps, body, (curr, visited0, valid0, boards0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dense-mode multi-query walk (Algorithms 2 + 3)
+# ---------------------------------------------------------------------------
+
+
+def pixie_random_walk(
+    graph: PinBoardGraph,
+    query_pins: Array,     # (n_slots,) int32, padded with -1
+    query_weights: Array,  # (n_slots,) float32, 0 for padding
+    user_feat: Array,      # () int32 personalization feature (e.g. language)
+    key: Array,
+    cfg: WalkConfig,
+) -> WalkResult:
+    """PIXIERANDOMWALKMULTIPLE: biased, weighted, early-stopped, boosted.
+
+    Returns dense per-slot visit counts; combine with
+    ``counter_lib.boost_combine`` + ``topk_dense`` for recommendations.
+    """
+    n_slots = query_pins.shape[0]
+    n_pins = graph.n_pins
+    w = cfg.n_walkers
+
+    valid_q = (query_pins >= 0) & (query_weights > 0)
+    safe_q = jnp.where(valid_q, query_pins, 0)
+    degs = graph.pin_degree(safe_q) * valid_q.astype(graph.p2b.offsets.dtype)
+
+    # Eq. 1-2: per-slot step budgets; walker pool apportioned to match.
+    n_q = sampling.allocate_steps(
+        jnp.where(valid_q, query_weights, 0.0),
+        degs,
+        jnp.asarray(graph.max_pin_degree),
+        cfg.n_steps,
+    )
+    slot_of_walker, _ = sampling.allocate_walkers(n_q, w)
+    query_of_walker = jnp.take(safe_q, slot_of_walker).astype(jnp.int32)
+
+    counts0 = jnp.zeros((n_slots * n_pins,), dtype=jnp.int32)
+    bcounts0 = (
+        jnp.zeros((n_slots * graph.n_boards,), dtype=jnp.int32)
+        if cfg.count_boards
+        else None
+    )
+    walkers_per_slot = jax.ops.segment_sum(
+        jnp.ones((w,), jnp.int32), slot_of_walker, num_segments=n_slots
+    )
+
+    def cond(state):
+        _, _, _, steps_taken, slot_active, it = state
+        return jnp.any(slot_active) & (it < cfg.max_chunks())
+
+    def body(state):
+        curr, counts, bcounts, steps_taken, slot_active, it = state
+        step_base = it * cfg.chunk_steps
+        walker_active = jnp.take(slot_active, slot_of_walker)
+
+        if cfg.count_boards:
+            curr2, visited, valid, boards = _walk_chunk_boards(
+                graph, curr, query_of_walker, user_feat, key, step_base, cfg
+            )
+        else:
+            curr2, visited, valid = _walk_chunk(
+                graph, curr, query_of_walker, user_feat, key, step_base, cfg
+            )
+            boards = None
+        curr = jnp.where(walker_active, curr2, curr)
+        valid = valid & walker_active[None, :]
+
+        # scatter events into flat (slot, pin) counts
+        idt = packed_event_dtype(n_slots, max(n_pins, graph.n_boards))
+        slot_b = jnp.broadcast_to(slot_of_walker[None, :], visited.shape)
+        flat_idx = slot_b.astype(idt) * n_pins + visited.astype(idt)
+        counts = counts.at[jnp.where(valid, flat_idx, 0)].add(
+            valid.astype(jnp.int32), mode="drop"
+        )
+        if cfg.count_boards:
+            bflat = slot_b.astype(idt) * graph.n_boards + boards.astype(idt)
+            bvalid = valid  # board hop validity coincides with pin validity
+            bcounts = bcounts.at[jnp.where(bvalid, bflat, 0)].add(
+                bvalid.astype(jnp.int32), mode="drop"
+            )
+
+        steps_taken = steps_taken + walkers_per_slot * slot_active.astype(
+            jnp.int32
+        ) * cfg.chunk_steps
+
+        # early stopping: slot stops when n_high > n_p or budget exhausted
+        per_slot = counts.reshape(n_slots, n_pins)
+        n_high = counter_lib.n_high_visited(per_slot, cfg.n_v)
+        slot_active = (
+            valid_q
+            & (steps_taken < n_q)
+            & (n_high <= cfg.n_p)
+        )
+        return curr, counts, bcounts, steps_taken, slot_active, it + 1
+
+    state0 = (
+        query_of_walker,
+        counts0,
+        bcounts0,
+        jnp.zeros((n_slots,), jnp.int32),
+        valid_q,
+        jnp.asarray(0, jnp.int32),
+    )
+    curr, counts, bcounts, steps_taken, _, _ = jax.lax.while_loop(
+        cond, body, state0
+    )
+    per_slot = counts.reshape(n_slots, n_pins)
+    # never recommend the query pins themselves
+    per_slot = per_slot.at[jnp.arange(n_slots), safe_q].set(0)
+    n_high = counter_lib.n_high_visited(per_slot, cfg.n_v)
+    return WalkResult(
+        counts=per_slot,
+        board_counts=None
+        if bcounts is None
+        else bcounts.reshape(n_slots, graph.n_boards),
+        steps_taken=steps_taken,
+        n_high=n_high,
+    )
+
+
+def basic_random_walk(
+    graph: PinBoardGraph,
+    query_pin: Array,
+    key: Array,
+    cfg: WalkConfig,
+) -> Array:
+    """Algorithm 1: unbiased, single query pin, fixed budget. -> (n_pins,)"""
+    cfg_basic = dataclasses.replace(
+        cfg, bias_beta=0.0, n_p=cfg.n_steps + 1, n_v=jnp.iinfo(jnp.int32).max // 2
+    )
+    res = pixie_random_walk(
+        graph,
+        jnp.asarray([query_pin], jnp.int32),
+        jnp.ones((1,), jnp.float32),
+        jnp.asarray(0, jnp.int32),
+        key,
+        cfg_basic,
+    )
+    return res.counts[0]
+
+
+def recommend(
+    graph: PinBoardGraph,
+    query_pins: Array,
+    query_weights: Array,
+    user_feat: Array,
+    key: Array,
+    cfg: WalkConfig,
+) -> Tuple[Array, Array]:
+    """Full query path: walk -> Eq. 3 booster -> top-k (scores, pin ids)."""
+    res = pixie_random_walk(graph, query_pins, query_weights, user_feat, key, cfg)
+    boosted = counter_lib.boost_combine(res.counts)
+    return counter_lib.topk_dense(boosted, cfg.top_k)
+
+
+# ---------------------------------------------------------------------------
+# Event-mode walk — scale-free path used by the sharded production graph
+# ---------------------------------------------------------------------------
+
+
+def pixie_walk_events(
+    graph: PinBoardGraph,
+    query_pins: Array,
+    query_weights: Array,
+    user_feat: Array,
+    key: Array,
+    cfg: WalkConfig,
+    check_every: int = 4,
+) -> EventWalkResult:
+    """Event-buffer walk: O(N) memory independent of graph size.
+
+    The event buffer plays the role of the paper's N-sized hash table;
+    early stopping re-aggregates the buffer every ``check_every`` chunks.
+    """
+    n_slots = query_pins.shape[0]
+    n_pins = graph.n_pins
+    w = cfg.n_walkers
+    per_chunk = w * cfg.chunk_steps
+    max_chunks = cfg.max_chunks()
+    max_events = max_chunks * per_chunk
+    idt = packed_event_dtype(n_slots, n_pins)
+    sentinel = jnp.asarray(n_slots * n_pins, dtype=idt)
+
+    valid_q = (query_pins >= 0) & (query_weights > 0)
+    safe_q = jnp.where(valid_q, query_pins, 0)
+    degs = graph.pin_degree(safe_q) * valid_q.astype(graph.p2b.offsets.dtype)
+    n_q = sampling.allocate_steps(
+        jnp.where(valid_q, query_weights, 0.0),
+        degs,
+        jnp.asarray(graph.max_pin_degree),
+        cfg.n_steps,
+    )
+    slot_of_walker, _ = sampling.allocate_walkers(n_q, w)
+    query_of_walker = jnp.take(safe_q, slot_of_walker).astype(jnp.int32)
+    walkers_per_slot = jax.ops.segment_sum(
+        jnp.ones((w,), jnp.int32), slot_of_walker, num_segments=n_slots
+    )
+
+    events0 = jnp.full((max_events,), sentinel, dtype=idt)
+
+    def cond(state):
+        _, _, _, slot_active, it = state
+        return jnp.any(slot_active) & (it < max_chunks)
+
+    def body(state):
+        curr, events, steps_taken, slot_active, it = state
+        step_base = it * cfg.chunk_steps
+        walker_active = jnp.take(slot_active, slot_of_walker)
+        curr2, visited, valid = _walk_chunk(
+            graph, curr, query_of_walker, user_feat, key, step_base, cfg
+        )
+        curr = jnp.where(walker_active, curr2, curr)
+        valid = valid & walker_active[None, :]
+        slot_b = jnp.broadcast_to(slot_of_walker[None, :], visited.shape)
+        packed = jnp.where(
+            valid,
+            slot_b.astype(idt) * n_pins + visited.astype(idt),
+            sentinel,
+        ).reshape(-1)
+        events = jax.lax.dynamic_update_slice(events, packed, (it * per_chunk,))
+        steps_taken = steps_taken + walkers_per_slot * slot_active.astype(
+            jnp.int32
+        ) * cfg.chunk_steps
+
+        def check(args):
+            events, steps_taken = args
+            uniq, counts = counter_lib.events_to_counts(
+                events, n_slots, max_events
+            )
+            hot = (counts >= cfg.n_v) & (uniq < sentinel)
+            slot_of_run = jnp.where(hot, uniq // n_pins, n_slots)
+            n_high = jax.ops.segment_sum(
+                hot.astype(jnp.int32),
+                slot_of_run.astype(jnp.int32),
+                num_segments=n_slots + 1,
+            )[:n_slots]
+            return valid_q & (steps_taken < n_q) & (n_high <= cfg.n_p)
+
+        do_check = (it + 1) % check_every == 0
+        slot_active = jax.lax.cond(
+            do_check,
+            check,
+            lambda args: valid_q & (args[1] < n_q),
+            (events, steps_taken),
+        )
+        return curr, events, steps_taken, slot_active, it + 1
+
+    state0 = (
+        query_of_walker,
+        events0,
+        jnp.zeros((n_slots,), jnp.int32),
+        valid_q,
+        jnp.asarray(0, jnp.int32),
+    )
+    _, events, steps_taken, _, it = jax.lax.while_loop(cond, body, state0)
+    return EventWalkResult(events=events, steps_taken=steps_taken, chunks_run=it)
+
+
+def pixie_walk_events_fixed(
+    graph: PinBoardGraph,
+    query_pins: Array,
+    query_weights: Array,
+    user_feat: Array,
+    key: Array,
+    cfg: WalkConfig,
+    n_chunks: int,
+    unroll: bool = True,
+) -> EventWalkResult:
+    """Cost-model twin of pixie_walk_events: exactly n_chunks chunks via an
+    unrolled scan (no early stopping, no while loop).
+
+    Exists because XLA's cost analysis counts while-loop bodies ONCE; the
+    dry-run lowers this variant at n_chunks = 1 and 2 and extrapolates the
+    linear-in-chunks cost to cfg.max_chunks() (launch/dryrun.py).
+    """
+    n_slots = query_pins.shape[0]
+    n_pins = graph.n_pins
+    w = cfg.n_walkers
+    per_chunk = w * cfg.chunk_steps
+    max_events = n_chunks * per_chunk
+    idt = packed_event_dtype(n_slots, n_pins)
+    sentinel = jnp.asarray(n_slots * n_pins, dtype=idt)
+
+    valid_q = (query_pins >= 0) & (query_weights > 0)
+    safe_q = jnp.where(valid_q, query_pins, 0)
+    degs = graph.pin_degree(safe_q) * valid_q.astype(graph.p2b.offsets.dtype)
+    n_q = sampling.allocate_steps(
+        jnp.where(valid_q, query_weights, 0.0),
+        degs,
+        jnp.asarray(graph.max_pin_degree),
+        cfg.n_steps,
+    )
+    slot_of_walker, _ = sampling.allocate_walkers(n_q, w)
+    query_of_walker = jnp.take(safe_q, slot_of_walker).astype(jnp.int32)
+
+    def body(curr, it):
+        step_base = it * cfg.chunk_steps
+        curr2, visited, valid = _walk_chunk(
+            graph, curr, query_of_walker, user_feat, key, step_base, cfg,
+            unroll=unroll,
+        )
+        slot_b = jnp.broadcast_to(slot_of_walker[None, :], visited.shape)
+        packed = jnp.where(
+            valid,
+            slot_b.astype(idt) * n_pins + visited.astype(idt),
+            sentinel,
+        ).reshape(-1)
+        return curr2, packed
+
+    curr, chunks = jax.lax.scan(
+        body, query_of_walker, jnp.arange(n_chunks), unroll=True
+    )
+    steps = jnp.full((n_slots,), n_chunks * cfg.chunk_steps, jnp.int32)
+    return EventWalkResult(
+        events=chunks.reshape(-1),
+        steps_taken=steps,
+        chunks_run=jnp.asarray(n_chunks, jnp.int32),
+    )
+
+
+def recommend_from_events(
+    result: EventWalkResult,
+    n_slots: int,
+    n_pins: int,
+    query_pins: Array,
+    top_k: int,
+) -> Tuple[Array, Array]:
+    """Eq. 3 + top-k from an event buffer. -> (scores, pin ids)."""
+    max_events = result.events.shape[0]
+    sentinel = n_slots * n_pins
+    uniq, counts = counter_lib.events_to_counts(result.events, n_slots, max_events)
+    pin_ids, boosted = counter_lib.boosted_from_events(
+        uniq, counts, n_pins, sentinel, max_events
+    )
+    # mask out query pins
+    is_query = jnp.isin(pin_ids, query_pins)
+    boosted = jnp.where(is_query, 0.0, boosted)
+    return counter_lib.topk_events(pin_ids, boosted, top_k)

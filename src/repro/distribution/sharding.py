@@ -1,0 +1,156 @@
+"""Logical-axis sharding: one rule table maps model-space names to mesh axes.
+
+Models annotate every parameter / activation dimension with a *logical* name
+('embed', 'heads', 'mlp', 'vocab', 'experts', 'batch', 'kv_seq', 'rows', …).
+A RuleSet maps logical names to physical mesh axes; `spec(...)` resolves a
+tuple of logical names to a PartitionSpec.  Swapping the whole distribution
+strategy (pure DP, Megatron TP, FSDP, EP, sequence-parallel decode) is a
+rule-table edit, not a model edit — this is what makes the §Perf hillclimb
+iterations one-line changes.
+
+Mesh conventions (launch/mesh.py):
+  single-pod: (data=16, model=16)           axes ('data', 'model')
+  multi-pod:  (pod=2, data=16, model=16)    axes ('pod', 'data', 'model')
+
+The 'pod' axis is pure data parallelism: everything latency-critical stays
+intra-pod (the paper's "walk never crosses machines", one level up).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    """Logical axis name -> mesh axes (None = replicate)."""
+
+    rules: Dict[str, Axes]
+
+    def axes_for(self, name: Optional[str], mesh: Mesh) -> Axes:
+        if name is None:
+            return None
+        ax = self.rules.get(name)
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            ax = (ax,)
+        # drop axes the mesh doesn't have (e.g. 'pod' on the single-pod mesh)
+        present = tuple(a for a in ax if a in mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def spec(self, logical: Tuple[Optional[str], ...], mesh: Mesh) -> P:
+        return P(*(self.axes_for(name, mesh) for name in logical))
+
+    def sharding(
+        self, logical: Tuple[Optional[str], ...], mesh: Mesh
+    ) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical, mesh))
+
+    def tree_specs(self, logical_tree, mesh: Mesh):
+        """Map a pytree of logical-name tuples to a pytree of PartitionSpecs."""
+        return jax.tree.map(
+            lambda names: self.spec(names, mesh),
+            logical_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(n is None or isinstance(n, str) for n in x),
+        )
+
+    def with_overrides(self, **kv: Axes) -> "RuleSet":
+        new = dict(self.rules)
+        new.update(kv)
+        return RuleSet(new)
+
+
+# ---------------------------------------------------------------------------
+# Default rule tables per model family
+# ---------------------------------------------------------------------------
+
+# Megatron-style TP on 'model' + DP/FSDP on ('pod','data') for LM training.
+LM_TRAIN_RULES = RuleSet({
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",          # FSDP: gather params per layer inside scan
+    "embed_kv": None,         # see transformer._block_logical
+    "heads": "model",         # TP: attention heads
+    "kv_heads": None,         # small GQA kv counts don't divide 16; replicate
+    "head_dim": None,
+    "mlp": "model",           # TP: FFN hidden
+    "vocab": "model",         # TP: output projection + embedding
+    "experts": "model",       # EP: routed experts
+    "expert_mlp": None,
+    "capacity": None,
+    "layers": None,
+    "kv_seq": None,
+})
+
+# Decode: batch over data, KV sequence over model (sequence parallelism).
+LM_SERVE_RULES = RuleSet({
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "embed_kv": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "capacity": None,
+    "layers": None,
+    "kv_seq": "model",        # long-context KV cache sharded along sequence
+})
+
+# GNN: edges across every device; node state replicated (baseline).
+GNN_RULES = RuleSet({
+    "edges": ("pod", "data", "model"),
+    "nodes": None,
+    "feat": None,
+    "hidden": None,
+    "batch": ("pod", "data"),
+    "layers": None,
+})
+
+# RecSys: mega embedding table row-sharded on 'model', MLPs data-parallel.
+RECSYS_RULES = RuleSet({
+    "batch": ("pod", "data"),
+    "rows": "model",          # embedding-table rows
+    "dim": None,
+    "features": None,
+    "mlp_in": None,
+    "mlp_out": None,
+    "seq": None,
+    "heads": None,
+    "candidates": "model",    # retrieval scoring: candidate axis
+    "layers": None,
+})
+
+# Pixie graph serving: CSR arrays node-range-sharded on 'model',
+# query batch on ('pod','data').
+PIXIE_RULES = RuleSet({
+    "batch": ("pod", "data"),
+    "graph_nodes": "model",
+    "graph_edges": "model",
+    "slots": None,
+    "walkers": None,
+    "pins": None,
+})
+
+
+def param_shardings(logical_tree, rules: RuleSet, mesh: Mesh):
+    """Pytree of NamedShardings from a pytree of logical-name tuples."""
+    return jax.tree.map(
+        lambda names: rules.sharding(names, mesh),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(n is None or isinstance(n, str) for n in x),
+    )

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: flash-decoding GQA attention for one new token.
+
+The LM serving path (decode_32k / long_500k cells) attends one query token
+against a long KV cache.  The cache never fits VMEM, so the kernel streams
+KV blocks HBM->VMEM and keeps the online-softmax state (running max m,
+normalizer l, weighted accumulator acc) in VMEM scratch across the KV grid
+axis — the flash-decoding recurrence:
+
+    m'   = max(m, rowmax(s))
+    l'   = l * exp(m - m') + rowsum(exp(s - m'))
+    acc' = acc * exp(m - m') + exp(s - m') @ V
+
+Grid = (batch, kv_heads, s_blocks); the s axis is innermost so scratch
+carries across it.  GQA falls out of blocking the query-head axis by
+kv-head: each program holds the (group, dh) query slice that shares one
+kv head.  Length masking handles ragged cache fill.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    len_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+    *, block_s: int, scale: float,
+):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (group, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (block_s, dh)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (block_s, dh)
+    length = len_ref[0]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                        # (group, block_s)
+    span = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1
+    )
+    scores = jnp.where(span < length, scores, NEG_INF)
+
+    m_prev = m_ref[...]                              # (group, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m_new)                      # (group, block_s)
+    corr = jnp.exp(m_prev - m_new)                   # (group, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        out_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "interpret")
+)
+def decode_attention(
+    q: jax.Array,        # (b, h, dh)
+    k: jax.Array,        # (b, s, kh, dh)
+    v: jax.Array,        # (b, s, kh, dh)
+    lengths: jax.Array,  # (b,) int32
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-token GQA decode attention -> (b, h, dh) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, h, dh = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    scale = dh ** -0.5
+    block_s = min(block_s, s)
+    s_pad = -(-s // block_s) * block_s
+    if s_pad != s:
+        pad = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    # (b, kh, s, dh) layout so the kv-head axis is blockable
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qg = q.reshape(b, kh, group, dh)
+
+    grid = (b, kh, s_pad // block_s)
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, block_s=block_s, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ik, is_: (ib,)),
+            pl.BlockSpec((1, 1, group, dh), lambda ib, ik, is_: (ib, ik, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda ib, ik, is_: (ib, ik, is_, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda ib, ik, is_: (ib, ik, is_, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, dh), lambda ib, ik, is_: (ib, ik, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, dh), jnp.float32),
+        scratch_shapes=[
+            # m, l, acc carry the online-softmax state across the s grid axis
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        lengths.astype(jnp.int32),
+        qg.reshape(b, kh, group, dh),
+        kt,
+        vt,
+    )
+    return out.reshape(b, h, dh)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + pool) for the recsys substrate.
+
+JAX has no native EmbeddingBag; the oracle is `take + segment-style pooling`
+(ref.py).  The kernel tiles the *batch* of bags into VMEM, leaves the
+embedding table in HBM (memory_space=ANY — recsys tables are 10^6..10^9
+rows and never fit VMEM), and gathers + accumulates rows per bag with the
+feature dimension vectorized across lanes.  This is the v5e analogue of the
+SparseCore lookup: ids are small VMEM-resident integers, each id costs one
+HBM row fetch of d*4 bytes, pooling is free (accumulated in VREGs).
+
+Fixed bag size with -1 padding keeps every shape static (SPMD-friendly);
+multi-hot recsys features and DLRM single-hot lookups (bag size 1) are both
+instances.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 64  # bags per grid cell
+
+
+def _embedding_bag_kernel(
+    ids_ref, weights_ref, table_ref, out_ref, *, block_b: int, bag: int,
+    mean: bool,
+):
+    d = out_ref.shape[-1]
+
+    def bag_body(b, acc):
+        def elem_body(l, inner):
+            acc, wsum = inner
+            idx = ids_ref[b, l]
+            valid = idx >= 0
+            safe = jnp.where(valid, idx, 0)
+            row = table_ref[pl.ds(safe, 1), :]  # (1, d)
+            w = weights_ref[b, l] * valid.astype(jnp.float32)
+            acc = acc + row[0].astype(jnp.float32) * w
+            return acc, wsum + w
+
+        acc_b, wsum = jax.lax.fori_loop(
+            0, bag, elem_body, (jnp.zeros((d,), jnp.float32), 0.0)
+        )
+        if mean:
+            acc_b = acc_b / jnp.maximum(wsum, 1.0)
+        return acc.at[b].set(acc_b)
+
+    out = jax.lax.fori_loop(
+        0, block_b, bag_body, jnp.zeros((block_b, d), jnp.float32)
+    )
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_b", "interpret")
+)
+def embedding_bag(
+    table: jax.Array,                 # (v, d)
+    ids: jax.Array,                   # (b, l) int32, -1 padding
+    weights: Optional[jax.Array] = None,  # (b, l) f32
+    *,
+    mode: str = "sum",
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pooled embedding lookup -> (b, d), dtype = table dtype."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, bag = ids.shape
+    v, d = table.shape
+    if weights is None:
+        weights = jnp.ones((b, bag), jnp.float32)
+    b_pad = -(-b // block_b) * block_b
+    if b_pad != b:
+        ids = jnp.concatenate(
+            [ids, jnp.full((b_pad - b, bag), -1, ids.dtype)]
+        )
+        weights = jnp.concatenate(
+            [weights, jnp.zeros((b_pad - b, bag), weights.dtype)]
+        )
+    grid = (b_pad // block_b,)
+    out = pl.pallas_call(
+        functools.partial(
+            _embedding_bag_kernel,
+            block_b=block_b,
+            bag=bag,
+            mean=(mode == "mean"),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, bag), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, bag), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, d), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), weights.astype(jnp.float32), table)
+    return out[:b]

@@ -1,0 +1,103 @@
+"""Public jit'd entry points for the Pallas kernels, with oracle fallbacks.
+
+Every op takes `use_kernel`:
+  * True  — run the Pallas kernel (interpret mode on CPU, compiled on TPU);
+  * False — run the pure-jnp oracle from ref.py (always available, used by
+    the distributed paths where the op must trace under shard_map/jit with
+    shapes the kernel grid doesn't cover).
+
+The default is the oracle on CPU hosts and the kernel on TPU: the oracle
+*is* the mathematically identical program, so higher layers never branch on
+backend.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.embedding_bag import embedding_bag as _bag_kernel
+from repro.kernels.visit_counter import visit_counter as _counter_kernel
+from repro.kernels.walk_step import walk_step as _walk_kernel
+
+Array = jax.Array
+
+
+def _default_use_kernel() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def visit_counts(
+    events: Array, n_bins: int, *, use_kernel: Optional[bool] = None
+) -> Array:
+    """Histogram of visit events over [0, n_bins)."""
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        return _counter_kernel(events, n_bins)
+    return ref.visit_counter_ref(events, n_bins)
+
+
+def walk_step(
+    curr: Array,
+    query: Array,
+    rbits: Array,
+    p2b_offsets: Array,
+    p2b_targets: Array,
+    b2p_offsets: Array,
+    b2p_targets: Array,
+    *,
+    n_pins: int,
+    alpha_u32: int,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[Array, Array, Array]:
+    """One fused biased walk superstep -> (next, visited, valid)."""
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        return _walk_kernel(
+            curr, query, rbits,
+            p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
+            n_pins=n_pins, alpha_u32=alpha_u32,
+        )
+    return ref.walk_step_ref(
+        curr, query, rbits,
+        p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
+        n_pins=n_pins, alpha_u32=alpha_u32,
+    )
+
+
+def embedding_bag(
+    table: Array,
+    ids: Array,
+    weights: Optional[Array] = None,
+    *,
+    mode: str = "sum",
+    use_kernel: Optional[bool] = None,
+) -> Array:
+    """Pooled (sum/mean) embedding lookup -> (b, d)."""
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        return _bag_kernel(table, ids, weights, mode=mode)
+    return ref.embedding_bag_ref(table, ids, weights, mode=mode)
+
+
+def decode_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    lengths: Array,
+    *,
+    use_kernel: Optional[bool] = None,
+) -> Array:
+    """Single-token GQA decode attention -> (b, h, dh) f32."""
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        return _decode_kernel(q, k, v, lengths)
+    return ref.decode_attention_ref(q, k, v, lengths)

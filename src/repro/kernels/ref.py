@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth: simple, obviously-correct jnp
+code with no tiling or memory-space tricks.  Kernel tests sweep shapes and
+dtypes and ``assert_allclose`` kernel-vs-oracle (exact for integer kernels).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# visit_counter: bounded-event histogram (the paper's open-addressing table)
+# ---------------------------------------------------------------------------
+
+
+def visit_counter_ref(events: Array, n_bins: int) -> Array:
+    """Count occurrences of each id in [0, n_bins); ids outside are dropped.
+
+    events: (m,) int32.  Returns (n_bins,) int32.
+    """
+    valid = (events >= 0) & (events < n_bins)
+    safe = jnp.where(valid, events, 0)
+    counts = jnp.zeros((n_bins,), jnp.int32)
+    return counts.at[safe].add(valid.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# walk_step: one fused pin->board->pin superstep for a walker block
+# ---------------------------------------------------------------------------
+
+
+def walk_step_ref(
+    curr: Array,          # (w,) int32 current pin ids
+    query: Array,         # (w,) int32 restart pins
+    rbits: Array,         # (w, 3) uint32 random bits: restart, board, pin
+    p2b_offsets: Array,   # (n_pins + 1,) int32
+    p2b_targets: Array,   # (e,) int32 board ids (global, >= n_pins)
+    b2p_offsets: Array,   # (n_boards + 1,) int32
+    b2p_targets: Array,   # (e,) int32 pin ids
+    n_pins: int,
+    alpha_u32: int,       # restart iff rbits[:,0] < alpha_u32
+) -> Tuple[Array, Array, Array]:
+    """Returns (next_pin, visited_pin, valid) each (w,)."""
+    restart = rbits[:, 0] < jnp.uint32(alpha_u32)
+    pos = jnp.where(restart, query, curr)
+
+    start = jnp.take(p2b_offsets, pos)
+    deg = jnp.take(p2b_offsets, pos + 1) - start
+    idx = start + (rbits[:, 1].astype(jnp.int32) % jnp.maximum(deg, 1))
+    board = jnp.take(p2b_targets, idx)
+    board_ok = deg > 0
+
+    b_local = jnp.where(board_ok, board - n_pins, 0)
+    bstart = jnp.take(b2p_offsets, b_local)
+    bdeg = jnp.take(b2p_offsets, b_local + 1) - bstart
+    bidx = bstart + (rbits[:, 2].astype(jnp.int32) % jnp.maximum(bdeg, 1))
+    nxt = jnp.take(b2p_targets, bidx)
+    ok = board_ok & (bdeg > 0)
+
+    next_pin = jnp.where(ok, nxt, query).astype(curr.dtype)
+    visited = jnp.where(ok, nxt, 0).astype(curr.dtype)
+    return next_pin, visited, ok
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag: fixed-bag-size gather + pool (JAX has no native EmbeddingBag)
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag_ref(
+    table: Array,          # (v, d)
+    ids: Array,            # (b, l) int32, -1 = padding
+    weights: Optional[Array] = None,  # (b, l) f32
+    mode: str = "sum",
+) -> Array:
+    """Per-bag pooled embedding lookup. Returns (b, d) in table dtype."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    rows = jnp.take(table, safe, axis=0)           # (b, l, d)
+    w = valid.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    pooled = jnp.sum(rows * w[..., None], axis=1)  # (b, d)
+    if mode == "mean":
+        denom = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1.0)
+        pooled = pooled / denom
+    return pooled
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: single-token GQA attention over a (possibly long) KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_ref(
+    q: Array,        # (b, h, dh)
+    k: Array,        # (b, s, kh, dh)
+    v: Array,        # (b, s, kh, dh)
+    lengths: Array,  # (b,) int32 valid KV length per sequence
+    scale: Optional[float] = None,
+) -> Array:
+    """Flash-decoding semantics: softmax(q k^T / sqrt(dh)) v with length mask.
+
+    h = kh * group; query head i attends to kv head i // group.
+    Returns (b, h, dh) f32.
+    """
+    b, h, dh = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    if scale is None:
+        scale = dh ** -0.5
+    qg = q.reshape(b, kh, group, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, kf) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]          # (b, s)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, vf)
+    return out.reshape(b, h, dh)

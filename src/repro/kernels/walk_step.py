@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: one fused Pixie walk superstep for a walker block.
+
+The paper's inner loop (Algorithm 2 lines 6-13) is three dependent random
+memory accesses per step: offsets[pin] -> targets[...] (board), then
+offsets[board] -> targets[...] (pin).  On TPU the CSR arrays live in HBM
+(memory_space=ANY — gigabytes, never blockable into VMEM), the walker state
+is tiled into VMEM, and the two-level gather is issued per walker from
+inside the kernel.  Fusing restart + both hops + visit emission into one
+kernel keeps all walker state resident in VMEM across the superstep, which
+is the point: the paper's "walk never leaves the machine" becomes "walker
+state never leaves VMEM; only the unavoidable CSR gathers touch HBM".
+
+Random bits are generated *outside* (counter-based threefry, one uint32
+triple per walker-step) so the kernel is a pure function and byte-for-byte
+reproducible across restarts — the fault-tolerance contract of the runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_W = 256  # walkers per grid cell
+
+
+def _walk_step_kernel(
+    # scalar-ish VMEM blocks
+    curr_ref, query_ref, rbits_ref,
+    # full CSR arrays, left in HBM/ANY
+    p2b_off_ref, p2b_tgt_ref, b2p_off_ref, b2p_tgt_ref,
+    # outputs
+    next_ref, visited_ref, valid_ref,
+    *,
+    n_pins: int,
+    alpha_u32: int,
+    block_w: int,
+):
+    curr = curr_ref[...]
+    query = query_ref[...]
+    restart = rbits_ref[:, 0] < jnp.uint32(alpha_u32)
+    pos = jnp.where(restart, query, curr)
+    r_board = rbits_ref[:, 1].astype(jnp.int32)
+    r_pin = rbits_ref[:, 2].astype(jnp.int32)
+
+    def body(i, carry):
+        nxt, vis, ok_acc = carry
+        p = pos[i]
+        # hop 1: pin -> board
+        start = p2b_off_ref[pl.ds(p, 1)][0]
+        end = p2b_off_ref[pl.ds(p + 1, 1)][0]
+        deg = end - start
+        eidx = start + r_board[i] % jnp.maximum(deg, 1)
+        board = p2b_tgt_ref[pl.ds(eidx, 1)][0]
+        board_ok = deg > 0
+        b_local = jnp.where(board_ok, board - n_pins, 0)
+        # hop 2: board -> pin
+        bstart = b2p_off_ref[pl.ds(b_local, 1)][0]
+        bend = b2p_off_ref[pl.ds(b_local + 1, 1)][0]
+        bdeg = bend - bstart
+        bidx = bstart + r_pin[i] % jnp.maximum(bdeg, 1)
+        pin = b2p_tgt_ref[pl.ds(bidx, 1)][0]
+        ok = board_ok & (bdeg > 0)
+        nxt = nxt.at[i].set(jnp.where(ok, pin, query[i]))
+        vis = vis.at[i].set(jnp.where(ok, pin, 0))
+        ok_acc = ok_acc.at[i].set(ok)
+        return nxt, vis, ok_acc
+
+    init = (
+        jnp.zeros((block_w,), jnp.int32),
+        jnp.zeros((block_w,), jnp.int32),
+        jnp.zeros((block_w,), jnp.bool_),
+    )
+    nxt, vis, ok = jax.lax.fori_loop(0, block_w, body, init)
+    next_ref[...] = nxt
+    visited_ref[...] = vis
+    valid_ref[...] = ok
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_pins", "alpha_u32", "block_w", "interpret")
+)
+def walk_step(
+    curr: jax.Array,         # (w,) int32
+    query: jax.Array,        # (w,) int32
+    rbits: jax.Array,        # (w, 3) uint32
+    p2b_offsets: jax.Array,  # (n_pins + 1,) int32
+    p2b_targets: jax.Array,  # (e,) int32
+    b2p_offsets: jax.Array,  # (n_boards + 1,) int32
+    b2p_targets: jax.Array,  # (e,) int32
+    *,
+    n_pins: int,
+    alpha_u32: int,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool | None = None,
+):
+    """One superstep for all walkers. Returns (next, visited, valid)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    w = curr.shape[0]
+    if w % block_w != 0:
+        raise ValueError(f"n_walkers {w} must be a multiple of {block_w}")
+    grid = (w // block_w,)
+    blk = lambda i: (i,)
+    any_spec = pl.BlockSpec(memory_space=pl.ANY)
+    out_sds = jax.ShapeDtypeStruct((w,), jnp.int32)
+    return pl.pallas_call(
+        functools.partial(
+            _walk_step_kernel,
+            n_pins=n_pins,
+            alpha_u32=alpha_u32,
+            block_w=block_w,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_w,), blk),
+            pl.BlockSpec((block_w,), blk),
+            pl.BlockSpec((block_w, 3), lambda i: (i, 0)),
+            any_spec, any_spec, any_spec, any_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((block_w,), blk),
+            pl.BlockSpec((block_w,), blk),
+            pl.BlockSpec((block_w,), blk),
+        ],
+        out_shape=[out_sds, out_sds, jax.ShapeDtypeStruct((w,), jnp.bool_)],
+        interpret=interpret,
+    )(
+        curr.astype(jnp.int32),
+        query.astype(jnp.int32),
+        rbits.astype(jnp.uint32),
+        p2b_offsets.astype(jnp.int32),
+        p2b_targets.astype(jnp.int32),
+        b2p_offsets.astype(jnp.int32),
+        b2p_targets.astype(jnp.int32),
+    )

@@ -1,0 +1,835 @@
+"""Dry-run cell builders: (arch x shape x mesh) -> a lowerable program.
+
+Each builder returns (fn, abstract_args, in_shardings, out_shardings,
+donate) such that
+
+    jax.jit(fn, in_shardings=..., out_shardings=..., donate_argnums=...)
+        .lower(*abstract_args).compile()
+
+is exactly the production step for that cell.  Nothing here allocates:
+parameters, optimizer state, caches and batches are ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeCell
+from repro.core import distributed as pixie_dist
+from repro.core import walk as walk_lib
+from repro.distribution import sharding as shlib
+from repro.launch.mesh import data_axes
+from repro.models import dlrm as dlrm_lib
+from repro.models import embedding as emb_lib
+from repro.models import gnn as gnn_lib
+from repro.models import sequential_rec as sr
+from repro.models import transformer as tf
+from repro.training import optim, train_loop
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    fn: Any
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+
+def _ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _batch_axes(mesh: Mesh):
+    ax = data_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_train_rules(spec: ArchSpec) -> shlib.RuleSet:
+    return shlib.LM_TRAIN_RULES.with_overrides(**spec.train_rule_overrides)
+
+
+def _lm_serve_rules(spec: ArchSpec) -> shlib.RuleSet:
+    rules = shlib.LM_SERVE_RULES.with_overrides(
+        heads=None, embed=None
+    )  # decode: attention DP, KV sequence-sharded
+    return rules.with_overrides(**spec.serve_rule_overrides)
+
+
+def build_lm_cell(
+    spec: ArchSpec, cell: ShapeCell, mesh: Mesh, n_micro: int = 4
+) -> Cell:
+    cfg = spec.config
+    seq = cell.params["seq_len"]
+    batch = cell.params["global_batch"]
+    bax = _batch_axes(mesh)
+
+    if cell.kind == "train":
+        rules = _lm_train_rules(spec)
+        logical = tf.param_logical(cfg)
+        params_abs = tf.abstract_params(cfg)
+        opt_abs = optim.abstract_state(params_abs)
+        param_sh, opt_sh = train_loop.state_shardings(
+            logical, rules, mesh, zero1=True, params_abs=params_abs
+        )
+        batch_abs = {
+            "tokens": SDS((batch, seq), jnp.int32),
+            "labels": SDS((batch, seq), jnp.int32),
+            "mask": SDS((batch, seq), jnp.float32),
+        }
+        batch_sh = {k: _ns(mesh, bax, None) for k in batch_abs}
+
+        def loss_fn(p, b):
+            return tf.loss_fn(
+                p, b["tokens"], b["labels"], b["mask"], cfg, mesh=mesh
+            )
+
+        step = train_loop.make_train_step(
+            loss_fn,
+            train_loop.TrainStepConfig(n_micro=n_micro),
+        )
+        return Cell(
+            fn=step,
+            args=((params_abs, opt_abs), batch_abs),
+            in_shardings=((param_sh, opt_sh), batch_sh),
+            out_shardings=((param_sh, opt_sh), None),
+            donate=(0,),
+        )
+
+    if cell.kind == "prefill":
+        # training-style TP for the prompt pass; cache comes out seq-sharded
+        rules = _lm_train_rules(spec)
+        logical = tf.param_logical(cfg)
+        params_abs = tf.abstract_params(cfg)
+        is_spec = lambda x: isinstance(x, tuple) and all(
+            n is None or isinstance(n, str) for n in x
+        )
+        param_sh = jax.tree.map(
+            lambda names: rules.sharding(names, mesh), logical, is_leaf=is_spec
+        )
+        tokens_abs = SDS((batch, seq), jnp.int32)
+        cache_logical = tf.kv_cache_logical()
+        serve_rules = shlib.LM_SERVE_RULES.with_overrides(
+            **spec.serve_rule_overrides
+        )
+        cache_sh = {
+            k: serve_rules.sharding(v, mesh) for k, v in cache_logical.items()
+        }
+
+        def prefill_fn(p, tokens):
+            return tf.prefill(p, tokens, cfg, max_seq=seq, mesh=mesh)
+
+        return Cell(
+            fn=prefill_fn,
+            args=(params_abs, tokens_abs),
+            in_shardings=(param_sh, _ns(mesh, bax, None)),
+            out_shardings=(_ns(mesh, bax, None), cache_sh),
+        )
+
+    if cell.kind == "decode":
+        rules = _lm_serve_rules(spec)
+        if batch == 1:
+            # batch of 1 cannot shard over data; keep it replicated
+            rules = rules.with_overrides(batch=None)
+            bax = None
+        logical = tf.param_logical(cfg)
+        params_abs = tf.abstract_params(cfg)
+        is_spec = lambda x: isinstance(x, tuple) and all(
+            n is None or isinstance(n, str) for n in x
+        )
+        param_sh = jax.tree.map(
+            lambda names: rules.sharding(names, mesh), logical, is_leaf=is_spec
+        )
+        cache_abs = tf.abstract_kv_cache(cfg, batch, seq)
+        cache_sh = {
+            k: rules.sharding(v, mesh)
+            for k, v in tf.kv_cache_logical().items()
+        }
+        tokens_abs = SDS((batch,), jnp.int32)
+        pos_abs = SDS((), jnp.int32)
+
+        def decode_fn(p, cache, tokens, pos):
+            return tf.decode_step(p, cache, tokens, pos, cfg, mesh=mesh)
+
+        return Cell(
+            fn=decode_fn,
+            args=(params_abs, cache_abs, tokens_abs, pos_abs),
+            in_shardings=(
+                param_sh, cache_sh, _ns(mesh, bax), _ns(mesh),
+            ),
+            out_shardings=(_ns(mesh, bax, None), cache_sh),
+            donate=(1,),
+        )
+
+    raise ValueError(f"unknown LM cell kind {cell.kind}")
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def build_gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    base: gnn_lib.GINConfig = spec.config
+    p = cell.params
+    edge_ax = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+    if cell.name == "minibatch_lg":
+        # fixed-fanout sampled block shapes
+        batch = p["batch_nodes"]
+        f = p["fanout"]
+        n_nodes = batch * (1 + f[0] + f[0] * f[1])
+        n_edges = batch * (f[0] + f[0] * f[1])
+        d_feat, n_classes = p["d_feat"], p["n_classes"]
+        readout = None
+        n_graphs = 0
+    elif cell.name == "molecule":
+        n_nodes = p["n_nodes"] * p["batch"]
+        n_edges = p["n_edges"] * p["batch"]
+        d_feat, n_classes = p["d_feat"], p["n_classes"]
+        readout = "sum"
+        n_graphs = p["batch"]
+    else:
+        n_nodes, n_edges = p["n_nodes"], p["n_edges"]
+        d_feat, n_classes = p["d_feat"], p["n_classes"]
+        readout = None
+        n_graphs = 0
+
+    cfg = dataclasses.replace(
+        base, d_in=d_feat, n_classes=n_classes, readout=readout
+    )
+    params_abs = gnn_lib.abstract_params(cfg)
+    opt_abs = optim.abstract_state(params_abs)
+    # GIN params are tiny: replicate everywhere
+    rep = jax.tree.map(lambda _: _ns(mesh), params_abs)
+    opt_rep = jax.tree.map(lambda _: _ns(mesh), opt_abs)
+
+    # pad the edge count so the edge axis shards evenly
+    n_shards = 1
+    for a in edge_ax:
+        n_shards *= mesh.shape[a]
+    n_edges = -(-n_edges // n_shards) * n_shards
+
+    if readout == "sum":
+        batch_abs = {
+            "feats": SDS((n_nodes, d_feat), jnp.float32),
+            "edge_src": SDS((n_edges,), jnp.int32),
+            "edge_dst": SDS((n_edges,), jnp.int32),
+            "graph_ids": SDS((n_nodes,), jnp.int32),
+            "labels": SDS((n_graphs,), jnp.int32),
+        }
+
+        def loss_fn(pp, b):
+            return gnn_lib.graph_classification_loss(
+                pp, b["feats"], b["edge_src"], b["edge_dst"],
+                b["graph_ids"], b["labels"], cfg, n_graphs,
+            )
+    else:
+        batch_abs = {
+            "feats": SDS((n_nodes, d_feat), jnp.float32),
+            "edge_src": SDS((n_edges,), jnp.int32),
+            "edge_dst": SDS((n_edges,), jnp.int32),
+            "labels": SDS((n_nodes,), jnp.int32),
+            "mask": SDS((n_nodes,), jnp.float32),
+        }
+
+        def loss_fn(pp, b):
+            return gnn_lib.node_classification_loss(
+                pp, b["feats"], b["edge_src"], b["edge_dst"],
+                b["labels"], b["mask"], cfg,
+            )
+
+    eax = edge_ax if len(edge_ax) > 1 else (edge_ax[0] if edge_ax else None)
+    batch_sh = {
+        k: _ns(mesh, eax) if k.startswith("edge_") else _ns(mesh)
+        for k in batch_abs
+    }
+    step = train_loop.make_train_step(
+        loss_fn, train_loop.TrainStepConfig(n_micro=1)
+    )
+    return Cell(
+        fn=step,
+        args=((params_abs, opt_abs), batch_abs),
+        in_shardings=((rep, opt_rep), batch_sh),
+        out_shardings=((rep, opt_rep), None),
+        donate=(0,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def build_recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    cfg = spec.config
+    bax = _batch_axes(mesh)
+    if isinstance(cfg, dlrm_lib.DLRMConfig):
+        return _build_dlrm_cell(spec, cell, mesh, bax)
+    return _build_seqrec_cell(spec, cell, mesh, bax)
+
+
+def _dlrm_shardings(cfg, mesh, zero1: bool):
+    rules = shlib.RECSYS_RULES
+    logical = dlrm_lib.param_logical(cfg)
+    params_abs = dlrm_lib.abstract_params(cfg)
+    opt_abs = optim.abstract_state(params_abs)
+    param_sh, opt_sh = train_loop.state_shardings(
+        logical, rules, mesh, zero1=zero1, params_abs=params_abs
+    )
+    return params_abs, opt_abs, param_sh, opt_sh
+
+
+def _sharded_forward(cfg, mesh, bax):
+    """DLRM forward using the shard_map mega-table lookup."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def forward(params, dense, sparse_ids):
+        cd = cfg.compute_dtype
+        bot = dlrm_lib._mlp_fwd(
+            params["bot"], dense.astype(cd), len(cfg.bot_mlp) - 1, True
+        )
+        sparse = emb_lib.lookup_sharded(
+            params["table"], sparse_ids, cfg.table, mesh,
+            batch_axes=batch_axes,
+        )
+        inter = dlrm_lib._interact(bot, sparse.astype(cd))
+        top_in = jnp.concatenate([bot, inter], axis=-1)
+        logits = dlrm_lib._mlp_fwd(
+            params["top"], top_in, len(cfg.top_mlp), False
+        )
+        return logits[:, 0].astype(jnp.float32)
+
+    return forward
+
+
+def _build_dlrm_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh, bax) -> Cell:
+    cfg: dlrm_lib.DLRMConfig = spec.config
+    fwd = _sharded_forward(cfg, mesh, bax)
+
+    if cell.kind == "train":
+        batch = cell.params["batch"]
+        # hybrid optimizer (the recsys production shape): the mega-table
+        # trains with rowwise AdaGrad (one f32 scalar per row — no Adam
+        # moments, no ZeRO resharding of a 96 GB tensor); dense MLPs use
+        # AdamW + ZeRO-1.  See EXPERIMENTS.md §Perf (dlrm hillclimb).
+        params_abs = dlrm_lib.abstract_params(cfg)
+        dense_abs = {k: v for k, v in params_abs.items() if k != "table"}
+        opt_abs = optim.abstract_state(dense_abs)
+        accum_abs = SDS((cfg.table.total_rows,), jnp.float32)
+        logical = dlrm_lib.param_logical(cfg)
+        rules = shlib.RECSYS_RULES
+        param_sh, _ = train_loop.state_shardings(
+            logical, rules, mesh, zero1=False, params_abs=params_abs
+        )
+        dense_logical = {k: v for k, v in logical.items() if k != "table"}
+        dense_sh, dense_opt_sh = train_loop.state_shardings(
+            dense_logical, rules, mesh, zero1=True, params_abs=dense_abs
+        )
+        accum_sh = _ns(mesh, "model")
+        batch_abs = {
+            "dense": SDS((batch, cfg.n_dense), jnp.float32),
+            "sparse": SDS((batch, cfg.n_sparse), jnp.int32),
+            "labels": SDS((batch,), jnp.float32),
+        }
+        batch_sh = {
+            "dense": _ns(mesh, bax, None),
+            "sparse": _ns(mesh, bax, None),
+            "labels": _ns(mesh, bax),
+        }
+
+        def loss_fn(p, b):
+            logits = fwd(p, b["dense"], b["sparse"])
+            y = b["labels"]
+            return jnp.mean(
+                jnp.maximum(logits, 0) - logits * y
+                + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+            )
+
+        adamw = optim.AdamWConfig()
+
+        def step(state, b):
+            params, opt_state, accum = state
+            loss, grads = jax.value_and_grad(loss_fn)(params, b)
+            table, t_accum = optim.rowwise_adagrad_update(
+                params["table"], grads["table"], accum, lr=0.01
+            )
+            dense_p = {k: v for k, v in params.items() if k != "table"}
+            dense_g = {k: v for k, v in grads.items() if k != "table"}
+            new_dense, new_opt, metrics = optim.apply_updates(
+                dense_p, dense_g, opt_state, adamw
+            )
+            new_params = dict(new_dense)
+            new_params["table"] = table
+            metrics["loss"] = loss
+            return (new_params, new_opt, t_accum), metrics
+
+        return Cell(
+            fn=step,
+            args=((params_abs, opt_abs, accum_abs), batch_abs),
+            in_shardings=((param_sh, dense_opt_sh, accum_sh), batch_sh),
+            out_shardings=((param_sh, dense_opt_sh, accum_sh), None),
+            donate=(0,),
+        )
+
+    if cell.kind == "serve":
+        batch = cell.params["batch"]
+        params_abs, _, param_sh, _ = _dlrm_shardings(cfg, mesh, zero1=False)
+        args = (
+            params_abs,
+            SDS((batch, cfg.n_dense), jnp.float32),
+            SDS((batch, cfg.n_sparse), jnp.int32),
+        )
+        return Cell(
+            fn=fwd,
+            args=args,
+            in_shardings=(
+                param_sh, _ns(mesh, bax, None), _ns(mesh, bax, None)
+            ),
+            out_shardings=_ns(mesh, bax),
+        )
+
+    if cell.kind == "retrieval":
+        n_cand = cell.params["n_candidates"]
+        params_abs, _, param_sh, _ = _dlrm_shardings(cfg, mesh, zero1=False)
+
+        def retrieval(params, dense, sparse_ids, candidates):
+            n = candidates.shape[0]
+            dense_b = jnp.broadcast_to(dense[None, :], (n, cfg.n_dense))
+            ids_b = jnp.broadcast_to(sparse_ids[None, :], (n, cfg.n_sparse))
+            ids_b = ids_b.at[:, 0].set(candidates)
+            scores = fwd(params, dense_b, ids_b)
+            vals, idx = jax.lax.top_k(scores, 100)
+            return vals, jnp.take(candidates, idx)
+
+        args = (
+            params_abs,
+            SDS((cfg.n_dense,), jnp.float32),
+            SDS((cfg.n_sparse,), jnp.int32),
+            SDS((n_cand,), jnp.int32),
+        )
+        return Cell(
+            fn=retrieval,
+            args=args,
+            in_shardings=(param_sh, _ns(mesh), _ns(mesh), _ns(mesh, bax)),
+            out_shardings=(_ns(mesh), _ns(mesh)),
+        )
+
+    raise ValueError(cell.kind)
+
+
+def _build_seqrec_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh, bax) -> Cell:
+    cfg: sr.SeqRecConfig = spec.config
+    # item tables at 10M x 50 fit per-chip: replicate (rows -> None);
+    # ZeRO-1 shards the optimizer moments over 'data'.
+    rules = shlib.RECSYS_RULES.with_overrides(rows=None)
+    logical = sr.param_logical(cfg)
+    params_abs = sr.abstract_params(cfg)
+    opt_abs = optim.abstract_state(params_abs)
+    param_sh, opt_sh = train_loop.state_shardings(
+        logical, rules, mesh, zero1=True, params_abs=params_abs
+    )
+
+    if cell.kind == "train":
+        batch = cell.params["batch"]
+        if cfg.kind == "sasrec":
+            batch_abs = {
+                "seq": SDS((batch, cfg.seq_len), jnp.int32),
+                "targets": SDS((batch, cfg.seq_len), jnp.int32),
+                "negatives": SDS(
+                    (batch, cfg.seq_len, cfg.n_negatives), jnp.int32
+                ),
+            }
+            batch_sh = {
+                "seq": _ns(mesh, bax, None),
+                "targets": _ns(mesh, bax, None),
+                "negatives": _ns(mesh, bax, None, None),
+            }
+
+            def loss_fn(p, b):
+                return sr.sasrec_loss(
+                    p, b["seq"], b["targets"], b["negatives"], cfg
+                )
+        else:
+            batch_abs = {
+                "seq": SDS((batch, cfg.seq_len), jnp.int32),
+                "candidate": SDS((batch,), jnp.int32),
+                "labels": SDS((batch,), jnp.float32),
+            }
+            batch_sh = {
+                "seq": _ns(mesh, bax, None),
+                "candidate": _ns(mesh, bax),
+                "labels": _ns(mesh, bax),
+            }
+
+            def loss_fn(p, b):
+                return sr.bst_loss(
+                    p, b["seq"], b["candidate"], b["labels"], cfg
+                )
+
+        step = train_loop.make_train_step(
+            loss_fn, train_loop.TrainStepConfig(n_micro=1)
+        )
+        return Cell(
+            fn=step,
+            args=((params_abs, opt_abs), batch_abs),
+            in_shardings=((param_sh, opt_sh), batch_sh),
+            out_shardings=((param_sh, opt_sh), None),
+            donate=(0,),
+        )
+
+    if cell.kind == "serve":
+        batch = cell.params["batch"]
+        if cfg.kind == "sasrec":
+            def serve(p, seq):
+                return sr.sasrec_user_state(p, seq, cfg)
+
+            args = (params_abs, SDS((batch, cfg.seq_len), jnp.int32))
+            return Cell(
+                fn=serve,
+                args=args,
+                in_shardings=(param_sh, _ns(mesh, bax, None)),
+                out_shardings=_ns(mesh, bax, None),
+            )
+        else:
+            def serve(p, seq, cand):
+                return sr.bst_forward(p, seq, cand, cfg)
+
+            args = (
+                params_abs,
+                SDS((batch, cfg.seq_len), jnp.int32),
+                SDS((batch,), jnp.int32),
+            )
+            return Cell(
+                fn=serve,
+                args=args,
+                in_shardings=(
+                    param_sh, _ns(mesh, bax, None), _ns(mesh, bax)
+                ),
+                out_shardings=_ns(mesh, bax),
+            )
+
+    if cell.kind == "retrieval":
+        n_cand = cell.params["n_candidates"]
+        call_ax = tuple(
+            a for a in ("pod", "data", "model") if a in mesh.axis_names
+        )
+        cax = call_ax if len(call_ax) > 1 else call_ax[0]
+        n_dev = 1
+        for a in call_ax:
+            n_dev *= mesh.shape[a]
+        n_cand = -(-n_cand // n_dev) * n_dev  # pad to shard evenly
+
+        if cfg.kind == "sasrec":
+            def retrieval(p, seq, candidates):
+                state = sr.sasrec_user_state(p, seq, cfg)
+                return sr.score_candidates(p, state, candidates, cfg, top_k=100)
+
+            args = (
+                params_abs,
+                SDS((1, cfg.seq_len), jnp.int32),
+                SDS((n_cand,), jnp.int32),
+            )
+            return Cell(
+                fn=retrieval,
+                args=args,
+                in_shardings=(param_sh, _ns(mesh), _ns(mesh, cax)),
+                out_shardings=(_ns(mesh), _ns(mesh)),
+            )
+        else:
+            # BST retrieval: score 1M candidates through the CTR head
+            def retrieval(p, seq, candidates):
+                n = candidates.shape[0]
+                seq_b = jnp.broadcast_to(seq, (n, cfg.seq_len))
+                scores = sr.bst_forward(p, seq_b, candidates, cfg)
+                vals, idx = jax.lax.top_k(scores, 100)
+                return vals, jnp.take(candidates, idx)
+
+            args = (
+                params_abs,
+                SDS((cfg.seq_len,), jnp.int32),
+                SDS((n_cand,), jnp.int32),
+            )
+            return Cell(
+                fn=retrieval,
+                args=args,
+                in_shardings=(param_sh, _ns(mesh), _ns(mesh, cax)),
+                out_shardings=(_ns(mesh), _ns(mesh)),
+            )
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# Pixie cells (the paper's own architecture)
+# ---------------------------------------------------------------------------
+
+
+def build_pixie_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    cfg = spec.config
+    p = cell.params
+    n_slots = cfg.n_slots
+
+    if cell.kind == "pixie_sharded":
+        n_shards = mesh.shape["model"]
+        graph_abs = pixie_dist.abstract_sharded_graph(
+            p["n_pins"], p["n_boards"], p["n_edges"], n_shards
+        )
+        gspec = pixie_dist.sharded_graph_specs("model")
+        graph_sh = pixie_dist.ShardedGraph(
+            p2b_offsets=NamedSharding(mesh, gspec.p2b_offsets),
+            p2b_targets=NamedSharding(mesh, gspec.p2b_targets),
+            b2p_offsets=NamedSharding(mesh, gspec.b2p_offsets),
+            b2p_targets=NamedSharding(mesh, gspec.b2p_targets),
+            n_pins=0, n_boards=0, n_shards=0,
+        )
+
+        def serve(g_off, g_tgt, b_off, b_tgt, qp, qw, key):
+            graph = pixie_dist.ShardedGraph(
+                g_off, g_tgt, b_off, b_tgt,
+                graph_abs.n_pins, graph_abs.n_boards, n_shards,
+            )
+            res = pixie_dist.pixie_walk_sharded(
+                graph, qp, qw, key, cfg.sharded_walk, mesh
+            )
+            return res.top_scores, res.top_pins, res.dropped
+
+        args = (
+            graph_abs.p2b_offsets, graph_abs.p2b_targets,
+            graph_abs.b2p_offsets, graph_abs.b2p_targets,
+            SDS((n_slots,), jnp.int32),
+            SDS((n_slots,), jnp.float32),
+            SDS((), jnp.uint32),
+        )
+        key_abs = jax.eval_shape(lambda: jax.random.key(0))
+        args = args[:-1] + (key_abs,)
+        return Cell(
+            fn=serve,
+            args=args,
+            in_shardings=(
+                graph_sh.p2b_offsets, graph_sh.p2b_targets,
+                graph_sh.b2p_offsets, graph_sh.b2p_targets,
+                _ns(mesh), _ns(mesh), _ns(mesh),
+            ),
+            out_shardings=(_ns(mesh), _ns(mesh), _ns(mesh)),
+        )
+
+    if cell.kind == "pixie_replicated":
+        # graph replicated on every chip; the query batch is sharded over
+        # the whole mesh (each chip is one serving replica — the fleet)
+        from repro.core.graph import graph_abstract
+
+        n_slots = cell.params.get("n_slots", n_slots)
+
+        graph_abs = graph_abstract(
+            p["n_pins"], p["n_boards"], p["n_edges"],
+            offset_dtype=jnp.int32,
+        )
+        wcfg = dataclasses.replace(cfg.walk, count_boards=False)
+        all_ax = tuple(
+            a for a in ("pod", "data", "model") if a in mesh.axis_names
+        )
+        n_dev = 1
+        for a in all_ax:
+            n_dev *= mesh.shape[a]
+        qbatch = n_dev  # one query per replica
+        aax = all_ax if len(all_ax) > 1 else all_ax[0]
+
+        def serve(p2b_off, p2b_tgt, b2p_off, b2p_tgt, qp, qw, feats, key):
+            from repro.core.graph import CSR, PinBoardGraph
+
+            graph = PinBoardGraph(
+                p2b=CSR(p2b_off, p2b_tgt),
+                b2p=CSR(b2p_off, b2p_tgt),
+                n_pins=p["n_pins"], n_boards=p["n_boards"],
+                max_pin_degree=4096,
+            )
+            keys = jax.random.split(key, qp.shape[0])
+
+            def one(qp_i, qw_i, f_i, k_i):
+                res = walk_lib.pixie_walk_events(
+                    graph, qp_i, qw_i, f_i, k_i, wcfg
+                )
+                return walk_lib.recommend_from_events(
+                    res, qp_i.shape[0], p["n_pins"], qp_i, wcfg.top_k
+                )
+
+            return jax.vmap(one)(qp, qw, feats, keys)
+
+        args = (
+            graph_abs.p2b.offsets, graph_abs.p2b.targets,
+            graph_abs.b2p.offsets, graph_abs.b2p.targets,
+            SDS((qbatch, n_slots), jnp.int32),
+            SDS((qbatch, n_slots), jnp.float32),
+            SDS((qbatch,), jnp.int32),
+            jax.eval_shape(lambda: jax.random.key(0)),
+        )
+        return Cell(
+            fn=serve,
+            args=args,
+            in_shardings=(
+                _ns(mesh), _ns(mesh), _ns(mesh), _ns(mesh),
+                _ns(mesh, aax, None), _ns(mesh, aax, None),
+                _ns(mesh, aax), _ns(mesh),
+            ),
+            out_shardings=(_ns(mesh, aax, None), _ns(mesh, aax, None)),
+        )
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh, **kw) -> Cell:
+    if spec.family == "lm":
+        return build_lm_cell(spec, cell, mesh, **kw)
+    if spec.family == "gnn":
+        return build_gnn_cell(spec, cell, mesh)
+    if spec.family == "recsys":
+        return build_recsys_cell(spec, cell, mesh)
+    if spec.family == "pixie":
+        return build_pixie_cell(spec, cell, mesh)
+    raise ValueError(spec.family)
+
+
+# ---------------------------------------------------------------------------
+# Cost-model variants (see launch/dryrun.py)
+#
+# XLA's cost analysis counts while-loop bodies ONCE, so a scanned program
+# under-reports FLOPs/bytes by ~the trip count.  The dry-run therefore also
+# lowers each cell in a loop-free "cost-model" configuration at depth k=1
+# and k=2 (layers unrolled, attention/loss chunk scans collapsed to a single
+# full-size chunk — identical FLOPs, no loops; n_micro=1 — microbatching
+# splits the same total work) and extrapolates
+#     q(L) = q(1) + (L - 1) * (q(2) - q(1)),
+# which is exact for homogeneous stacks.  Memory footprints always come from
+# the REAL compile; only FLOPs/bytes/collective totals use the cost model.
+# ---------------------------------------------------------------------------
+
+_BIG = 1 << 30
+
+
+def cost_depth(spec: ArchSpec, cell: ShapeCell) -> Optional[int]:
+    """The trip count q() is linear in; None = the real program is loop-free."""
+    if spec.family == "lm":
+        return spec.config.n_layers - (1 if spec.config.first_dense_ff else 0)
+    if spec.family == "gnn":
+        return spec.config.n_layers
+    if spec.family == "recsys":
+        cfg = spec.config
+        return getattr(cfg, "n_blocks", None)  # DLRM has no loops -> None
+    if spec.family == "pixie":
+        if cell.kind == "pixie_sharded":
+            return spec.config.sharded_walk.n_supersteps
+        return spec.config.walk.max_chunks()
+    raise ValueError(spec.family)
+
+
+def build_cost_cell(
+    spec: ArchSpec, cell: ShapeCell, mesh: Mesh, k: int
+) -> Cell:
+    """The cell at depth k, loop-free (for cost_analysis extrapolation)."""
+    if spec.family == "lm":
+        cfg = spec.config
+        cm = dataclasses.replace(
+            cfg,
+            n_layers=k + (1 if cfg.first_dense_ff else 0),
+            unroll_layers=True,
+            kv_chunk=_BIG,
+            loss_chunk=_BIG,
+        )
+        return build_lm_cell(
+            dataclasses.replace(spec, config=cm), cell, mesh, n_micro=1
+        )
+    if spec.family == "gnn":
+        cm = dataclasses.replace(spec.config, n_layers=k, unroll_layers=True)
+        return build_gnn_cell(dataclasses.replace(spec, config=cm), cell, mesh)
+    if spec.family == "recsys":
+        cm = dataclasses.replace(spec.config, n_blocks=k, unroll_layers=True)
+        return build_recsys_cell(
+            dataclasses.replace(spec, config=cm), cell, mesh
+        )
+    if spec.family == "pixie":
+        if cell.kind == "pixie_sharded":
+            sw = dataclasses.replace(
+                spec.config.sharded_walk, n_supersteps=k, unroll=True
+            )
+            cm = dataclasses.replace(spec.config, sharded_walk=sw)
+            return build_pixie_cell(
+                dataclasses.replace(spec, config=cm), cell, mesh
+            )
+        return _build_pixie_replicated_cost(spec, cell, mesh, k)
+    raise ValueError(spec.family)
+
+
+def _build_pixie_replicated_cost(
+    spec: ArchSpec, cell: ShapeCell, mesh: Mesh, k: int
+) -> Cell:
+    """Fixed-chunk (loop-free) twin of the replicated pixie serve cell."""
+    from repro.core.graph import CSR, PinBoardGraph, graph_abstract
+
+    cfg = spec.config
+    p = cell.params
+    n_slots = p.get("n_slots", cfg.n_slots)
+    graph_abs = graph_abstract(
+        p["n_pins"], p["n_boards"], p["n_edges"], offset_dtype=jnp.int32
+    )
+    wcfg = cfg.walk
+    all_ax = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    n_dev = 1
+    for a in all_ax:
+        n_dev *= mesh.shape[a]
+    qbatch = n_dev
+    aax = all_ax if len(all_ax) > 1 else all_ax[0]
+
+    def serve(p2b_off, p2b_tgt, b2p_off, b2p_tgt, qp, qw, feats, key):
+        graph = PinBoardGraph(
+            p2b=CSR(p2b_off, p2b_tgt), b2p=CSR(b2p_off, b2p_tgt),
+            n_pins=p["n_pins"], n_boards=p["n_boards"], max_pin_degree=4096,
+        )
+        keys = jax.random.split(key, qp.shape[0])
+
+        def one(qp_i, qw_i, f_i, k_i):
+            res = walk_lib.pixie_walk_events_fixed(
+                graph, qp_i, qw_i, f_i, k_i, wcfg, n_chunks=k
+            )
+            return walk_lib.recommend_from_events(
+                res, qp_i.shape[0], p["n_pins"], qp_i, wcfg.top_k
+            )
+
+        return jax.vmap(one)(qp, qw, feats, keys)
+
+    args = (
+        graph_abs.p2b.offsets, graph_abs.p2b.targets,
+        graph_abs.b2p.offsets, graph_abs.b2p.targets,
+        SDS((qbatch, n_slots), jnp.int32),
+        SDS((qbatch, n_slots), jnp.float32),
+        SDS((qbatch,), jnp.int32),
+        jax.eval_shape(lambda: jax.random.key(0)),
+    )
+    return Cell(
+        fn=serve,
+        args=args,
+        in_shardings=(
+            _ns(mesh), _ns(mesh), _ns(mesh), _ns(mesh),
+            _ns(mesh, aax, None), _ns(mesh, aax, None),
+            _ns(mesh, aax), _ns(mesh),
+        ),
+        out_shardings=(_ns(mesh, aax, None), _ns(mesh, aax, None)),
+    )

@@ -1,0 +1,196 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU peak]
+  memory term     = HLO_bytes / (chips * 819e9)           [HBM bandwidth]
+  collective term = sum(collective bytes * op factor) / (chips * 50e9)
+
+FLOPs/bytes come from compiled.cost_analysis().  Collective bytes are NOT
+in cost_analysis: we parse the optimized (post-SPMD) HLO text and sum the
+output-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute, with standard per-op wire factors
+(ring all-reduce moves ~2x the payload; ag/rs/a2a move ~1x; permute 1x).
+Sizes in the partitioned HLO are already per-device shard sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_DEF_RE = re.compile(r"%([\w.\-]+) = (\(?\w+\[[\d,]*\])")
+_GATHER_RE = re.compile(
+    r"= (\w+\[[\d,]*\])[^\n]*? (gather|dynamic-slice)\(%([\w.\-]+)"
+)
+_SCATTER_RE = re.compile(
+    r"= (\(?[\w\[\],]*\])[^\n]*? scatter\(%([\w.\-]+)"
+)
+
+
+def gather_scatter_overcount(hlo_text: str) -> float:
+    """XLA's 'bytes accessed' counts the FULL operand of gather/scatter ops
+    (verified empirically: a 128-row take from a 256 MB table reports
+    2.56e8 bytes).  For index-driven workloads (Pixie CSR walks, embedding
+    lookups, MoE dispatch) that inflates the memory term by orders of
+    magnitude.  This estimates the overcount as sum(operand - 2*output)
+    over gather-like ops so callers can report an adjusted memory term.
+    Fusion-internal double counting makes this an estimate; it is clamped
+    by the caller."""
+    shapes: Dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        shapes[m.group(1)] = _shape_bytes(m.group(2))
+    over = 0.0
+    for m in _GATHER_RE.finditer(hlo_text):
+        out_b = _shape_bytes(m.group(1))
+        op_b = shapes.get(m.group(3), 0)
+        over += max(op_b - 2 * out_b, 0)
+    for m in _SCATTER_RE.finditer(hlo_text):
+        # scatter's real traffic is a read-modify-write of the *touched*
+        # rows plus the updates; cost analysis charges the whole buffer
+        # twice (operand + output).  Subtract one full buffer copy.
+        over += shapes.get(m.group(2), 0)
+    return over
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Weighted per-device collective bytes by op kind (plus 'total')."""
+    seen_done = set()
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_FACTOR}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        out[kind] += _shape_bytes(shape_str) * _COLLECTIVE_FACTOR[kind]
+    out["total"] = sum(out[k] for k in _COLLECTIVE_FACTOR)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All quantities are PER-DEVICE: compiled.cost_analysis() describes the
+    per-device SPMD program (calibrated: a 4-way-sharded matmul reports 1/4
+    of the global FLOPs), and shapes in the partitioned HLO text are shard
+    shapes.  So each term divides by a single chip's peak."""
+
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes_per_dev: float    # weighted per-device collective bytes
+    n_chips: int
+    bytes_per_device: Optional[float] = None   # from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """No-overlap lower bound = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "n_chips": self.n_chips,
+            "bytes_per_device": self.bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def analyze_compiled(compiled, n_chips: int) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    over = gather_scatter_overcount(text)
+    # keep at least 5% of the raw figure (the adjustment is an estimate;
+    # fusion-internal gathers can double-subtract)
+    hbm = max(hbm - over, 0.05 * hbm)
+    coll = collective_bytes(text)["total"]
+    bpd = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            # works on TPU; CPU backend may not populate it
+            bpd = float(
+                getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                + getattr(ma, "temp_size_in_bytes", 0)
+            )
+    except Exception:
+        pass
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes_per_dev=coll,
+        n_chips=n_chips,
+        bytes_per_device=bpd,
+    )

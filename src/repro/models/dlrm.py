@@ -1,0 +1,169 @@
+"""DLRM (arXiv:1906.00091): mega-table embeddings + dot interaction + MLPs.
+
+Covers the dlrm-mlperf and dlrm-rm2 assigned configs.  The sparse lookup is
+the hot path (see models/embedding.py); the dot interaction is the lower
+triangle of Z Z^T over the stacked [bottom-MLP output; 26 embeddings]
+matrix, exactly as in the paper.
+
+`retrieval_score` implements the retrieval_cand cell: one user scored
+against n_candidates items by varying a single sparse slot — a batched
+forward over the candidate axis (sharded over the whole mesh), not a loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import embedding, layers
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    n_dense: int
+    embed_dim: int
+    bot_mlp: Tuple[int, ...]      # includes input dim, e.g. (13, 512, 256, 128)
+    top_mlp: Tuple[int, ...]      # hidden dims + 1 output, e.g. (1024, 1024, 512, 256, 1)
+    feature_rows: Tuple[int, ...]  # rows per sparse feature
+    compute_dtype: Any = jnp.float32
+    table_dtype: Any = jnp.float32   # bf16 halves lookup/grad wire at scale
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.feature_rows)
+
+    @property
+    def table(self) -> embedding.MegaTableConfig:
+        return embedding.MegaTableConfig(self.feature_rows, self.embed_dim)
+
+    @property
+    def n_interactions(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.bot_mlp[-1] + self.n_interactions
+
+    def param_count(self) -> int:
+        n = self.table.total_rows * self.embed_dim
+        dims_b = self.bot_mlp
+        for i in range(len(dims_b) - 1):
+            n += dims_b[i] * dims_b[i + 1] + dims_b[i + 1]
+        dims_t = (self.top_in,) + self.top_mlp
+        for i in range(len(dims_t) - 1):
+            n += dims_t[i] * dims_t[i + 1] + dims_t[i + 1]
+        return n
+
+
+def _init_mlp(key: Array, dims: Sequence[int]) -> Dict[str, Array]:
+    p = {}
+    ks = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        p[f"w{i}"] = layers.dense_init(ks[i], (dims[i], dims[i + 1]))
+        p[f"b{i}"] = jnp.zeros((dims[i + 1],), jnp.float32)
+    return p
+
+
+def _mlp_logical(dims: Sequence[int]) -> Dict[str, Tuple]:
+    p = {}
+    for i in range(len(dims) - 1):
+        p[f"w{i}"] = ("mlp_in", "mlp_out")
+        p[f"b{i}"] = ("mlp_out",)
+    return p
+
+
+def _mlp_fwd(p: Dict[str, Array], x: Array, n: int, final_act: bool) -> Array:
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(key: Array, cfg: DLRMConfig) -> Dict[str, Any]:
+    kt, kb, ktp = jax.random.split(key, 3)
+    return {
+        "table": embedding.init_table(kt, cfg.table, dtype=cfg.table_dtype),
+        "bot": _init_mlp(kb, cfg.bot_mlp),
+        "top": _init_mlp(ktp, (cfg.top_in,) + cfg.top_mlp),
+    }
+
+
+def param_logical(cfg: DLRMConfig) -> Dict[str, Any]:
+    return {
+        "table": embedding.table_logical(),
+        "bot": _mlp_logical(cfg.bot_mlp),
+        "top": _mlp_logical((cfg.top_in,) + cfg.top_mlp),
+    }
+
+
+def abstract_params(cfg: DLRMConfig) -> Dict[str, Any]:
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def _interact(bot_out: Array, sparse: Array) -> Array:
+    """Dot interaction: lower triangle of Z Z^T, Z = [bot; embeddings]."""
+    z = jnp.concatenate([bot_out[:, None, :], sparse], axis=1)  # (b, f+1, d)
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)                       # (b, f+1, f+1)
+    f = z.shape[1]
+    ii, jj = jnp.tril_indices(f, k=-1)
+    return zz[:, ii, jj]                                        # (b, f(f-1)/2)
+
+
+def forward(
+    params: Dict[str, Any],
+    dense: Array,     # (b, n_dense) f32
+    sparse_ids: Array,  # (b, n_sparse) int32 per-feature local ids
+    cfg: DLRMConfig,
+) -> Array:
+    """Returns CTR logits (b,) f32."""
+    cd = cfg.compute_dtype
+    bot_out = _mlp_fwd(
+        params["bot"], dense.astype(cd), len(cfg.bot_mlp) - 1, final_act=True
+    )
+    sparse = embedding.lookup(params["table"], sparse_ids, cfg.table)
+    inter = _interact(bot_out, sparse.astype(cd))
+    top_in = jnp.concatenate([bot_out, inter], axis=-1)
+    logits = _mlp_fwd(
+        params["top"], top_in, len(cfg.top_mlp), final_act=False
+    )
+    return logits[:, 0].astype(jnp.float32)
+
+
+def bce_loss(
+    params: Dict[str, Any],
+    dense: Array,
+    sparse_ids: Array,
+    labels: Array,    # (b,) float 0/1
+    cfg: DLRMConfig,
+) -> Array:
+    logits = forward(params, dense, sparse_ids, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def retrieval_score(
+    params: Dict[str, Any],
+    dense: Array,          # (n_dense,) one user's dense features
+    sparse_ids: Array,     # (n_sparse,) one user's sparse ids
+    candidates: Array,     # (n_cand,) candidate ids for sparse slot 0
+    cfg: DLRMConfig,
+    top_k: int = 100,
+) -> Tuple[Array, Array]:
+    """Score one user against n_cand items (slot 0 varies). -> (scores, ids)."""
+    n = candidates.shape[0]
+    dense_b = jnp.broadcast_to(dense[None, :], (n, cfg.n_dense))
+    ids_b = jnp.broadcast_to(sparse_ids[None, :], (n, cfg.n_sparse))
+    ids_b = ids_b.at[:, 0].set(candidates)
+    scores = forward(params, dense_b, ids_b, cfg)
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, jnp.take(candidates, idx)

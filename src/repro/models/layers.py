@@ -1,0 +1,221 @@
+"""Shared neural building blocks: RMSNorm, RoPE, flash attention, SwiGLU, CE.
+
+Everything is a pure function over explicit parameter pytrees (no framework
+dependency).  Attention is the memory-efficient chunked (flash) form — a
+`lax.scan` over KV blocks with an online-softmax carry — so no (seq, seq)
+score tensor ever materializes; this is what keeps the 32k-prefill cells
+inside HBM and is also the right roofline shape (compute-bound MXU matmuls
+over VMEM-resident tiles once XLA fuses the scan body).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms and activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate) * up
+
+
+def layernorm(x: Array, weight: Array, bias: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, freqs: Array) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., s, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash) attention — scan over KV blocks, online softmax
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: Array,           # (b, sq, h, dh)
+    k: Array,           # (b, skv, kh, dh)
+    v: Array,           # (b, skv, kh, dh)
+    causal: bool = True,
+    q_offset: int = 0,  # absolute position of q[0] (for decode/prefill splits)
+    kv_chunk: int = 512,
+    scale: Optional[float] = None,
+) -> Array:
+    """Memory-efficient GQA attention -> (b, sq, h, dh), dtype of q.
+
+    No (sq, skv) tensor is ever materialized; the scan carries
+    (m, l, acc) running-softmax state per query position.
+    """
+    b, sq, h, dh = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    if scale is None:
+        scale = dh ** -0.5
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = (q.reshape(b, sq, kh, group, dh) * scale).astype(jnp.float32)
+    kc = k.reshape(b, n_chunks, kv_chunk, kh, dh)
+    vc = v.reshape(b, n_chunks, kv_chunk, kh, dh)
+    kc = jnp.moveaxis(kc, 1, 0)  # (n_chunks, b, kv_chunk, kh, dh)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, c_idx = xs
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum(
+            "bqkgd,bjkd->bqkgj", qg, kb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )  # (b, sq, kh, group, kv_chunk)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else (
+            jnp.ones((sq, kv_chunk), bool)
+        )
+        mask = mask & (kv_pos < skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bqkgj,bjkd->bqkgd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kh, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, group), jnp.float32)
+    a0 = jnp.zeros((b, sq, kh, group, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_logits(logits: Array, labels: Array, mask: Array) -> Array:
+    """Token-mean CE.  logits (..., v) f32; labels/mask (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_softmax_xent(
+    hidden: Array,       # (b, s, d) final hidden states
+    lm_head: Array,      # (d, v)
+    labels: Array,       # (b, s) int32
+    mask: Array,         # (b, s)
+    chunk: int = 1024,
+    n_valid_vocab: Optional[int] = None,  # mask padded vocab columns
+) -> Array:
+    """CE without materializing (b, s, v) logits: scan over seq chunks.
+
+    The (b, chunk, v) logits chunk is produced, reduced to (lse, ll), and
+    dropped before the next chunk — the standard fix for vocab-dominated
+    activation memory at 150k vocabularies.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = jnp.moveaxis(hidden.reshape(b, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, n, chunk), 1, 0)
+
+    v = lm_head.shape[-1]
+    vocab_ok = None
+    if n_valid_vocab is not None and n_valid_vocab < v:
+        vocab_ok = jnp.arange(v) < n_valid_vocab
+
+    def body(carry, xs):
+        total, count = carry
+        hb, lb, mb = xs
+        logits = (hb @ lm_head).astype(jnp.float32)       # (b, chunk, v)
+        if vocab_ok is not None:
+            logits = jnp.where(vocab_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot pick instead of take_along_axis: elementwise + reduce
+        # partitions cleanly when the vocab axis is TP-sharded (a gather
+        # along a sharded axis forces GSPMD into full rematerialization)
+        onehot = jax.nn.one_hot(lb, v, dtype=logits.dtype)
+        ll = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - ll) * mb
+        return (total + jnp.sum(nll), count + jnp.sum(mb)), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.asarray(0.0, jnp.float32), jnp.asarray(0.0, jnp.float32)),
+        (hc, lc, mc),
+    )
+    return total / jnp.maximum(count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape: Tuple[int, ...], scale: str = "fan_in") -> Array:
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = (1.0 / fan_in) ** 0.5
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+def embed_init(key: Array, shape: Tuple[int, ...], std: float = 0.02) -> Array:
+    return jax.random.normal(key, shape, jnp.float32) * std

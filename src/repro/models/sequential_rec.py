@@ -1,0 +1,261 @@
+"""Sequential recommenders: SASRec (arXiv:1808.09781) and BST (1905.06874).
+
+SASRec — causal self-attention over the user's item sequence; next-item
+training with sampled softmax (full-vocab softmax at 10^6+ items is neither
+the paper's loss nor shippable).  Serving scores the last-position user
+state against candidate item embeddings (two-tower style dot product).
+
+BST — Behavior Sequence Transformer: bidirectional attention over
+[behavior sequence; candidate item], then an MLP head on the flattened
+transformer output produces the CTR logit.
+
+Both share the item mega-table (models/embedding.py) so the retrieval cell
+(1 user x 10^6 candidates) is the same sharded gather + batched dot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import embedding, layers
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqRecConfig:
+    name: str
+    kind: str                 # 'sasrec' | 'bst'
+    n_items: int
+    embed_dim: int
+    seq_len: int
+    n_blocks: int
+    n_heads: int
+    mlp_dims: Tuple[int, ...] = ()   # BST head MLP (hidden dims, out=1 appended)
+    d_ff: Optional[int] = None       # pointwise FFN width (default 4*dim... paper uses dim)
+    n_negatives: int = 127           # sampled-softmax negatives (training)
+    dropout: float = 0.0             # kept for config fidelity; eval path only
+    compute_dtype: Any = jnp.float32
+    unroll_layers: bool = False      # cost-model mode (see launch/dryrun.py)
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff if self.d_ff is not None else self.embed_dim
+
+    @property
+    def table(self) -> embedding.MegaTableConfig:
+        return embedding.MegaTableConfig((self.n_items,), self.embed_dim)
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        blk = 4 * d * d + 2 * d * self.ff + 4 * d  # qkvo + ffn + norms
+        n = self.n_items * d + self.seq_len * d + self.n_blocks * blk
+        if self.kind == "bst":
+            dims = ((self.seq_len + 1) * d,) + self.mlp_dims + (1,)
+            for i in range(len(dims) - 1):
+                n += dims[i] * dims[i + 1] + dims[i + 1]
+        return n
+
+
+def _init_block(key: Array, cfg: SeqRecConfig) -> Dict[str, Array]:
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1_w": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wq": layers.dense_init(ks[0], (d, d)),
+        "wk": layers.dense_init(ks[1], (d, d)),
+        "wv": layers.dense_init(ks[2], (d, d)),
+        "wo": layers.dense_init(ks[3], (d, d)),
+        "ln2_w": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": layers.dense_init(ks[4], (d, cfg.ff)),
+        "b1": jnp.zeros((cfg.ff,), jnp.float32),
+        "w2": layers.dense_init(ks[5], (cfg.ff, d)),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_params(key: Array, cfg: SeqRecConfig) -> Dict[str, Any]:
+    kt, kp, kb, kh = jax.random.split(key, 4)
+    total_len = cfg.seq_len + (1 if cfg.kind == "bst" else 0)
+    p: Dict[str, Any] = {
+        "items": embedding.init_table(kt, cfg.table),
+        "pos": layers.embed_init(kp, (total_len, cfg.embed_dim)),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(
+            jax.random.split(kb, cfg.n_blocks)
+        ),
+        "final_ln_w": jnp.ones((cfg.embed_dim,), jnp.float32),
+        "final_ln_b": jnp.zeros((cfg.embed_dim,), jnp.float32),
+    }
+    if cfg.kind == "bst":
+        dims = ((cfg.seq_len + 1) * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+        head = {}
+        ks = jax.random.split(kh, len(dims) - 1)
+        for i in range(len(dims) - 1):
+            head[f"w{i}"] = layers.dense_init(ks[i], (dims[i], dims[i + 1]))
+            head[f"b{i}"] = jnp.zeros((dims[i + 1],), jnp.float32)
+        p["head"] = head
+    return p
+
+
+def param_logical(cfg: SeqRecConfig) -> Dict[str, Any]:
+    blk = {
+        "ln1_w": ("layers", None), "ln1_b": ("layers", None),
+        "wq": ("layers", "dim", "dim"), "wk": ("layers", "dim", "dim"),
+        "wv": ("layers", "dim", "dim"), "wo": ("layers", "dim", "dim"),
+        "ln2_w": ("layers", None), "ln2_b": ("layers", None),
+        "w1": ("layers", "dim", "mlp_out"), "b1": ("layers", "mlp_out"),
+        "w2": ("layers", "mlp_out", "dim"), "b2": ("layers", "dim"),
+    }
+    p: Dict[str, Any] = {
+        "items": embedding.table_logical(),
+        "pos": ("seq", "dim"),
+        "blocks": blk,
+        "final_ln_w": (None,),
+        "final_ln_b": (None,),
+    }
+    if cfg.kind == "bst":
+        dims = ((cfg.seq_len + 1) * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+        head = {}
+        for i in range(len(dims) - 1):
+            head[f"w{i}"] = ("mlp_in", "mlp_out")
+            head[f"b{i}"] = ("mlp_out",)
+        p["head"] = head
+    return p
+
+
+def abstract_params(cfg: SeqRecConfig) -> Dict[str, Any]:
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Transformer encoder over item sequences
+# ---------------------------------------------------------------------------
+
+
+def _encode(
+    params: Dict[str, Any],
+    seq_ids: Array,            # (b, s) int32, -1 padding
+    cfg: SeqRecConfig,
+    causal: bool,
+    extra: Optional[Array] = None,   # (b, 1, d) appended position (BST target)
+) -> Array:
+    cd = cfg.compute_dtype
+    b, s = seq_ids.shape
+    valid = seq_ids >= 0
+    safe = jnp.where(valid, seq_ids, 0)
+    x = jnp.take(params["items"], safe, axis=0).astype(cd)
+    x = x * valid[..., None].astype(cd)
+    if extra is not None:
+        x = jnp.concatenate([x, extra.astype(cd)], axis=1)
+        s = s + 1
+    x = x + params["pos"][:s].astype(cd)[None]
+
+    def block(x, p):
+        h = layers.layernorm(x, p["ln1_w"], p["ln1_b"])
+        q = (h @ p["wq"]).reshape(b, s, cfg.n_heads, -1)
+        k = (h @ p["wk"]).reshape(b, s, cfg.n_heads, -1)
+        v = (h @ p["wv"]).reshape(b, s, cfg.n_heads, -1)
+        attn = layers.flash_attention(
+            q, k, v, causal=causal, kv_chunk=min(512, s)
+        )
+        x = x + attn.reshape(b, s, cfg.embed_dim) @ p["wo"]
+        h2 = layers.layernorm(x, p["ln2_w"], p["ln2_b"])
+        ff = jax.nn.relu(h2 @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+        return x + ff, None
+
+    x, _ = jax.lax.scan(
+        block, x, params["blocks"], unroll=cfg.unroll_layers or 1
+    )
+    return layers.layernorm(x, params["final_ln_w"], params["final_ln_b"])
+
+
+# ---------------------------------------------------------------------------
+# SASRec: next-item with sampled softmax
+# ---------------------------------------------------------------------------
+
+
+def sasrec_loss(
+    params: Dict[str, Any],
+    seq_ids: Array,        # (b, s) history, -1 padding
+    targets: Array,        # (b, s) next item at each position, -1 = no loss
+    negatives: Array,      # (b, s, n_neg) sampled negative item ids
+    cfg: SeqRecConfig,
+) -> Array:
+    h = _encode(params, seq_ids, cfg, causal=True)         # (b, s, d)
+    valid = (targets >= 0).astype(jnp.float32)
+    pos_emb = jnp.take(params["items"], jnp.maximum(targets, 0), axis=0)
+    neg_emb = jnp.take(params["items"], negatives, axis=0)  # (b, s, n, d)
+    pos_logit = jnp.sum(h * pos_emb, axis=-1, keepdims=True)
+    neg_logit = jnp.einsum("bsd,bsnd->bsn", h, neg_emb)
+    logits = jnp.concatenate([pos_logit, neg_logit], axis=-1)
+    # sampled softmax: positive is class 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    nll = (lse - logits[..., 0]) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def sasrec_user_state(
+    params: Dict[str, Any], seq_ids: Array, cfg: SeqRecConfig
+) -> Array:
+    """Last-position hidden state per user -> (b, d)."""
+    h = _encode(params, seq_ids, cfg, causal=True)
+    return h[:, -1]
+
+
+def score_candidates(
+    params: Dict[str, Any],
+    user_state: Array,     # (b, d)
+    candidates: Array,     # (n_cand,) item ids
+    cfg: SeqRecConfig,
+    top_k: int = 100,
+) -> Tuple[Array, Array]:
+    """Batched dot-product retrieval -> (scores (b, k), ids (b, k))."""
+    cand_emb = jnp.take(params["items"], candidates, axis=0)  # (n, d)
+    scores = user_state @ cand_emb.T                          # (b, n)
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, jnp.take(candidates, idx)
+
+
+# ---------------------------------------------------------------------------
+# BST: CTR prediction for (behavior sequence, candidate item)
+# ---------------------------------------------------------------------------
+
+
+def bst_forward(
+    params: Dict[str, Any],
+    seq_ids: Array,        # (b, s)
+    candidate: Array,      # (b,) target item
+    cfg: SeqRecConfig,
+) -> Array:
+    """CTR logits (b,)."""
+    cand_emb = jnp.take(params["items"], candidate, axis=0)[:, None, :]
+    h = _encode(params, seq_ids, cfg, causal=False, extra=cand_emb)
+    b = h.shape[0]
+    flat = h.reshape(b, -1)
+    x = flat
+    n = len(cfg.mlp_dims) + 1
+    for i in range(n):
+        x = x @ params["head"][f"w{i}"] + params["head"][f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.leaky_relu(x)
+    return x[:, 0].astype(jnp.float32)
+
+
+def bst_loss(
+    params: Dict[str, Any],
+    seq_ids: Array,
+    candidate: Array,
+    labels: Array,         # (b,) 0/1
+    cfg: SeqRecConfig,
+) -> Array:
+    logits = bst_forward(params, seq_ids, candidate, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,599 @@
+"""Decoder-only LM: GQA + RoPE + RMSNorm + SwiGLU, dense or MoE FFN.
+
+Covers all five assigned LM architectures (qwen2.5-3b, minitron-4b,
+smollm-360m, granite-moe-3b-a800m, deepseek-moe-16b) from one config.
+
+Structure notes:
+  * **scan over layers** with stacked (L, ...) params — keeps the HLO size
+    O(1) in depth (compile-time critical on this host) and gives the remat
+    policy a single boundary per layer;
+  * **GQA as KV broadcast**: K/V are expanded to the full head count before
+    attention so the head axis shards cleanly under Megatron TP (the
+    (kh, group) reshape of packed GQA does not partition; the expanded form
+    does, and the expansion is local on each shard);
+  * **chunked-softmax CE**: the (b, s, 151k-vocab) logits tensor never
+    materializes (layers.chunked_softmax_xent);
+  * **decode**: one-token serve step against a KV cache; the cache carries
+    the 'kv_seq' logical axis so long-context cells shard it along 'model'
+    (sequence parallelism — softmax stats are the only cross-shard traffic).
+
+Params are plain nested dicts of f32 arrays; `param_logical()` mirrors the
+tree with logical-axis tuples consumed by distribution/sharding.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.moe import (
+    MoEConfig, init_moe_params, moe_ffn, moe_ffn_sharded, moe_param_specs,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    first_dense_ff: Optional[int] = None  # DeepSeekMoE: layer 0 dense FFN
+    norm_eps: float = 1e-6
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    kv_chunk: int = 512
+    loss_chunk: int = 1024
+    # cost-model mode: unroll depth loops so compiled.cost_analysis() counts
+    # every layer (XLA counts while-loop bodies ONCE; see launch/dryrun.py)
+    unroll_layers: bool = False
+    # physical head padding: jit argument shardings must divide the mesh
+    # axis exactly, so archs whose head count doesn't divide 16 (smollm 15,
+    # minitron/granite 24) pad Q/O projections to this many heads.  Pad
+    # heads are masked out of the attention output (zero contribution,
+    # zero gradient); the waste is visible as MODEL_FLOPS/HLO_FLOPs < 1.
+    pad_heads_to: Optional[int] = None
+    # same for vocab (granite's 49155): pad logits are masked to -inf in
+    # the loss and decode paths, so the softmax is exact
+    pad_vocab_to: Optional[int] = None
+    cache_dtype: Any = jnp.bfloat16   # KV-cache storage dtype
+
+    @property
+    def n_heads_padded(self) -> int:
+        return self.pad_heads_to or self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return self.pad_vocab_to or self.vocab_size
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND model-FLOPs accounting)."""
+        d, l = self.d_model, self.n_layers
+        attn = d * self.qkv_dim + 2 * d * self.kv_dim + self.qkv_dim * d
+        if self.qkv_bias:
+            attn += self.qkv_dim + 2 * self.kv_dim
+        if self.moe is not None:
+            m = self.moe
+            ffn = d * m.n_experts + 3 * m.n_experts * d * m.d_ff_expert
+            if m.n_shared:
+                ffn += 3 * d * m.d_ff_expert * m.n_shared
+            n_moe = l - (1 if self.first_dense_ff else 0)
+            total = n_moe * (attn + ffn + 2 * d)
+            if self.first_dense_ff:
+                total += attn + 3 * d * self.first_dense_ff + 2 * d
+        else:
+            ffn = 3 * d * self.d_ff
+            total = l * (attn + ffn + 2 * d)
+        total += self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += d * self.vocab_size
+        total += d  # final norm
+        return total
+
+    def physical_param_count(self) -> int:
+        """param_count plus padding zeros (actual array elements)."""
+        extra_h = self.n_heads_padded - self.n_heads
+        per_layer = 2 * self.d_model * extra_h * self.head_dim  # wq + wo
+        if self.qkv_bias:
+            per_layer += extra_h * self.head_dim
+        total = self.param_count() + self.n_layers * per_layer
+        extra_v = self.vocab_padded - self.vocab_size
+        total += extra_v * self.d_model * (1 if self.tie_embeddings else 2)
+        if self.moe is not None:
+            extra_e = self.moe.n_experts_padded - self.moe.n_experts
+            per_moe_layer = extra_e * (
+                self.d_model + 3 * self.d_model * self.moe.d_ff_expert
+            )
+            n_moe = self.n_layers - (1 if self.first_dense_ff else 0)
+            total += n_moe * per_moe_layer
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        d, l, m = self.d_model, self.n_layers, self.moe
+        attn = d * self.qkv_dim + 2 * d * self.kv_dim + self.qkv_dim * d
+        ffn_act = d * m.n_experts + 3 * m.top_k * d * m.d_ff_expert
+        if m.n_shared:
+            ffn_act += 3 * d * m.d_ff_expert * m.n_shared
+        n_moe = l - (1 if self.first_dense_ff else 0)
+        total = n_moe * (attn + ffn_act + 2 * d)
+        if self.first_dense_ff:
+            total += attn + 3 * d * self.first_dense_ff + 2 * d
+        total += self.vocab_size * d
+        if not self.tie_embeddings:
+            total += d * self.vocab_size
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Parameter init + logical specs
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key: Array, cfg: LMConfig) -> Dict[str, Array]:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    # per-head 3-D projections: the head axis is a real array axis, so TP
+    # shards it directly (fused H*dh reshapes break GSPMD propagation when
+    # H doesn't divide the axis size; see DESIGN.md hardware-adaptation)
+    hp = cfg.n_heads_padded
+    p = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "wq": layers.dense_init(ks[0], (d, hp, cfg.head_dim)),
+        "wk": layers.dense_init(ks[1], (d, cfg.n_kv_heads, cfg.head_dim)),
+        "wv": layers.dense_init(ks[2], (d, cfg.n_kv_heads, cfg.head_dim)),
+        "wo": layers.dense_init(ks[3], (hp, cfg.head_dim, d)),
+        "ln2": jnp.ones((d,), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp, cfg.head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    if cfg.moe is not None:
+        p["moe"] = init_moe_params(ks[4], d, cfg.moe)
+    else:
+        p["w_gate"] = layers.dense_init(ks[5], (d, cfg.d_ff))
+        p["w_up"] = layers.dense_init(ks[6], (d, cfg.d_ff))
+        p["w_down"] = layers.dense_init(ks[7], (cfg.d_ff, d))
+    return p
+
+
+def _block_logical(cfg: LMConfig) -> Dict[str, Tuple]:
+    p = {
+        "ln1": ("layers", None),
+        "wq": ("layers", "embed", "heads", "head_dim"),
+        # KV projections are tiny (d x kh x dh); FSDP-sharding their
+        # contraction dim makes GSPMD all-reduce (b,s,kh,dh) activations
+        # instead of gathering a ~3 MB weight — keep them un-FSDP'd
+        "wk": ("layers", "embed_kv", "kv_heads", "head_dim"),
+        "wv": ("layers", "embed_kv", "kv_heads", "head_dim"),
+        "wo": ("layers", "heads", "head_dim", "embed"),
+        "ln2": ("layers", None),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("layers", "heads", "head_dim")
+        p["bk"] = ("layers", "kv_heads", "head_dim")
+        p["bv"] = ("layers", "kv_heads", "head_dim")
+    if cfg.moe is not None:
+        p["moe"] = {
+            k: ("layers",) + v for k, v in moe_param_specs(cfg.moe).items()
+        }
+    else:
+        p["w_gate"] = ("layers", "embed", "mlp")
+        p["w_up"] = ("layers", "embed", "mlp")
+        p["w_down"] = ("layers", "mlp", "embed")
+    return p
+
+
+def init_params(key: Array, cfg: LMConfig) -> Dict[str, Any]:
+    k_embed, k_blocks, k_head, k_d0 = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - (1 if cfg.first_dense_ff else 0)
+    block_keys = jax.random.split(k_blocks, n_scan)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(k_embed, (cfg.vocab_padded, cfg.d_model)),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(block_keys),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, (cfg.d_model, cfg.vocab_padded)
+        )
+    if cfg.first_dense_ff:
+        dense_cfg = dataclasses.replace(
+            cfg, moe=None, d_ff=cfg.first_dense_ff
+        )
+        params["dense0"] = _init_block(k_d0, dense_cfg)
+    return params
+
+
+def param_logical(cfg: LMConfig) -> Dict[str, Any]:
+    # the embedding table is 1-D sharded on vocab only: a gather from a
+    # table that is ALSO sharded on its feature dim forces GSPMD into full
+    # rematerialization (replicate + reshard) on every lookup
+    tree: Dict[str, Any] = {
+        "embed": ("vocab", None),
+        "blocks": _block_logical(cfg),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (None, "vocab")
+    if cfg.first_dense_ff:
+        dense_cfg = dataclasses.replace(cfg, moe=None, d_ff=cfg.first_dense_ff)
+        d0 = _block_logical(dense_cfg)
+        tree["dense0"] = {k: v[1:] for k, v in d0.items()}
+    return tree
+
+
+def abstract_params(cfg: LMConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attention(
+    p: Dict[str, Array],
+    x: Array,                    # (b, s, d) compute dtype
+    cfg: LMConfig,
+    freqs: Array,
+    q_offset: int = 0,
+) -> Array:
+    b, s, _ = x.shape
+    cd = cfg.compute_dtype
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    pos = q_offset + jnp.arange(s)
+    q = layers.apply_rope(q, jnp.broadcast_to(pos, (b, s)), freqs)
+    k = layers.apply_rope(k, jnp.broadcast_to(pos, (b, s)), freqs)
+    # GQA -> full (padded) heads; gather, not reshape, stays shardable
+    hp = cfg.n_heads_padded
+    group = cfg.n_heads // cfg.n_kv_heads
+    if group > 1 or hp != cfg.n_kv_heads:
+        h2kv = jnp.minimum(jnp.arange(hp) // group, cfg.n_kv_heads - 1)
+        k = jnp.take(k, h2kv, axis=2)
+        v = jnp.take(v, h2kv, axis=2)
+    attn = layers.flash_attention(
+        q, k, v, causal=True, q_offset=q_offset, kv_chunk=cfg.kv_chunk
+    )
+    if hp != cfg.n_heads:  # zero the pad heads (value + gradient)
+        mask = (jnp.arange(hp) < cfg.n_heads).astype(attn.dtype)
+        attn = attn * mask[None, None, :, None]
+    return x + jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(cd))
+
+
+def _ffn(
+    p: Dict[str, Array], x: Array, cfg: LMConfig, mesh=None
+) -> Tuple[Array, Array]:
+    cd = cfg.compute_dtype
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None and "moe" in p:
+        b, s, d = h.shape
+        flat = h.reshape(b * s, d)
+        n_data = 1
+        if mesh is not None:
+            for a in mesh.axis_names:
+                if a != "model":
+                    n_data *= mesh.shape[a]
+        # EP shard_map needs the token count to split over the data axes;
+        # decode at batch 1 falls back to GSPMD dispatch (tiny there)
+        use_ep = (
+            cfg.moe.ep_shard_map and mesh is not None
+            and (b * s) % n_data == 0
+        )
+        if use_ep:
+            out, aux = moe_ffn_sharded(flat, p["moe"], cfg.moe, mesh)
+            if cfg.moe.n_shared > 0:  # dense TP matmuls, outside shard_map
+                gs = flat @ p["moe"]["shared_gate"].astype(cd)
+                us = flat @ p["moe"]["shared_up"].astype(cd)
+                out = out + layers.swiglu(gs, us) @ p["moe"][
+                    "shared_down"
+                ].astype(cd)
+        else:
+            out, aux = moe_ffn(flat, p["moe"], cfg.moe)
+        return x + out.reshape(b, s, d), aux
+    g = h @ p["w_gate"].astype(cd)
+    u = h @ p["w_up"].astype(cd)
+    out = layers.swiglu(g, u) @ p["w_down"].astype(cd)
+    return x + out, jnp.asarray(0.0, jnp.float32)
+
+
+def _block_fwd(p, x, cfg: LMConfig, freqs, q_offset: int = 0, mesh=None):
+    x = _attention(p, x, cfg, freqs, q_offset)
+    x, aux = _ffn(p, x, cfg, mesh)
+    return x, aux
+
+
+def forward(
+    params: Dict[str, Any],
+    tokens: Array,             # (b, s) int32
+    cfg: LMConfig,
+    mesh=None,                 # enables shard_map paths (EP MoE)
+) -> Tuple[Array, Array]:
+    """Token ids -> final hidden states (b, s, d). Returns (hidden, aux_loss)."""
+    cd = cfg.compute_dtype
+    freqs = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+    # cast BEFORE the gather: the vocab-sharded lookup resolves to a masked
+    # partial gather + all-reduce of (tokens, d) — bf16 halves that wire
+    x = jnp.take(params["embed"].astype(cd), tokens, axis=0)
+
+    if cfg.first_dense_ff:
+        dense_cfg = dataclasses.replace(cfg, moe=None, d_ff=cfg.first_dense_ff)
+        x, _ = _block_fwd(params["dense0"], x, dense_cfg, freqs)
+
+    block = lambda p, x: _block_fwd(p, x, cfg, freqs, mesh=mesh)
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    def scan_body(x, p):
+        x, aux = block(p, x)
+        return x, aux
+
+    x, auxes = jax.lax.scan(
+        scan_body, x, params["blocks"], unroll=cfg.unroll_layers or 1
+    )
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(auxes)
+
+
+def lm_head_weight(params: Dict[str, Any], cfg: LMConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def loss_fn(
+    params: Dict[str, Any],
+    tokens: Array,    # (b, s)
+    labels: Array,    # (b, s)
+    mask: Array,      # (b, s)
+    cfg: LMConfig,
+    mesh=None,
+) -> Array:
+    hidden, aux = forward(params, tokens, cfg, mesh=mesh)
+    head = lm_head_weight(params, cfg).astype(cfg.compute_dtype)
+    ce = layers.chunked_softmax_xent(
+        hidden, head, labels, mask, chunk=cfg.loss_chunk,
+        n_valid_vocab=cfg.vocab_size,
+    )
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    cfg: LMConfig, batch: int, max_seq: int, dtype=None
+) -> Dict[str, Array]:
+    dtype = dtype or cfg.cache_dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_kv_cache(
+    cfg: LMConfig, batch: int, max_seq: int, dtype=None
+) -> Dict[str, Array]:
+    dtype = dtype or cfg.cache_dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    sds = jax.ShapeDtypeStruct
+    return {"k": sds(shape, dtype), "v": sds(shape, dtype)}
+
+
+def kv_cache_logical() -> Dict[str, Tuple]:
+    ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax}
+
+
+def _decode_attention_ref(q, k_cache, v_cache, length, cfg: LMConfig):
+    """One-token GQA attention vs cache (jnp oracle; Pallas twin on TPU).
+
+    Gather-expanded form (q heads may be padded beyond kh * group, and the
+    expanded head axis shards cleanly under TP).
+    """
+    b, hp, dh = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    group = max(cfg.n_heads // cfg.n_kv_heads, 1)
+    h2kv = jnp.minimum(jnp.arange(hp) // group, kh - 1)
+    ke = jnp.take(k_cache, h2kv, axis=2).astype(jnp.float32)
+    ve = jnp.take(v_cache, h2kv, axis=2).astype(jnp.float32)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), ke) * scale
+    mask = jnp.arange(s)[None, None, :] < length
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, ve)
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cache: Dict[str, Array],
+    tokens: Array,           # (b,) int32 — the newest token per sequence
+    pos: Array,              # () int32 — its position (same across batch)
+    cfg: LMConfig,
+    mesh=None,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Append one token, return (logits (b, v) f32, updated cache)."""
+    cd = cfg.compute_dtype
+    b = tokens.shape[0]
+    freqs = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+    x = jnp.take(params["embed"].astype(cd), tokens, axis=0)[:, None, :]
+
+    blocks = params["blocks"]
+    if cfg.first_dense_ff:
+        # fold the leading dense block into the scan by treating it separately
+        pass
+
+    def one_layer(x, layer_in):
+        p, ck, cv = layer_in
+        h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cd))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(cd))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(cd)
+            k = k + p["bk"].astype(cd)
+            v = v + p["bv"].astype(cd)
+        posb = jnp.broadcast_to(pos, (b, 1))
+        q = layers.apply_rope(q, posb, freqs)
+        k = layers.apply_rope(k, posb, freqs)
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.astype(ck.dtype), (0, pos, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.astype(cv.dtype), (0, pos, 0, 0)
+        )
+        attn = _decode_attention_ref(q[:, 0], ck, cv, pos + 1, cfg)
+        hp = cfg.n_heads_padded
+        if hp != cfg.n_heads:
+            hmask = (jnp.arange(hp) < cfg.n_heads).astype(attn.dtype)
+            attn = attn * hmask[None, :, None]
+        x = x + jnp.einsum(
+            "bshk,hkd->bsd", attn[:, None].astype(cd), p["wo"].astype(cd)
+        )
+        x, _ = _ffn(p, x, cfg, mesh)
+        return x, (ck, cv)
+
+    if cfg.first_dense_ff:
+        dense_cfg = dataclasses.replace(cfg, moe=None, d_ff=cfg.first_dense_ff)
+        x, (ck0, cv0) = one_layer(
+            x, (params["dense0"], cache["k"][0], cache["v"][0])
+        )
+        scan_blocks, ck_rest, cv_rest = blocks, cache["k"][1:], cache["v"][1:]
+    else:
+        scan_blocks, ck_rest, cv_rest = blocks, cache["k"], cache["v"]
+
+    x, (new_k, new_v) = jax.lax.scan(
+        one_layer, x, (scan_blocks, ck_rest, cv_rest),
+        unroll=cfg.unroll_layers or 1,
+    )
+    if cfg.first_dense_ff:
+        new_k = jnp.concatenate([ck0[None], new_k])
+        new_v = jnp.concatenate([cv0[None], new_v])
+
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (
+        x[:, 0] @ lm_head_weight(params, cfg).astype(cd)
+    ).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        logits = jnp.where(
+            jnp.arange(cfg.vocab_padded) < cfg.vocab_size, logits, -1e30
+        )
+    return logits, {"k": new_k, "v": new_v}
+
+
+def prefill(
+    params: Dict[str, Any],
+    tokens: Array,            # (b, s)
+    cfg: LMConfig,
+    max_seq: Optional[int] = None,
+    mesh=None,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Run the prompt, build the KV cache. Returns (last-token logits, cache).
+
+    The cache layout matches decode_step; padding beyond s is zeros.
+    """
+    cd = cfg.compute_dtype
+    b, s = tokens.shape
+    if max_seq is None:
+        max_seq = s
+    freqs = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta)
+    x = jnp.take(params["embed"].astype(cd), tokens, axis=0)
+
+    def block_kv(p, x, block_cfg):
+        h = layers.rmsnorm(x, p["ln1"], block_cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cd))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(cd))
+        if block_cfg.qkv_bias:
+            q = q + p["bq"].astype(cd)
+            k = k + p["bk"].astype(cd)
+            v = v + p["bv"].astype(cd)
+        posb = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q = layers.apply_rope(q, posb, freqs)
+        k = layers.apply_rope(k, posb, freqs)
+        hp = block_cfg.n_heads_padded
+        group = block_cfg.n_heads // block_cfg.n_kv_heads
+        if group > 1 or hp != block_cfg.n_kv_heads:
+            h2kv = jnp.minimum(
+                jnp.arange(hp) // group, block_cfg.n_kv_heads - 1
+            )
+            ke = jnp.take(k, h2kv, axis=2)
+            ve = jnp.take(v, h2kv, axis=2)
+        else:
+            ke, ve = k, v
+        attn = layers.flash_attention(
+            q, ke, ve, causal=True, kv_chunk=block_cfg.kv_chunk
+        )
+        if hp != block_cfg.n_heads:
+            hmask = (jnp.arange(hp) < block_cfg.n_heads).astype(attn.dtype)
+            attn = attn * hmask[None, None, :, None]
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(cd))
+        x, _ = _ffn(p, x, block_cfg, mesh)
+        pad = ((0, 0), (0, max_seq - s), (0, 0), (0, 0))
+        return x, (
+            jnp.pad(k, pad).astype(block_cfg.cache_dtype),
+            jnp.pad(v, pad).astype(block_cfg.cache_dtype),
+        )
+
+    if cfg.first_dense_ff:
+        dense_cfg = dataclasses.replace(cfg, moe=None, d_ff=cfg.first_dense_ff)
+        x, (ck0, cv0) = block_kv(params["dense0"], x, dense_cfg)
+
+    def scan_body(x, p):
+        return block_kv(p, x, cfg)
+
+    if cfg.remat:
+        scan_body = jax.checkpoint(
+            scan_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, (new_k, new_v) = jax.lax.scan(
+        scan_body, x, params["blocks"], unroll=cfg.unroll_layers or 1
+    )
+    if cfg.first_dense_ff:
+        new_k = jnp.concatenate([ck0[None], new_k])
+        new_v = jnp.concatenate([cv0[None], new_v])
+
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (
+        x[:, -1] @ lm_head_weight(params, cfg).astype(cd)
+    ).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        logits = jnp.where(
+            jnp.arange(cfg.vocab_padded) < cfg.vocab_size, logits, -1e30
+        )
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,53 @@
+"""LM text generation: prefill + greedy/temperature decode loop.
+
+Thin host loop over the jitted `transformer.prefill` / `decode_step`; used
+by the examples and the decode smoke tests.  The per-step program is the
+exact program the decode_* dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+Array = jax.Array
+
+
+def generate(
+    params: Dict[str, Any],
+    prompt: Array,            # (b, s0) int32
+    cfg: tf.LMConfig,
+    max_new_tokens: int = 32,
+    temperature: float = 0.0,
+    key: Optional[Array] = None,
+) -> Array:
+    """Returns (b, s0 + max_new_tokens) generated token ids."""
+    b, s0 = prompt.shape
+    max_seq = s0 + max_new_tokens
+    logits, cache = tf.prefill(params, prompt, cfg, max_seq=max_seq)
+    step_fn = jax.jit(
+        lambda p, c, t, pos: tf.decode_step(p, c, t, pos, cfg)
+    )
+
+    tokens = [prompt]
+    cur = _sample(logits, temperature, key, 0)
+    for i in range(max_new_tokens):
+        tokens.append(cur[:, None])
+        if i == max_new_tokens - 1:
+            break
+        logits, cache = step_fn(
+            params, cache, cur, jnp.asarray(s0 + i, jnp.int32)
+        )
+        cur = _sample(logits, temperature, key, i + 1)
+    return jnp.concatenate(tokens, axis=1)
+
+
+def _sample(logits: Array, temperature: float, key, i: int) -> Array:
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = jax.random.fold_in(key, i)
+    return jax.random.categorical(k, logits / temperature).astype(jnp.int32)

@@ -1,0 +1,65 @@
+"""Two-stage recommendation: Pixie retrieval -> learned ranker.
+
+This is how the paper's system composes with the assigned recsys archs
+(DESIGN.md §4): Pixie's random walk generates candidates from the
+interaction graph (the paper's Related Pins / Homefeed sources), and a
+ranking model (DLRM / SASRec / BST) re-scores them — the same two-stage
+shape as Pinterest's production stack ([22] in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import walk as walk_lib
+from repro.core.graph import PinBoardGraph
+from repro.models import sequential_rec as sr
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoStageConfig:
+    n_candidates: int = 200      # Pixie walk top-k fed to the ranker
+    final_k: int = 20
+
+
+def pixie_then_rank(
+    graph: PinBoardGraph,
+    query_pins: Array,          # (n_slots,)
+    query_weights: Array,
+    user_feat: Array,
+    key: Array,
+    walk_cfg: walk_lib.WalkConfig,
+    ranker: Callable[[Array], Array],   # candidate ids (k,) -> scores (k,)
+    cfg: TwoStageConfig,
+) -> Tuple[Array, Array]:
+    """Returns (final scores (final_k,), item ids (final_k,))."""
+    walk_cfg = dataclasses.replace(walk_cfg, top_k=cfg.n_candidates)
+    walk_scores, cand = walk_lib.recommend(
+        graph, query_pins, query_weights, user_feat, key, walk_cfg
+    )
+    rank_scores = ranker(cand)
+    # candidates with zero walk score are padding — mask them out
+    rank_scores = jnp.where(walk_scores > 0, rank_scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(rank_scores, cfg.final_k)
+    return vals, jnp.take(cand, idx)
+
+
+def sasrec_ranker(
+    params: Dict[str, Any],
+    user_history: Array,        # (s,) item ids
+    cfg: sr.SeqRecConfig,
+) -> Callable[[Array], Array]:
+    """Build a candidate-scoring closure from a SASRec user state."""
+    state = sr.sasrec_user_state(params, user_history[None], cfg)[0]  # (d,)
+
+    def score(cand: Array) -> Array:
+        emb = jnp.take(params["items"], jnp.maximum(cand, 0), axis=0)
+        return emb @ state
+
+    return score

@@ -1,0 +1,117 @@
+"""Pixie serving fleet, TPU-shaped (paper §3.3 "Pixie Server").
+
+The paper's server: IO threads deserialize queries, worker threads each own
+a counter and run one query at a time; ~1,200 QPS / 60 ms p99 per machine.
+The batch-SPMD translation:
+
+  * requests accumulate in a queue and are **padded/bucketed into a fixed
+    (batch, n_slots) shape** — one jitted `serve_batch` program replaces the
+    worker pool (each vmapped lane is "a worker with its own counter");
+  * the graph array is the shared read-only segment (the paper's
+    HugePages-backed mmap) — donated into none, replicated or sharded;
+  * a background "graph swap" hook models the daily graph reload: the server
+    holds a generation number and swaps the graph handle between batches
+    (serving never blocks on the swap — the old graph serves until the new
+    one is resident, exactly like the paper's restart-with-shared-memory).
+
+Latency accounting is wall-clock around the jitted call; on CPU this gives
+the *shape* of Fig. 1 (runtime vs steps / query size), which is what
+benchmarks/bench_fig1_runtime.py reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import service, walk as walk_lib
+from repro.core.graph import PinBoardGraph
+
+
+@dataclasses.dataclass
+class ServerStats:
+    latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    queries: int = 0
+    batches: int = 0
+    graph_generation: int = 0
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.percentile(self.latencies_ms, p))
+
+    def qps(self, wall_seconds: float) -> float:
+        return self.queries / max(wall_seconds, 1e-9)
+
+
+class PixieServer:
+    """Single-host Pixie serving replica (batched SPMD worker pool)."""
+
+    def __init__(
+        self,
+        graph: PinBoardGraph,
+        cfg: walk_lib.WalkConfig,
+        batch_size: int = 8,
+        n_slots: int = 8,
+        seed: int = 0,
+    ):
+        self.graph = graph
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.n_slots = n_slots
+        self.stats = ServerStats()
+        self._key = jax.random.key(seed)
+        self._queue: List[Tuple[np.ndarray, np.ndarray, int]] = []
+
+        def _serve(graph, pins, weights, feats, key):
+            return service.serve_batch(graph, pins, weights, feats, key, cfg)
+
+        self._serve = jax.jit(_serve)
+
+    # -- request path ---------------------------------------------------------
+    def submit(self, pins: Sequence[int], weights: Sequence[float], user_feat: int = 0):
+        qp, qw = np.full(self.n_slots, -1, np.int32), np.zeros(
+            self.n_slots, np.float32
+        )
+        n = min(len(pins), self.n_slots)
+        qp[:n] = np.asarray(pins[:n], np.int32)
+        qw[:n] = np.asarray(weights[:n], np.float32)
+        self._queue.append((qp, qw, user_feat))
+
+    def flush(self) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Serve every queued request (padding the final partial batch)."""
+        out: List[Tuple[np.ndarray, np.ndarray]] = []
+        while self._queue:
+            batch = self._queue[: self.batch_size]
+            self._queue = self._queue[self.batch_size:]
+            n_real = len(batch)
+            while len(batch) < self.batch_size:  # pad with empty queries
+                batch.append(
+                    (np.full(self.n_slots, -1, np.int32),
+                     np.zeros(self.n_slots, np.float32), 0)
+                )
+            pins = jnp.asarray(np.stack([b[0] for b in batch]))
+            weights = jnp.asarray(np.stack([b[1] for b in batch]))
+            feats = jnp.asarray(np.asarray([b[2] for b in batch], np.int32))
+            self._key, sub = jax.random.split(self._key)
+            t0 = time.perf_counter()
+            scores, ids = self._serve(self.graph, pins, weights, feats, sub)
+            scores.block_until_ready()
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            self.stats.batches += 1
+            self.stats.queries += n_real
+            # per-query latency = batch latency (SPMD lanes are concurrent)
+            self.stats.latencies_ms.extend([dt_ms] * n_real)
+            s_np, i_np = np.asarray(scores), np.asarray(ids)
+            out.extend((s_np[i], i_np[i]) for i in range(n_real))
+        return out
+
+    # -- graph swap (the daily reload, §3.3) -----------------------------------
+    def swap_graph(self, new_graph: PinBoardGraph) -> None:
+        self.graph = new_graph
+        self.stats.graph_generation += 1

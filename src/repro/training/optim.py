@@ -1,0 +1,147 @@
+"""AdamW + LR schedules + global-norm clipping, as pure pytree functions.
+
+No optimizer-framework dependency: state is {m, v, step} mirroring the param
+tree.  The m/v trees inherit the *parameter* shardings plus optional ZeRO-1
+extra sharding (distribution decision made by the caller via out_shardings —
+the math here is sharding-agnostic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"     # 'cosine' | 'linear' | 'constant'
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: Array
+
+
+def init(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(
+        m=zeros,
+        v=jax.tree.map(jnp.copy, zeros),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_state(params: PyTree) -> OptState:
+    return jax.eval_shape(init, params)
+
+
+def state_logical(param_logical_tree: PyTree) -> "OptState":
+    """Logical axes for the optimizer state: mirror the params."""
+    return OptState(
+        m=param_logical_tree,
+        v=jax.tree.map(
+            lambda x: x, param_logical_tree,
+            is_leaf=lambda x: isinstance(x, tuple),
+        ),
+        step=((),),  # placeholder; scalar is replicated
+    )
+
+
+def schedule_lr(cfg: AdamWConfig, step: Array) -> Array:
+    step_f = step.astype(jnp.float32)
+    warm = jnp.minimum(step_f / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step_f - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def rowwise_adagrad_init(table: Array) -> Array:
+    """Accumulator: ONE scalar per embedding row (production recsys optimizer
+    — 128x less state than Adam on a (rows, dim) table, and no ZeRO
+    resharding traffic because the state is tiny)."""
+    return jnp.zeros((table.shape[0],), jnp.float32)
+
+
+def rowwise_adagrad_update(
+    table: Array, grad: Array, accum: Array, lr: float, eps: float = 1e-8
+) -> Tuple[Array, Array]:
+    g = grad.astype(jnp.float32)
+    accum = accum + jnp.mean(g * g, axis=-1)
+    step = lr * g / jnp.sqrt(accum + eps)[:, None]
+    return (table.astype(jnp.float32) - step).astype(table.dtype), accum
+
+
+def apply_updates(
+    params: PyTree,
+    grads: PyTree,
+    state: OptState,
+    cfg: AdamWConfig,
+) -> Tuple[PyTree, OptState, Dict[str, Array]]:
+    """One AdamW step. Returns (params', state', metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads
+    )
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(new_m, new_v, step), metrics

@@ -1,0 +1,138 @@
+"""Counter aggregation + graph pruning behaviour tests (+hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import counter as counter_lib
+from repro.core import pruning
+from repro.graphs.synthetic import small_test_graph
+
+
+# ---------------------------------------------------------------------------
+# events_to_counts: sort-aggregation == numpy bincount
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    events=st.lists(st.integers(0, 99), min_size=1, max_size=300),
+    n_invalid=st.integers(0, 50),
+)
+def test_events_to_counts_matches_bincount(events, n_invalid):
+    sentinel = 1000
+    ev = np.asarray(events + [sentinel] * n_invalid, np.int64)
+    np.random.default_rng(0).shuffle(ev)
+    uniq, counts = counter_lib.events_to_counts(
+        jnp.asarray(ev), n_slots=1, max_unique=ev.shape[0]
+    )
+    uniq, counts = np.asarray(uniq), np.asarray(counts)
+    got = {}
+    for u, c in zip(uniq, counts):
+        if c > 0 and u < sentinel:
+            got[int(u)] = got.get(int(u), 0) + int(c)
+    want = {int(k): int(v) for k, v in
+            zip(*np.unique(np.asarray(events), return_counts=True))}
+    assert got == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    counts=st.lists(
+        st.lists(st.integers(0, 50), min_size=4, max_size=4),
+        min_size=1, max_size=4,
+    )
+)
+def test_boost_combine_eq3(counts):
+    c = jnp.asarray(counts, jnp.int32)
+    got = np.asarray(counter_lib.boost_combine(c))
+    want = np.square(np.sqrt(np.asarray(counts, np.float64)).sum(axis=0))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_boosted_from_events_cross_slot():
+    # slot 0 visits pin 3 four times; slot 1 visits pin 3 nine times
+    n_pins, sentinel = 10, 2 * 10
+    events = jnp.asarray([3] * 4 + [13] * 9 + [sentinel] * 3, jnp.int64)
+    uniq, counts = counter_lib.events_to_counts(events, 2, events.shape[0])
+    pins, boosted = counter_lib.boosted_from_events(
+        uniq, counts, n_pins, sentinel, events.shape[0]
+    )
+    pins, boosted = np.asarray(pins), np.asarray(boosted)
+    idx = np.where(pins == 3)[0]
+    assert idx.size == 1
+    assert boosted[idx[0]] == pytest.approx((2 + 3) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# pruning
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sg():
+    return small_test_graph()
+
+
+def test_entropy_pruning_targets_diverse_boards(sg):
+    from repro.core.graph import edge_list
+
+    pins, boards = edge_list(sg.graph)
+    ent = pruning.board_entropy(
+        pins, boards, sg.pin_topics, sg.graph.n_boards
+    )
+    # diverse boards (near-uniform planted mixtures) should rank high
+    board_ent_rank = np.argsort(-ent)
+    top_drop = set(board_ent_rank[: int(0.1 * sg.graph.n_boards)].tolist())
+    # entropy of dropped boards strictly above the median board
+    assert ent[list(top_drop)].min() >= np.median(ent[ent > 0])
+
+
+@pytest.mark.parametrize("delta", [1.0, 0.9, 0.7])
+def test_degree_pruning_bounds(sg, delta):
+    cfg = pruning.PruneConfig(entropy_board_frac=0.0, delta=delta)
+    pruned, stats = pruning.prune_graph(
+        sg.graph, sg.pin_topics, None, cfg
+    )
+    degs_before = np.asarray(sg.graph.p2b.degrees())
+    degs_after = np.asarray(pruned.p2b.degrees())
+    # per-pin: ceil(d^delta) edges kept (within min_keep floor)
+    target = np.maximum(
+        np.ceil(degs_before.astype(np.float64) ** delta),
+        np.minimum(degs_before, cfg.min_keep),
+    )
+    assert (degs_after <= target + 1e-9).all()
+    if delta == 1.0:
+        assert stats["edges_after"] == stats["edges_after_entropy"]
+
+
+def test_pruning_monotone_in_delta(sg):
+    edges = []
+    for delta in (1.0, 0.9, 0.8, 0.6):
+        cfg = pruning.PruneConfig(entropy_board_frac=0.1, delta=delta)
+        _, stats = pruning.prune_graph(sg.graph, sg.pin_topics, None, cfg)
+        edges.append(stats["edges_after"])
+    assert edges == sorted(edges, reverse=True)
+
+
+def test_pruning_keeps_topical_edges(sg):
+    """The edges kept must have higher pin-board cosine sim than dropped."""
+    from repro.core.graph import edge_list
+
+    cfg = pruning.PruneConfig(entropy_board_frac=0.0, delta=0.7)
+    pruned, _ = pruning.prune_graph(sg.graph, sg.pin_topics, None, cfg)
+    # board topic dists from the original graph
+    pins_b, boards_b = edge_list(sg.graph)
+    nt = sg.pin_topics.shape[1]
+    sums = np.zeros((sg.graph.n_boards, nt))
+    np.add.at(sums, boards_b, sg.pin_topics[pins_b])
+    cnt = np.maximum(np.bincount(boards_b, minlength=sg.graph.n_boards), 1)
+    bt = sums / cnt[:, None]
+
+    def mean_sim(graph):
+        p, b = edge_list(graph)
+        return pruning.cosine_sim(sg.pin_topics[p], bt[b]).mean()
+
+    assert mean_sim(pruned) > mean_sim(sg.graph)

@@ -1,0 +1,181 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle.
+
+Sweeps shapes and dtypes per kernel; integer kernels must match exactly,
+floating kernels within documented tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.visit_counter import visit_counter
+from repro.kernels.walk_step import walk_step
+
+
+# ---------------------------------------------------------------------------
+# visit_counter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [128, 2048, 5000])
+@pytest.mark.parametrize("n_bins", [64, 512, 1300])
+def test_visit_counter_matches_ref(m, n_bins):
+    key = jax.random.key(m * 7 + n_bins)
+    events = jax.random.randint(key, (m,), -5, n_bins + 20, dtype=jnp.int32)
+    got = visit_counter(events, n_bins, interpret=True)
+    want = ref.visit_counter_ref(events, n_bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(got.sum()) <= m
+
+
+@pytest.mark.parametrize("tile,chunk", [(128, 256), (512, 2048), (256, 1024)])
+def test_visit_counter_tilings(tile, chunk):
+    key = jax.random.key(0)
+    events = jax.random.randint(key, (4096,), 0, 777, dtype=jnp.int32)
+    got = visit_counter(events, 777, tile=tile, chunk=chunk, interpret=True)
+    want = ref.visit_counter_ref(events, 777)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_visit_counter_all_invalid():
+    events = jnp.full((512,), -1, jnp.int32)
+    got = visit_counter(events, 256, interpret=True)
+    assert int(got.sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# walk_step
+# ---------------------------------------------------------------------------
+
+
+def _tiny_csr(key, n_pins=50, n_boards=12, n_edges=400):
+    kp, kb = jax.random.split(key)
+    pins = jax.random.randint(kp, (n_edges,), 0, n_pins)
+    boards = jax.random.randint(kb, (n_edges,), 0, n_boards)
+    pins = np.asarray(pins)
+    boards = np.asarray(boards)
+    # p2b
+    order = np.argsort(pins, kind="stable")
+    p2b_off = np.zeros(n_pins + 1, np.int32)
+    np.cumsum(np.bincount(pins, minlength=n_pins), out=p2b_off[1:])
+    p2b_tgt = (boards[order] + n_pins).astype(np.int32)
+    # b2p
+    order_b = np.argsort(boards, kind="stable")
+    b2p_off = np.zeros(n_boards + 1, np.int32)
+    np.cumsum(np.bincount(boards, minlength=n_boards), out=b2p_off[1:])
+    b2p_tgt = pins[order_b].astype(np.int32)
+    return (
+        jnp.asarray(p2b_off), jnp.asarray(p2b_tgt),
+        jnp.asarray(b2p_off), jnp.asarray(b2p_tgt),
+        n_pins,
+    )
+
+
+@pytest.mark.parametrize("w,block_w", [(256, 256), (512, 128), (1024, 256)])
+@pytest.mark.parametrize("alpha_u32", [0, 2**31, 2**32 - 1])
+def test_walk_step_matches_ref(w, block_w, alpha_u32):
+    key = jax.random.key(w + alpha_u32 % 97)
+    p2b_off, p2b_tgt, b2p_off, b2p_tgt, n_pins = _tiny_csr(key)
+    k1, k2, k3 = jax.random.split(key, 3)
+    curr = jax.random.randint(k1, (w,), 0, n_pins, dtype=jnp.int32)
+    query = jax.random.randint(k2, (w,), 0, n_pins, dtype=jnp.int32)
+    rbits = jax.random.bits(k3, (w, 3), dtype=jnp.uint32)
+    got = walk_step(
+        curr, query, rbits, p2b_off, p2b_tgt, b2p_off, b2p_tgt,
+        n_pins=n_pins, alpha_u32=alpha_u32, block_w=block_w, interpret=True,
+    )
+    want = ref.walk_step_ref(
+        curr, query, rbits, p2b_off, p2b_tgt, b2p_off, b2p_tgt,
+        n_pins=n_pins, alpha_u32=alpha_u32,
+    )
+    for g, w_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w_))
+
+
+def test_walk_step_dead_end_restarts():
+    # pin 0 has no boards: walkers there must restart at query, invalid visit
+    p2b_off = jnp.asarray([0, 0, 2], jnp.int32)        # pin0 deg 0, pin1 deg 2
+    p2b_tgt = jnp.asarray([2, 2], jnp.int32)           # board id 2 (= n_pins)
+    b2p_off = jnp.asarray([0, 2], jnp.int32)
+    b2p_tgt = jnp.asarray([0, 1], jnp.int32)
+    w = 256
+    curr = jnp.zeros((w,), jnp.int32)                  # all at dead-end pin 0
+    query = jnp.ones((w,), jnp.int32)
+    rbits = jax.random.bits(jax.random.key(0), (w, 3), dtype=jnp.uint32)
+    nxt, vis, ok = walk_step(
+        curr, query, rbits, p2b_off, p2b_tgt, b2p_off, b2p_tgt,
+        n_pins=2, alpha_u32=0, block_w=128, interpret=True,
+    )
+    assert not bool(ok.any())
+    np.testing.assert_array_equal(np.asarray(nxt), np.ones(w, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,l,v,d", [(32, 4, 100, 64), (100, 1, 50, 128), (64, 8, 1000, 32)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_matches_ref(dtype, b, l, v, d, mode):
+    key = jax.random.key(b * l + d)
+    kt, ki, kw = jax.random.split(key, 3)
+    table = jax.random.normal(kt, (v, d), dtype=jnp.float32).astype(dtype)
+    ids = jax.random.randint(ki, (b, l), -1, v, dtype=jnp.int32)
+    weights = jax.random.uniform(kw, (b, l), dtype=jnp.float32)
+    got = embedding_bag(table, ids, weights, mode=mode, interpret=True)
+    want = ref.embedding_bag_ref(table, ids, weights, mode=mode)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_embedding_bag_all_padding():
+    table = jnp.ones((10, 16), jnp.float32)
+    ids = jnp.full((8, 4), -1, jnp.int32)
+    out = embedding_bag(table, ids, mode="mean", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.zeros((8, 16)))
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,dh,s", [(2, 8, 2, 64, 512), (1, 16, 16, 128, 300), (4, 4, 1, 128, 1024)]
+)
+def test_decode_attention_matches_ref(dtype, b, h, kh, dh, s):
+    key = jax.random.key(h * s + dh)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (b, h, dh), dtype=jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, s, kh, dh), dtype=jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, s, kh, dh), dtype=jnp.float32).astype(dtype)
+    lengths = jax.random.randint(kl, (b,), 1, s + 1, dtype=jnp.int32)
+    got = decode_attention(q, k, v, lengths, block_s=256, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+def test_decode_attention_length_one():
+    # every sequence has exactly 1 valid kv: output == v[:, 0]
+    b, h, kh, dh, s = 2, 4, 2, 64, 256
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (b, h, dh))
+    k = jax.random.normal(jax.random.key(1), (b, s, kh, dh))
+    v = jax.random.normal(jax.random.key(2), (b, s, kh, dh))
+    lengths = jnp.ones((b,), jnp.int32)
+    out = decode_attention(q, k, v, lengths, interpret=True)
+    want = jnp.repeat(v[:, 0], h // kh, axis=1).reshape(b, h, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)

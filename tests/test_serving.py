@@ -1,0 +1,96 @@
+"""Serving-layer tests: LM generation, Pixie server batching/swap,
+two-stage recommendation, query construction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import service, walk as walk_lib
+from repro.graphs.synthetic import small_test_graph, top_degree_pins
+from repro.models import sequential_rec as sr
+from repro.models import transformer as tf
+from repro.serving import decode as decode_lib
+from repro.serving.recommend import TwoStageConfig, pixie_then_rank, sasrec_ranker
+from repro.serving.server import PixieServer
+
+
+def test_generate_greedy_shapes_and_determinism():
+    cfg = tf.LMConfig(
+        name="t", n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+        head_dim=12, d_ff=96, vocab_size=128, remat=False,
+        compute_dtype=jnp.float32, cache_dtype=jnp.float32,
+    )
+    params = tf.init_params(jax.random.key(0), cfg)
+    prompt = jax.random.randint(jax.random.key(1), (2, 5), 0, 128)
+    out1 = decode_lib.generate(params, prompt, cfg, max_new_tokens=6)
+    out2 = decode_lib.generate(params, prompt, cfg, max_new_tokens=6)
+    assert out1.shape == (2, 11)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    # prompt preserved
+    np.testing.assert_array_equal(np.asarray(out1[:, :5]), np.asarray(prompt))
+
+
+def test_pixie_server_serves_and_swaps():
+    sg = small_test_graph()
+    cfg = walk_lib.WalkConfig(
+        n_steps=5_000, n_walkers=128, top_k=20, n_p=500, n_v=4
+    )
+    server = PixieServer(sg.graph, cfg, batch_size=4, n_slots=4)
+    qs = top_degree_pins(sg, 8)
+    for i in range(6):  # 6 requests -> 2 batches (one padded)
+        server.submit([int(qs[i])], [1.0], user_feat=0)
+    out = server.flush()
+    assert len(out) == 6
+    for scores, ids in out:
+        assert scores.shape == (20,)
+        assert (scores[:3] > 0).all()
+    assert server.stats.queries == 6
+    assert server.stats.batches == 2
+    assert server.stats.percentile(50) > 0
+    server.swap_graph(sg.graph)
+    assert server.stats.graph_generation == 1
+    # serving continues after the swap
+    server.submit([int(qs[0])], [1.0])
+    assert len(server.flush()) == 1
+
+
+def test_build_query_weights_decay_and_rank():
+    actions = [
+        service.UserAction(pin=1, action="save", age_hours=0.0),
+        service.UserAction(pin=2, action="view", age_hours=0.0),
+        service.UserAction(pin=3, action="save", age_hours=240.0),
+    ]
+    pins, weights = service.build_query(actions, n_slots=4)
+    assert pins[0] == 1            # fresh save ranks first
+    assert weights[0] > weights[1] > 0
+    # 10-day-old save decayed below a fresh view
+    idx3 = list(pins).index(3)
+    assert weights[idx3] < weights[1]
+    assert pins[3] == -1 and weights[3] == 0.0  # padding
+
+
+def test_two_stage_recommendation_returns_walk_candidates():
+    sg = small_test_graph()
+    q = int(top_degree_pins(sg, 1)[0])
+    cfg = sr.SeqRecConfig(
+        name="r", kind="sasrec", n_items=sg.graph.n_pins, embed_dim=16,
+        seq_len=8, n_blocks=1, n_heads=1,
+    )
+    params = sr.init_params(jax.random.key(0), cfg)
+    history = jnp.full((8,), q, jnp.int32)
+    ranker = sasrec_ranker(params, history, cfg)
+    qp = jnp.asarray([q, -1, -1, -1], jnp.int32)
+    qw = jnp.asarray([1.0, 0, 0, 0], jnp.float32)
+    wcfg = walk_lib.WalkConfig(n_steps=8_000, n_walkers=128, n_p=10**9,
+                               n_v=10**9)
+    scores, items = pixie_then_rank(
+        sg.graph, qp, qw, jnp.asarray(0, jnp.int32), jax.random.key(1),
+        wcfg, ranker, TwoStageConfig(n_candidates=50, final_k=10),
+    )
+    items = np.asarray(items)
+    scores = np.asarray(scores)
+    assert items.shape == (10,)
+    valid = np.isfinite(scores)
+    assert valid.any()
+    # ranked items must come from the graph (and not be the query pin)
+    assert q not in items[valid]

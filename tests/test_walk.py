@@ -1,0 +1,193 @@
+"""Pixie walk system tests: statistical agreement with the paper-faithful
+sequential oracle, Eq. 1-3 semantics, early stopping, and event-mode
+equivalence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import counter as counter_lib
+from repro.core import sampling, walk as walk_lib
+from repro.core.reference import (
+    basic_random_walk_ref,
+    pixie_random_walk_ref,
+    scaling_factor_ref,
+)
+from repro.graphs.synthetic import small_test_graph, top_degree_pins
+
+
+@pytest.fixture(scope="module")
+def sg():
+    return small_test_graph()
+
+
+def test_basic_walk_matches_oracle_distribution(sg):
+    """Vectorized walk and sequential oracle sample the same Markov chain:
+    their normalized visit distributions converge (TV distance small)."""
+    g = sg.graph
+    q = int(top_degree_pins(sg, 1)[0])
+    v_ref = basic_random_walk_ref(g, q, alpha=0.5, n_steps=40_000, seed=3)
+    cfg = walk_lib.WalkConfig(
+        n_steps=40_000, n_walkers=512, bias_beta=0.0,
+        n_p=10**9, n_v=10**9,
+    )
+    v_jax = np.asarray(walk_lib.basic_random_walk(g, q, jax.random.key(0), cfg))
+    pr = v_ref / max(v_ref.sum(), 1)
+    pj = v_jax / max(v_jax.sum(), 1)
+    tv = 0.5 * np.abs(pr - pj).sum()
+    assert tv < 0.15, f"TV distance {tv}"
+
+
+def test_biased_walk_matches_biased_oracle(sg):
+    g = sg.graph
+    q = int(top_degree_pins(sg, 1)[0])
+    lang = 1
+    v_ref = pixie_random_walk_ref(
+        g, q, user_feat=lang, alpha=0.5, n_steps=30_000,
+        n_p=10**9, n_v=10**9, beta=0.9, seed=5,
+    )
+    cfg = walk_lib.WalkConfig(
+        n_steps=30_000, n_walkers=512, bias_beta=0.9, n_p=10**9, n_v=10**9
+    )
+    res = walk_lib.pixie_random_walk(
+        g, jnp.asarray([q], jnp.int32), jnp.ones((1,), jnp.float32),
+        jnp.asarray(lang, jnp.int32), jax.random.key(1), cfg,
+    )
+    v_jax = np.asarray(res.counts[0])
+    pr = v_ref / max(v_ref.sum(), 1)
+    pj = v_jax / max(v_jax.sum(), 1)
+    tv = 0.5 * np.abs(pr - pj).sum()
+    assert tv < 0.2, f"TV distance {tv}"
+
+
+def test_multi_hit_booster_prefers_multi_query_pins():
+    """Eq. 3: (sqrt(a)+sqrt(b))^2 > a+b for a,b>0 — multi-hit pins beat
+    single-hit pins of the same total count."""
+    counts = jnp.asarray([[9, 16, 0], [9, 0, 25]], jnp.int32)
+    boosted = np.asarray(counter_lib.boost_combine(counts))
+    # pin 0: visited from both queries (9+9=18 total)
+    # pin 1: 16 from one; pin 2: 25 from one
+    assert boosted[0] == pytest.approx((3 + 3) ** 2)
+    assert boosted[1] == pytest.approx(16.0)
+    assert boosted[2] == pytest.approx(25.0)
+    assert boosted[0] > boosted[2] > boosted[1]
+
+
+def test_early_stopping_reduces_steps(sg):
+    g = sg.graph
+    q = int(top_degree_pins(sg, 1)[0])
+    qp = jnp.asarray([q], jnp.int32)
+    qw = jnp.ones((1,), jnp.float32)
+    base = walk_lib.WalkConfig(n_steps=40_000, n_walkers=256)
+    no_stop = dataclasses.replace(base, n_p=10**9, n_v=10**9)
+    stop = dataclasses.replace(base, n_p=50, n_v=4)
+    r1 = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(0, jnp.int32), jax.random.key(0), no_stop
+    )
+    r2 = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(0, jnp.int32), jax.random.key(0), stop
+    )
+    assert int(r2.steps_taken[0]) < int(r1.steps_taken[0])
+    assert int(r2.n_high[0]) > 50
+
+
+def test_event_mode_matches_dense_mode(sg):
+    """The scale-free event path aggregates to the same counts as the
+    dense scatter path under identical RNG."""
+    g = sg.graph
+    qs = top_degree_pins(sg, 2)
+    qp = jnp.asarray([int(qs[0]), int(qs[1])], jnp.int32)
+    qw = jnp.asarray([1.0, 0.5], jnp.float32)
+    cfg = walk_lib.WalkConfig(
+        n_steps=8_000, n_walkers=128, n_p=10**9, n_v=10**9
+    )
+    key = jax.random.key(7)
+    dense = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg
+    )
+    ev = walk_lib.pixie_walk_events(
+        g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg,
+        check_every=10**9,
+    )
+    # aggregate events -> per-slot counts
+    events = np.asarray(ev.events)
+    sentinel = 2 * g.n_pins
+    valid = events < sentinel
+    slot = events[valid] // g.n_pins
+    pin = events[valid] % g.n_pins
+    counts = np.zeros((2, g.n_pins), np.int64)
+    np.add.at(counts, (slot, pin), 1)
+    dense_counts = np.asarray(dense.counts)
+    # dense mode zeroes the query pins after the walk; do the same
+    counts[0, int(qs[0])] = 0
+    counts[1, int(qs[1])] = 0
+    np.testing.assert_array_equal(counts, dense_counts)
+
+
+def test_recommend_excludes_query_pins(sg):
+    g = sg.graph
+    qs = top_degree_pins(sg, 2)
+    qp = jnp.asarray([int(qs[0]), int(qs[1]), -1, -1], jnp.int32)
+    qw = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    cfg = walk_lib.WalkConfig(n_steps=20_000, n_walkers=256, top_k=50)
+    scores, ids = walk_lib.recommend(
+        g, qp, qw, jnp.asarray(0, jnp.int32), jax.random.key(0), cfg
+    )
+    ids = np.asarray(ids)[np.asarray(scores) > 0]
+    assert int(qs[0]) not in ids
+    assert int(qs[1]) not in ids
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1-2 properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def test_scaling_factor_matches_reference():
+    for deg in (0, 1, 5, 100, 4096):
+        got = float(sampling.scaling_factor(
+            jnp.asarray(deg), jnp.asarray(4096)
+        ))
+        want = scaling_factor_ref(deg, 4096)
+        assert got == pytest.approx(want, rel=1e-5), deg
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    degs=st.lists(st.integers(0, 10_000), min_size=1, max_size=16),
+    n_total=st.integers(100, 1_000_000),
+)
+def test_allocate_steps_properties(degs, n_total):
+    degs_a = jnp.asarray(degs, jnp.int32)
+    w = jnp.ones((len(degs),), jnp.float32)
+    max_deg = jnp.asarray(max(max(degs), 1))
+    n_q = np.asarray(sampling.allocate_steps(w, degs_a, max_deg, n_total))
+    active = np.asarray(degs) > 0
+    # every active query pin gets at least one step (paper's stated goal)
+    assert (n_q[active] >= 1).all()
+    assert (n_q[~active] == 0).all()
+    # total stays within budget + per-pin rounding slack
+    assert n_q.sum() <= n_total + len(degs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_q=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+    n_walkers=st.integers(8, 512),
+)
+def test_allocate_walkers_partition(n_q, n_walkers):
+    n_q_a = jnp.asarray(n_q, jnp.int32)
+    slot, _ = sampling.allocate_walkers(n_q_a, n_walkers)
+    slot = np.asarray(slot)
+    assert slot.shape == (n_walkers,)
+    assert (slot >= 0).all() and (slot < len(n_q)).all()
+    # walkers assigned to zero-budget slots only if every slot is zero
+    if sum(n_q) > 0:
+        used = set(slot.tolist())
+        zero_slots = {i for i, v in enumerate(n_q) if v == 0}
+        # at most rounding spill into zero slots
+        assert len(used & zero_slots) <= max(1, len(n_q) // 2)

@@ -59,6 +59,29 @@ def run(seed: int = 0) -> Dict:
         t = timed(fn, jax.random.key(seed), warmup=1, iters=3)
         out["runtime_vs_query_size"].append({"q_size": q_size, **t})
 
+    # (c) walk-engine sweep: same single-query walk on both step backends.
+    # On CPU the pallas engine runs interpreted (plumbing check, not perf);
+    # on TPU this is the fused-kernel speedup for the Fig. 1 workload.
+    out["backend_sweep"] = []
+    for backend in ("xla", "pallas"):
+        cfg = walk_lib.WalkConfig(
+            n_steps=5_000, n_walkers=256, top_k=100, n_p=10**9, n_v=10**9,
+            backend=backend,
+        )
+        qp = jnp.asarray([int(qs[0])], jnp.int32)
+        qw = jnp.ones((1,), jnp.float32)
+        fn = jax.jit(
+            lambda k, c=cfg: walk_lib.recommend(
+                g, qp, qw, jnp.asarray(0, jnp.int32), k, c
+            )
+        )
+        t = timed(fn, jax.random.key(seed), warmup=1, iters=2)
+        out["backend_sweep"].append({"backend": backend, **t})
+    bs = out["backend_sweep"]
+    out["pallas_speedup_x"] = round(
+        bs[0]["mean_ms"] / max(bs[1]["mean_ms"], 1e-9), 3
+    )
+
     # shape checks
     r = out["runtime_vs_steps"]
     lin = r[-1]["mean_ms"] / max(r[0]["mean_ms"], 1e-9)

@@ -59,7 +59,50 @@ def run(n_requests: int = 64, seed: int = 0) -> Dict:
     out["batching_overhead_bounded"] = bool(
         rows[-1]["qps"] >= 0.5 * rows[0]["qps"]
     )
+
+    # walk-engine sweep: the same serving path on both step backends.  On a
+    # CPU host the pallas engine runs in interpret mode (correctness
+    # plumbing, expect a big slowdown); on TPU this reports the real fused
+    # kernel speedup.  Smaller request count: interpret mode is slow.
+    out["backend_sweep"] = _backend_sweep(sg, qs, seed, n_requests=8)
     return out
+
+
+def _backend_sweep(sg, qs, seed: int, n_requests: int) -> Dict:
+    rng = np.random.default_rng(seed + 1)
+    res: Dict = {"rows": []}
+    for backend in ("xla", "pallas"):
+        cfg = walk_lib.WalkConfig(
+            n_steps=4_000, n_walkers=256, top_k=100, n_p=2000, n_v=4,
+            backend=backend,
+        )
+        server = PixieServer(
+            sg.graph, cfg, batch_size=8, n_slots=4, seed=seed
+        )
+        server.submit([int(qs[0])], [1.0], user_feat=0)
+        server.flush()
+        server.stats.latencies_ms.clear()
+        server.stats.queries = 0
+        for _ in range(n_requests):
+            k = rng.integers(1, 4)
+            pins = rng.choice(qs, size=k, replace=False)
+            server.submit(pins.tolist(), [1.0] * k, user_feat=0)
+        t0 = time.perf_counter()
+        server.flush()
+        wall = time.perf_counter() - t0
+        res["rows"].append({
+            "backend": backend,
+            "qps": round(server.stats.qps(wall), 1),
+            "p50_ms": round(server.stats.percentile(50), 1),
+        })
+    x, p = res["rows"][0], res["rows"][1]
+    res["pallas_speedup_x"] = round(
+        x["p50_ms"] / max(p["p50_ms"], 1e-9), 3
+    )
+    import jax
+
+    res["pallas_interpret_mode"] = jax.default_backend() == "cpu"
+    return res
 
 
 if __name__ == "__main__":

@@ -1,0 +1,98 @@
+"""Fast serving smoke: tiny graph, both walk backends, perf trajectory file.
+
+Runs the batched query path (core/service.serve_batch) on a tiny synthetic
+graph with the "xla" and "pallas" walk engines, checks they return identical
+recommendations, and writes ``BENCH_serving.json`` at the repo root so future
+PRs have a perf trajectory to regress against.
+
+Numbers recorded on a CPU host run the Pallas kernels in *interpret mode* —
+they measure correctness plumbing, not kernel speed (`host_backend` in the
+output says which).  On a TPU host the same file records the real fused-kernel
+speedup.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import service, walk as walk_lib
+from repro.graphs.synthetic import SyntheticGraphConfig, generate
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "BENCH_serving.json")
+
+
+def run(seed: int = 0) -> Dict:
+    sg = generate(SyntheticGraphConfig(
+        n_pins=2_000, n_boards=200, n_topics=8, n_langs=2, seed=seed
+    ))
+    g = sg.graph
+    rng = np.random.default_rng(seed)
+    degs = np.asarray(g.p2b.degrees()).astype(np.float64)
+    qs = rng.choice(g.n_pins, size=8, replace=False, p=degs / degs.sum())
+
+    batch = 4
+    n_slots = 2
+    pins = np.full((batch, n_slots), -1, np.int32)
+    weights = np.zeros((batch, n_slots), np.float32)
+    for i in range(batch):
+        pins[i, 0] = qs[2 * i]
+        pins[i, 1] = qs[2 * i + 1]
+        weights[i] = [1.0, 0.6]
+    pins_j = jnp.asarray(pins)
+    weights_j = jnp.asarray(weights)
+    feats = jnp.zeros((batch,), jnp.int32)
+    key = jax.random.key(seed)
+
+    base = walk_lib.WalkConfig(
+        n_steps=2_000, n_walkers=128, chunk_steps=8, top_k=20,
+        n_p=10**9, n_v=10**9,
+    )
+
+    out: Dict = {
+        "host_backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "graph": {"n_pins": g.n_pins, "n_boards": g.n_boards,
+                  "n_edges": g.n_edges},
+        "config": {"n_steps": base.n_steps, "n_walkers": base.n_walkers,
+                   "chunk_steps": base.chunk_steps, "batch": batch},
+        "backends": {},
+    }
+    ids_by_backend = {}
+    for backend in ("xla", "pallas"):
+        fn = jax.jit(
+            lambda k, b=backend: service.serve_batch(
+                g, pins_j, weights_j, feats, k, base, backend=b
+            )
+        )
+        t = timed(fn, key, warmup=1, iters=3)
+        scores, ids = fn(key)
+        ids_by_backend[backend] = np.asarray(ids)
+        out["backends"][backend] = {
+            "batch_ms": round(t["mean_ms"], 2),
+            "per_query_ms": round(t["mean_ms"] / batch, 2),
+        }
+
+    out["both_backends_agree"] = bool(
+        np.array_equal(ids_by_backend["xla"], ids_by_backend["pallas"])
+    )
+    x_ms = out["backends"]["xla"]["batch_ms"]
+    p_ms = out["backends"]["pallas"]["batch_ms"]
+    out["pallas_speedup_x"] = round(x_ms / max(p_ms, 1e-9), 3)
+    out["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    out["wrote"] = OUT_PATH
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

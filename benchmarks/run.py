@@ -21,6 +21,7 @@ from benchmarks import (
     bench_fig4_pruning,
     bench_fig5_memory,
     bench_serving,
+    bench_smoke,
     bench_table1_hitrate,
     bench_table3_bias,
 )
@@ -35,6 +36,8 @@ SUITES = {
     "fig4": ("Fig 4: pruning link-prediction F1", bench_fig4_pruning.run),
     "fig5": ("Fig 5: memory/runtime vs pruning", bench_fig5_memory.run),
     "serving": ("Serving fleet QPS/latency (§3.3)", bench_serving.run),
+    "smoke": ("Serving smoke: xla vs pallas walk engines -> "
+              "BENCH_serving.json", bench_smoke.run),
 }
 
 VERDICT_KEYS = (
@@ -42,6 +45,7 @@ VERDICT_KEYS = (
     "query_size_sublinear", "stability_grows_with_steps",
     "early_stop_saves_steps", "edges_monotone_in_delta",
     "pruning_improves_f1", "memory_decreases", "batching_overhead_bounded",
+    "both_backends_agree",
 )
 
 

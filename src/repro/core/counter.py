@@ -56,6 +56,35 @@ def dense_accumulate_flat(counts: Array, pins: Array, valid: Array) -> Array:
     return counts.at[safe].add(valid.astype(counts.dtype), mode="drop")
 
 
+def accumulate_packed_events(
+    counts: Array, events: Array, n_bins: int, backend: str
+) -> Array:
+    """Accumulate packed ``slot * n_pins + pin`` events into flat counts.
+
+    Events >= n_bins are the walk's invalid-step sentinel and are dropped.
+    Two engines, matching the walk backends (core/walk.py):
+
+      * "xla"    — scatter-add (``.at[].add``): random writes, fine on
+                   CPU/GPU, the worst access pattern on TPU.
+      * "pallas" — the tile-scan histogram kernel (kernels/visit_counter):
+                   each count tile scans the event chunk with vectorized
+                   compares in VMEM; no scatters anywhere.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops  # local import: kernels layer on top
+
+        return counts + ops.visit_counts(
+            events.reshape(-1).astype(jnp.int32), n_bins, use_kernel=True
+        )
+    # not dense_accumulate_flat: that helper casts indices to int32, which
+    # would corrupt int64 packed ids on production-scale graphs
+    valid = events < n_bins
+    safe = jnp.where(valid, events, 0)
+    return counts.at[safe.reshape(-1)].add(
+        valid.astype(counts.dtype).reshape(-1), mode="drop"
+    )
+
+
 def boost_combine(counts_q: Array, weights: Array | None = None) -> Array:
     """Multi-hit booster, Eq. 3:  V[p] = (sum_q w_q * sqrt(V_q[p]))**2.
 

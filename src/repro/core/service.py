@@ -92,12 +92,19 @@ def serve_batch(
     user_feats: jnp.ndarray,  # (batch,)
     key: jax.Array,
     cfg: walk_lib.WalkConfig,
+    backend: str | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One SPMD serving step: vmapped Pixie over a query batch.
 
     This is the TPU replacement for the paper's worker-thread-per-query
-    model: a batch of queries is one program.
+    model: a batch of queries is one program.  ``backend`` overrides
+    ``cfg.backend`` ("xla" | "pallas") for the whole batch, so a serving
+    fleet can flip the hot path to the fused Pallas walk engine without
+    rebuilding its configs; both engines return bit-identical
+    recommendations for the same key (core/walk.py).
     """
+    if backend is not None and backend != cfg.backend:
+        cfg = dataclasses.replace(cfg, backend=backend)
     keys = jax.random.split(key, pins.shape[0])
 
     def one(qp, qw, uf, k):

@@ -10,11 +10,31 @@ which is exactly Algorithm 2's inner loop, with ``SampleWalkLength(alpha)``
 realised as a per-step Bernoulli(alpha) restart (geometric segment lengths,
 E[len] = 1/alpha; see core/sampling.py).
 
+Two interchangeable step engines (``WalkConfig.backend``):
+
+  * ``"xla"``    — pure-XLA two-level gathers (kernels/ref.walk_chunk_ref);
+                   the numerical reference, runs anywhere.
+  * ``"pallas"`` — the fused multi-superstep Pallas kernel
+                   (kernels/walk_step.walk_steps_fused): ONE kernel launch
+                   per ``chunk_steps`` steps with walker state resident in
+                   VMEM across the whole chunk, packed (slot, pin) visit
+                   events emitted in-kernel, and counts recovered with the
+                   scatter-free tile-scan ``visit_counter`` kernel.  On CPU
+                   hosts the kernel runs in interpret mode.
+
+Both engines consume the SAME counter-based random bits (one uint32
+quadruple per walker-step, threefry fold-in of the step index), do the same
+integer arithmetic on them, and therefore produce bit-for-bit identical
+visit events — backend choice is a pure performance knob, verified by
+tests/test_walk_backends.py.
+
 Two counting backends (see core/counter.py):
-  * dense  — per-(query-slot, pin) scatter-add counts; benchmark-scale and
-             per-shard production counting.
+  * dense  — per-(query-slot, pin) counts; benchmark-scale and per-shard
+             production counting.  The xla engine scatter-adds; the pallas
+             engine histograms the packed event chunk (no scatters).
   * events — bounded (slot, pin) event buffer + sort aggregation; scale-free,
-             memory O(N) like the paper's hash table.
+             memory O(N) like the paper's hash table.  Both engines emit the
+             packed buffer directly.
 
 Early stopping (Algorithm 2 lines 10-13) is evaluated every chunk: a query
 slot stops once >= n_p pins reached n_v visits or its step budget N_q is
@@ -33,8 +53,11 @@ import jax.numpy as jnp
 from repro.core import counter as counter_lib
 from repro.core import sampling
 from repro.core.graph import PinBoardGraph
+from repro.kernels import ops
 
 Array = jax.Array
+
+BACKENDS = ("xla", "pallas")
 
 
 def packed_event_dtype(n_slots: int, n_pins: int):
@@ -48,6 +71,11 @@ def packed_event_dtype(n_slots: int, n_pins: int):
     return jnp.int64
 
 
+def _prob_u32(p: float) -> int:
+    """Map a probability to the uint32 threshold used by both step engines."""
+    return max(0, min(int(round(p * 2.0**32)), 2**32 - 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class WalkConfig:
     """Hyper-parameters of the Pixie random walk.
@@ -58,12 +86,18 @@ class WalkConfig:
                   sequential walker is n_walkers=1).
     chunk_steps:  steps fused per while-loop iteration between early-stop
                   checks (the paper checks per step; chunking trades slack
-                  for device efficiency).
+                  for device efficiency).  With backend="pallas" this is
+                  also the number of supersteps fused into one kernel
+                  launch.
     n_p, n_v:     early-stopping thresholds (>= n_p pins with >= n_v visits).
     bias_beta:    probability a step uses the personalized feature subrange
                   (PersonalizedNeighbor); 0 disables biasing (Algorithm 1).
     top_k:        number of recommendations extracted from the counter.
     count_boards: also accumulate board visit counts (for board recs, §5.3).
+    backend:      "xla" (reference two-level gathers + scatter-add counts)
+                  or "pallas" (fused multi-superstep kernel + tile-scan
+                  histogram counts).  Both produce bit-identical visits.
+    pallas_block_w: walkers per Pallas grid cell (None = auto).
     """
 
     n_steps: int = 100_000
@@ -75,6 +109,8 @@ class WalkConfig:
     bias_beta: float = 0.9
     top_k: int = 1_000
     count_boards: bool = False
+    backend: str = "xla"
+    pallas_block_w: Optional[int] = None
 
     def max_chunks(self) -> int:
         per_chunk = self.n_walkers * self.chunk_steps
@@ -99,126 +135,80 @@ class EventWalkResult(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# One chunk of steps for all walkers (shared by both modes)
+# One chunk of steps for all walkers (shared by both modes and backends)
 # ---------------------------------------------------------------------------
+
+
+def _chunk_rbits(key: Array, step_base: Array, chunk_steps: int, w: int) -> Array:
+    """Counter-based random bits for one chunk: (chunk_steps, w, 4) uint32.
+
+    Column 0 drives the restart decision (< alpha threshold), column 1 the
+    personalization decision (< beta threshold), columns 2/3 the board/pin
+    neighbour picks.  Keyed by absolute step index so a restarted run
+    replays the identical walk (fault-tolerance contract).
+    """
+    steps = step_base + jnp.arange(chunk_steps, dtype=jnp.int32)
+    keys = jax.vmap(lambda s: sampling.step_key(key, s))(steps)
+    return jax.vmap(lambda k: jax.random.bits(k, (w, 4)))(keys)
 
 
 def _walk_chunk(
     graph: PinBoardGraph,
-    curr: Array,          # (W,) int32 current pin per walker
+    curr: Array,             # (W,) int32 current pin per walker
     query_of_walker: Array,  # (W,) int32 restart target
-    user_feat: Array,     # () or (W,) int32 personalization feature
+    user_feat: Array,        # () or (W,) int32 personalization feature
+    slot_of_walker: Array,   # (W,) int32 query slot per walker
     key: Array,
-    step_base: Array,     # () int32 global step counter (for counter RNG)
+    step_base: Array,        # () int32 global step counter (for counter RNG)
     cfg: WalkConfig,
+    n_slots: int,
+    event_dtype,
     unroll: bool = False,
-) -> Tuple[Array, Array, Array]:
-    """Run cfg.chunk_steps steps; return (new_curr, visited, valid).
+) -> Tuple[Array, Array, Optional[Array]]:
+    """Run cfg.chunk_steps steps; return (new_curr, events, board_events).
 
-    visited/valid: (chunk_steps, W) — pin visited at each step and whether
-    the visit is countable (False when a dead-end forced a restart).
-    ``unroll`` replaces the fori_loop with a Python loop (cost-model mode).
+    events: (chunk_steps, W) packed ``slot * n_pins + pin`` in
+    ``event_dtype``, sentinel ``n_slots * n_pins`` for uncountable steps
+    (dead-end forced restarts).  board_events is None unless
+    cfg.count_boards.  Dispatches on cfg.backend; both engines consume the
+    same random bits and agree bit-for-bit.
+
+    The fused kernel packs events as int32, so graphs whose packed id
+    space needs int64 (n_slots * n_pins >= 2**31) silently fall back to
+    the xla engine — the results are identical either way.
     """
+    if cfg.backend not in BACKENDS:
+        raise ValueError(f"unknown walk backend {cfg.backend!r}; use {BACKENDS}")
     w = curr.shape[0]
-
-    def body(i, carry):
-        curr, visited, valid = carry
-        k = sampling.step_key(key, step_base + i)
-        k_restart, k_bias, k_board, k_pin = jax.random.split(k, 4)
-
-        # (1) restart with probability alpha (SampleWalkLength(alpha))
-        restart = jax.random.bernoulli(k_restart, p=cfg.alpha, shape=(w,))
-        pos = jnp.where(restart, query_of_walker, curr)
-
-        # (2) pin -> board hop, personalized with prob bias_beta
-        r_board = jax.random.randint(k_board, (w,), 0, jnp.iinfo(jnp.int32).max)
-        use_bias = jax.random.bernoulli(k_bias, p=cfg.bias_beta, shape=(w,))
-        if graph.p2b.feat_bounds is not None and cfg.bias_beta > 0.0:
-            board_biased = graph.p2b.biased_neighbor(pos, r_board, user_feat)
-            board_uni = graph.p2b.neighbor(pos, r_board)
-            board = jnp.where(use_bias, board_biased, board_uni)
-        else:
-            board = graph.p2b.neighbor(pos, r_board)
-
-        # (3) board -> pin hop
-        r_pin = jax.random.randint(k_pin, (w,), 0, jnp.iinfo(jnp.int32).max)
-        board_ok = board >= 0
-        board_local = jnp.where(board_ok, board - graph.n_pins, 0)
-        if graph.b2p.feat_bounds is not None and cfg.bias_beta > 0.0:
-            pin_biased = graph.b2p.biased_neighbor(board_local, r_pin, user_feat)
-            pin_uni = graph.b2p.neighbor(board_local, r_pin)
-            nxt = jnp.where(use_bias, pin_biased, pin_uni)
-        else:
-            nxt = graph.b2p.neighbor(board_local, r_pin)
-        ok = board_ok & (nxt >= 0)
-
-        # dead ends restart (uncounted), matching a fresh SampleWalkLength
-        new_curr = jnp.where(ok, nxt, query_of_walker).astype(curr.dtype)
-        visited = visited.at[i].set(jnp.where(ok, new_curr, 0))
-        valid = valid.at[i].set(ok)
-        return new_curr, visited, valid
-
-    visited0 = jnp.zeros((cfg.chunk_steps, w), dtype=curr.dtype)
-    valid0 = jnp.zeros((cfg.chunk_steps, w), dtype=bool)
-    if unroll:
-        carry = (curr, visited0, valid0)
-        for i in range(cfg.chunk_steps):
-            carry = body(i, carry)
-        return carry
-    return jax.lax.fori_loop(0, cfg.chunk_steps, body, (curr, visited0, valid0))
-
-
-def _walk_chunk_boards(
-    graph: PinBoardGraph,
-    curr: Array,
-    query_of_walker: Array,
-    user_feat: Array,
-    key: Array,
-    step_base: Array,
-    cfg: WalkConfig,
-) -> Tuple[Array, Array, Array, Array]:
-    """Like _walk_chunk but also records the intermediate board hop."""
-    w = curr.shape[0]
-
-    def body(i, carry):
-        curr, visited, valid, boards = carry
-        k = sampling.step_key(key, step_base + i)
-        k_restart, k_bias, k_board, k_pin = jax.random.split(k, 4)
-        restart = jax.random.bernoulli(k_restart, p=cfg.alpha, shape=(w,))
-        pos = jnp.where(restart, query_of_walker, curr)
-        r_board = jax.random.randint(k_board, (w,), 0, jnp.iinfo(jnp.int32).max)
-        use_bias = jax.random.bernoulli(k_bias, p=cfg.bias_beta, shape=(w,))
-        if graph.p2b.feat_bounds is not None and cfg.bias_beta > 0.0:
-            board = jnp.where(
-                use_bias,
-                graph.p2b.biased_neighbor(pos, r_board, user_feat),
-                graph.p2b.neighbor(pos, r_board),
-            )
-        else:
-            board = graph.p2b.neighbor(pos, r_board)
-        r_pin = jax.random.randint(k_pin, (w,), 0, jnp.iinfo(jnp.int32).max)
-        board_ok = board >= 0
-        board_local = jnp.where(board_ok, board - graph.n_pins, 0)
-        if graph.b2p.feat_bounds is not None and cfg.bias_beta > 0.0:
-            nxt = jnp.where(
-                use_bias,
-                graph.b2p.biased_neighbor(board_local, r_pin, user_feat),
-                graph.b2p.neighbor(board_local, r_pin),
-            )
-        else:
-            nxt = graph.b2p.neighbor(board_local, r_pin)
-        ok = board_ok & (nxt >= 0)
-        new_curr = jnp.where(ok, nxt, query_of_walker).astype(curr.dtype)
-        visited = visited.at[i].set(jnp.where(ok, new_curr, 0))
-        valid = valid.at[i].set(ok)
-        boards = boards.at[i].set(jnp.where(board_ok, board_local, 0))
-        return new_curr, visited, valid, boards
-
-    visited0 = jnp.zeros((cfg.chunk_steps, w), dtype=curr.dtype)
-    valid0 = jnp.zeros((cfg.chunk_steps, w), dtype=bool)
-    boards0 = jnp.zeros((cfg.chunk_steps, w), dtype=curr.dtype)
-    return jax.lax.fori_loop(
-        0, cfg.chunk_steps, body, (curr, visited0, valid0, boards0)
+    rbits = _chunk_rbits(key, step_base, cfg.chunk_steps, w)
+    feat = jnp.broadcast_to(jnp.asarray(user_feat, jnp.int32), (w,))
+    use_bias = (
+        graph.p2b.feat_bounds is not None
+        and graph.b2p.feat_bounds is not None
+        and cfg.bias_beta > 0.0
+    )
+    return ops.walk_chunk_fused(
+        curr,
+        query_of_walker,
+        feat,
+        slot_of_walker,
+        rbits,
+        graph.p2b.offsets,
+        graph.p2b.targets,
+        graph.b2p.offsets,
+        graph.b2p.targets,
+        graph.p2b.feat_bounds if use_bias else None,
+        graph.b2p.feat_bounds if use_bias else None,
+        n_pins=graph.n_pins,
+        n_slots=n_slots,
+        n_boards=graph.n_boards,
+        alpha_u32=_prob_u32(cfg.alpha),
+        beta_u32=_prob_u32(cfg.bias_beta),
+        count_boards=cfg.count_boards,
+        event_dtype=event_dtype,
+        unroll=unroll,
+        block_w=cfg.pallas_block_w,
+        use_kernel=(cfg.backend == "pallas" and event_dtype == jnp.int32),
     )
 
 
@@ -243,6 +233,12 @@ def pixie_random_walk(
     n_slots = query_pins.shape[0]
     n_pins = graph.n_pins
     w = cfg.n_walkers
+    idt = packed_event_dtype(n_slots, max(n_pins, graph.n_boards))
+    sentinel = jnp.asarray(n_slots * n_pins, idt)
+    bsentinel = jnp.asarray(n_slots * graph.n_boards, idt)
+    # the fused kernel and histogram kernel are int32-packed; int64-scale
+    # graphs fall back to the xla engine (identical results)
+    count_engine = cfg.backend if idt == jnp.int32 else "xla"
 
     valid_q = (query_pins >= 0) & (query_weights > 0)
     safe_q = jnp.where(valid_q, query_pins, 0)
@@ -277,30 +273,19 @@ def pixie_random_walk(
         step_base = it * cfg.chunk_steps
         walker_active = jnp.take(slot_active, slot_of_walker)
 
-        if cfg.count_boards:
-            curr2, visited, valid, boards = _walk_chunk_boards(
-                graph, curr, query_of_walker, user_feat, key, step_base, cfg
-            )
-        else:
-            curr2, visited, valid = _walk_chunk(
-                graph, curr, query_of_walker, user_feat, key, step_base, cfg
-            )
-            boards = None
+        curr2, events, bevents = _walk_chunk(
+            graph, curr, query_of_walker, user_feat, slot_of_walker,
+            key, step_base, cfg, n_slots, idt,
+        )
         curr = jnp.where(walker_active, curr2, curr)
-        valid = valid & walker_active[None, :]
-
-        # scatter events into flat (slot, pin) counts
-        idt = packed_event_dtype(n_slots, max(n_pins, graph.n_boards))
-        slot_b = jnp.broadcast_to(slot_of_walker[None, :], visited.shape)
-        flat_idx = slot_b.astype(idt) * n_pins + visited.astype(idt)
-        counts = counts.at[jnp.where(valid, flat_idx, 0)].add(
-            valid.astype(jnp.int32), mode="drop"
+        events = jnp.where(walker_active[None, :], events, sentinel)
+        counts = counter_lib.accumulate_packed_events(
+            counts, events, n_slots * n_pins, count_engine
         )
         if cfg.count_boards:
-            bflat = slot_b.astype(idt) * graph.n_boards + boards.astype(idt)
-            bvalid = valid  # board hop validity coincides with pin validity
-            bcounts = bcounts.at[jnp.where(bvalid, bflat, 0)].add(
-                bvalid.astype(jnp.int32), mode="drop"
+            bevents = jnp.where(walker_active[None, :], bevents, bsentinel)
+            bcounts = counter_lib.accumulate_packed_events(
+                bcounts, bevents, n_slots * graph.n_boards, count_engine
             )
 
         steps_taken = steps_taken + walkers_per_slot * slot_active.astype(
@@ -371,7 +356,11 @@ def recommend(
     key: Array,
     cfg: WalkConfig,
 ) -> Tuple[Array, Array]:
-    """Full query path: walk -> Eq. 3 booster -> top-k (scores, pin ids)."""
+    """Full query path: walk -> Eq. 3 booster -> top-k (scores, pin ids).
+
+    Dispatches on ``cfg.backend``: the whole walk loop runs on the fused
+    Pallas engine when ``backend="pallas"``.
+    """
     res = pixie_random_walk(graph, query_pins, query_weights, user_feat, key, cfg)
     boosted = counter_lib.boost_combine(res.counts)
     return counter_lib.topk_dense(boosted, cfg.top_k)
@@ -395,7 +384,14 @@ def pixie_walk_events(
 
     The event buffer plays the role of the paper's N-sized hash table;
     early stopping re-aggregates the buffer every ``check_every`` chunks.
+    With ``backend="pallas"`` the packed events come straight out of the
+    fused kernel and are appended to the buffer — no packing arithmetic in
+    XLA at all.
     """
+    if cfg.count_boards:
+        # event mode only buffers pin visits; don't make the chunk engine
+        # emit board events nobody reads
+        cfg = dataclasses.replace(cfg, count_boards=False)
     n_slots = query_pins.shape[0]
     n_pins = graph.n_pins
     w = cfg.n_walkers
@@ -430,16 +426,13 @@ def pixie_walk_events(
         curr, events, steps_taken, slot_active, it = state
         step_base = it * cfg.chunk_steps
         walker_active = jnp.take(slot_active, slot_of_walker)
-        curr2, visited, valid = _walk_chunk(
-            graph, curr, query_of_walker, user_feat, key, step_base, cfg
+        curr2, chunk_events, _ = _walk_chunk(
+            graph, curr, query_of_walker, user_feat, slot_of_walker,
+            key, step_base, cfg, n_slots, idt,
         )
         curr = jnp.where(walker_active, curr2, curr)
-        valid = valid & walker_active[None, :]
-        slot_b = jnp.broadcast_to(slot_of_walker[None, :], visited.shape)
         packed = jnp.where(
-            valid,
-            slot_b.astype(idt) * n_pins + visited.astype(idt),
-            sentinel,
+            walker_active[None, :], chunk_events, sentinel
         ).reshape(-1)
         events = jax.lax.dynamic_update_slice(events, packed, (it * per_chunk,))
         steps_taken = steps_taken + walkers_per_slot * slot_active.astype(
@@ -497,13 +490,12 @@ def pixie_walk_events_fixed(
     dry-run lowers this variant at n_chunks = 1 and 2 and extrapolates the
     linear-in-chunks cost to cfg.max_chunks() (launch/dryrun.py).
     """
+    if cfg.count_boards:
+        cfg = dataclasses.replace(cfg, count_boards=False)
     n_slots = query_pins.shape[0]
     n_pins = graph.n_pins
     w = cfg.n_walkers
-    per_chunk = w * cfg.chunk_steps
-    max_events = n_chunks * per_chunk
     idt = packed_event_dtype(n_slots, n_pins)
-    sentinel = jnp.asarray(n_slots * n_pins, dtype=idt)
 
     valid_q = (query_pins >= 0) & (query_weights > 0)
     safe_q = jnp.where(valid_q, query_pins, 0)
@@ -519,17 +511,11 @@ def pixie_walk_events_fixed(
 
     def body(curr, it):
         step_base = it * cfg.chunk_steps
-        curr2, visited, valid = _walk_chunk(
-            graph, curr, query_of_walker, user_feat, key, step_base, cfg,
-            unroll=unroll,
+        curr2, chunk_events, _ = _walk_chunk(
+            graph, curr, query_of_walker, user_feat, slot_of_walker,
+            key, step_base, cfg, n_slots, idt, unroll=unroll,
         )
-        slot_b = jnp.broadcast_to(slot_of_walker[None, :], visited.shape)
-        packed = jnp.where(
-            valid,
-            slot_b.astype(idt) * n_pins + visited.astype(idt),
-            sentinel,
-        ).reshape(-1)
-        return curr2, packed
+        return curr2, chunk_events.reshape(-1)
 
     curr, chunks = jax.lax.scan(
         body, query_of_walker, jnp.arange(n_chunks), unroll=True

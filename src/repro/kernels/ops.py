@@ -23,6 +23,8 @@ from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.embedding_bag import embedding_bag as _bag_kernel
 from repro.kernels.visit_counter import visit_counter as _counter_kernel
 from repro.kernels.walk_step import walk_step as _walk_kernel
+from repro.kernels.walk_step import DEFAULT_BLOCK_W as _DEFAULT_BLOCK_W
+from repro.kernels.walk_step import walk_steps_fused as _fused_kernel
 
 Array = jax.Array
 
@@ -68,6 +70,69 @@ def walk_step(
         curr, query, rbits,
         p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
         n_pins=n_pins, alpha_u32=alpha_u32,
+    )
+
+
+def walk_chunk_fused(
+    curr: Array,
+    query: Array,
+    feat: Array,
+    slot: Array,
+    rbits: Array,
+    p2b_offsets: Array,
+    p2b_targets: Array,
+    b2p_offsets: Array,
+    b2p_targets: Array,
+    p2b_feat_bounds: Optional[Array] = None,
+    b2p_feat_bounds: Optional[Array] = None,
+    *,
+    n_pins: int,
+    n_slots: int,
+    n_boards: int,
+    alpha_u32: int,
+    beta_u32: int,
+    count_boards: bool = False,
+    event_dtype=jnp.int32,
+    unroll: bool = False,
+    block_w: Optional[int] = None,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[Array, Array, Optional[Array]]:
+    """chunk_steps fused walk supersteps -> (next, events, board_events|None).
+
+    The kernel path runs ALL chunk_steps steps in one pallas_call with
+    walker state resident in VMEM; the oracle path is the same arithmetic
+    as two-level XLA gathers (this is the walk's "xla" backend).  Both
+    consume the same (chunk_steps, w, 4) uint32 counter-RNG bits, so their
+    emitted events agree bit-for-bit.
+    """
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        if event_dtype != jnp.int32:
+            raise ValueError(
+                "fused walk kernel emits int32 packed events; "
+                "use the xla backend for graphs needing int64 packing"
+            )
+        w = curr.shape[0]
+        if block_w is None:
+            # one grid cell per DEFAULT_BLOCK_W walkers when it divides the
+            # pool; otherwise a single block (small / odd walker counts)
+            block_w = _DEFAULT_BLOCK_W if w % _DEFAULT_BLOCK_W == 0 else w
+        return _fused_kernel(
+            curr, query, feat, slot, rbits,
+            p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
+            p2b_feat_bounds, b2p_feat_bounds,
+            n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
+            alpha_u32=alpha_u32, beta_u32=beta_u32,
+            count_boards=count_boards, block_w=block_w,
+        )
+    return ref.walk_chunk_ref(
+        curr, query, feat, slot, rbits,
+        p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
+        p2b_feat_bounds, b2p_feat_bounds,
+        n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
+        alpha_u32=alpha_u32, beta_u32=beta_u32,
+        count_boards=count_boards, event_dtype=event_dtype, unroll=unroll,
     )
 
 

@@ -70,6 +70,118 @@ def walk_step_ref(
 
 
 # ---------------------------------------------------------------------------
+# walk_chunk: chunk_steps fused supersteps, packed event emission (the XLA
+# twin of kernels/walk_step.walk_steps_fused — same random bits, same
+# arithmetic, so the two backends agree bit-for-bit)
+# ---------------------------------------------------------------------------
+
+_RMASK = 0x7FFFFFFF  # keep modulo operands non-negative int32
+
+
+def walk_chunk_ref(
+    curr: Array,          # (w,) int32 current pin per walker
+    query: Array,         # (w,) int32 restart pin per walker
+    feat: Array,          # (w,) int32 personalization feature per walker
+    slot: Array,          # (w,) int32 query-slot id per walker
+    rbits: Array,         # (chunk_steps, w, 4) uint32
+    p2b_offsets: Array,
+    p2b_targets: Array,
+    b2p_offsets: Array,
+    b2p_targets: Array,
+    p2b_feat_bounds: Optional[Array] = None,
+    b2p_feat_bounds: Optional[Array] = None,
+    *,
+    n_pins: int,
+    n_slots: int,
+    n_boards: int,
+    alpha_u32: int,
+    beta_u32: int,
+    count_boards: bool = False,
+    event_dtype=jnp.int32,
+    unroll: bool = False,
+) -> Tuple[Array, Array, Optional[Array]]:
+    """chunk_steps walk supersteps; two-level vectorized gathers per step.
+
+    Returns (next_curr (w,), events (chunk_steps, w), board_events | None).
+    Events are packed ``slot * n_pins + pin`` in ``event_dtype`` with
+    ``n_slots * n_pins`` as the invalid-step sentinel — identical packing to
+    the fused Pallas kernel.  ``unroll`` replaces the fori_loop over steps
+    with a Python loop (XLA cost-model mode, see launch/dryrun.py).
+    """
+    chunk_steps, w = rbits.shape[0], rbits.shape[1]
+    use_bias = p2b_feat_bounds is not None and beta_u32 > 0
+    idt = event_dtype
+    sentinel = jnp.asarray(n_slots * n_pins, idt)
+    bsentinel = jnp.asarray(n_slots * n_boards, idt)
+    curr = curr.astype(jnp.int32)
+    query = query.astype(jnp.int32)
+    slot = slot.astype(jnp.int32)
+    off_dt = p2b_offsets.dtype
+
+    def one_step(s, carry):
+        curr, events, bevents = carry
+        restart = rbits[s, :, 0] < jnp.uint32(alpha_u32)
+        use_b = rbits[s, :, 1] < jnp.uint32(beta_u32)
+        r_board = (rbits[s, :, 2] & jnp.uint32(_RMASK)).astype(jnp.int32)
+        r_pin = (rbits[s, :, 3] & jnp.uint32(_RMASK)).astype(jnp.int32)
+        pos = jnp.where(restart, query, curr)
+
+        start = jnp.take(p2b_offsets, pos)
+        deg = jnp.take(p2b_offsets, pos + 1) - start
+        base, span = start, jnp.maximum(deg, 1)
+        if use_bias:
+            lo = p2b_feat_bounds[pos, feat].astype(off_dt)
+            hi = p2b_feat_bounds[pos, feat + 1].astype(off_dt)
+            sub_ok = use_b & (hi > lo)
+            base = jnp.where(sub_ok, start + lo, base)
+            span = jnp.where(sub_ok, hi - lo, span)
+        board_ok = deg > 0
+        eidx = jnp.where(board_ok, base + (r_board % span).astype(off_dt), 0)
+        board = jnp.take(p2b_targets, eidx).astype(jnp.int32)
+        b_local = jnp.where(board_ok, board - n_pins, 0)
+
+        bstart = jnp.take(b2p_offsets, b_local)
+        bdeg = jnp.take(b2p_offsets, b_local + 1) - bstart
+        bbase, bspan = bstart, jnp.maximum(bdeg, 1)
+        if use_bias:
+            blo = b2p_feat_bounds[b_local, feat].astype(off_dt)
+            bhi = b2p_feat_bounds[b_local, feat + 1].astype(off_dt)
+            bsub_ok = use_b & (bhi > blo)
+            bbase = jnp.where(bsub_ok, bstart + blo, bbase)
+            bspan = jnp.where(bsub_ok, bhi - blo, bspan)
+        ok = board_ok & (bdeg > 0)
+        bidx = jnp.where(ok, bbase + (r_pin % bspan).astype(off_dt), 0)
+        pin = jnp.take(b2p_targets, bidx).astype(jnp.int32)
+
+        new_curr = jnp.where(ok, pin, query)
+        ev = jnp.where(
+            ok, slot.astype(idt) * n_pins + pin.astype(idt), sentinel
+        )
+        events = events.at[s].set(ev)
+        if count_boards:
+            bev = jnp.where(
+                ok,
+                slot.astype(idt) * n_boards + b_local.astype(idt),
+                bsentinel,
+            )
+            bevents = bevents.at[s].set(bev)
+        return new_curr, events, bevents
+
+    carry = (
+        curr,
+        jnp.full((chunk_steps, w), sentinel, idt),
+        jnp.full((chunk_steps, w) if count_boards else (1, 1), bsentinel, idt),
+    )
+    if unroll:
+        for s in range(chunk_steps):
+            carry = one_step(s, carry)
+    else:
+        carry = jax.lax.fori_loop(0, chunk_steps, one_step, carry)
+    new_curr, events, bevents = carry
+    return new_curr, events, bevents if count_boards else None
+
+
+# ---------------------------------------------------------------------------
 # embedding_bag: fixed-bag-size gather + pool (JAX has no native EmbeddingBag)
 # ---------------------------------------------------------------------------
 

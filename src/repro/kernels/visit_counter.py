@@ -17,6 +17,14 @@ so each tile block accumulates across event chunks in place.
 VMEM budget per program: tile (TILE,) int32 + chunk (CHUNK,) int32 + the
 (CHUNK, TILE) one-hot intermediate = 4*(512 + 2048 + 512*2048) B ~ 4.2 MiB,
 comfortably inside the ~16 MiB v5e VMEM.
+
+This kernel is the aggregation half of the fused walk engine
+(``WalkConfig(backend="pallas")``): ``kernels/walk_step.walk_steps_fused``
+emits packed ``slot * n_pins + pin`` events (sentinel = ``n_slots * n_pins``,
+conveniently out-of-range here, so invalid steps drop out of the histogram
+for free) and ``core/counter.accumulate_packed_events`` histograms each
+chunk over ``n_slots * n_pins`` bins with this kernel instead of XLA
+scatter-add.
 """
 
 from __future__ import annotations

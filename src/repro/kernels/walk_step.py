@@ -1,29 +1,56 @@
-"""Pallas TPU kernel: one fused Pixie walk superstep for a walker block.
+"""Pallas TPU kernels for the Pixie walk inner loop.
+
+Two generations of kernel live here:
+
+* ``walk_step``       — the original one-superstep-per-``pallas_call`` kernel
+                        (kept as the minimal reference kernel; one launch per
+                        walk step).
+* ``walk_steps_fused``— the serving-path engine: ONE ``pallas_call`` executes
+                        ``chunk_steps`` supersteps.  Walker state (``curr``,
+                        per-walker restart pin, per-walker personalization
+                        feature, query-slot id) is loaded into VMEM once and
+                        stays resident across every step of the chunk; only
+                        the unavoidable CSR gathers touch HBM.  Each step the
+                        kernel also *emits* packed ``slot * n_pins + pin``
+                        visit events straight into a bounded
+                        ``(chunk_steps, w)`` event buffer (sentinel =
+                        ``n_slots * n_pins`` for invalid / dead-end steps), so
+                        the host-side walk loop never scatter-adds: events are
+                        aggregated afterwards by the tile-scan
+                        ``visit_counter`` kernel.
 
 The paper's inner loop (Algorithm 2 lines 6-13) is three dependent random
 memory accesses per step: offsets[pin] -> targets[...] (board), then
 offsets[board] -> targets[...] (pin).  On TPU the CSR arrays live in HBM
-(memory_space=ANY — gigabytes, never blockable into VMEM), the walker state
-is tiled into VMEM, and the two-level gather is issued per walker from
-inside the kernel.  Fusing restart + both hops + visit emission into one
-kernel keeps all walker state resident in VMEM across the superstep, which
-is the point: the paper's "walk never leaves the machine" becomes "walker
-state never leaves VMEM; only the unavoidable CSR gathers touch HBM".
+(memory_space=ANY — gigabytes, never blockable into VMEM); the fused kernel
+keeps everything *else* out of HBM: random bits are blocked into VMEM with
+the walker state, all decision logic (restart select, bias select, modulo,
+event packing) is vectorized across the walker block, and only the
+per-walker two-level CSR gathers are issued scalar-by-scalar (they are
+data-dependent random access — there is no vector shape for them).  The
+paper's "walk never leaves the machine" becomes "walker state never leaves
+VMEM between supersteps; one kernel launch per *chunk*, not per step".
 
 Random bits are generated *outside* (counter-based threefry, one uint32
-triple per walker-step) so the kernel is a pure function and byte-for-byte
+quadruple per walker-step) so the kernel is a pure function and byte-for-byte
 reproducible across restarts — the fault-tolerance contract of the runtime.
+The XLA reference backend (`kernels/ref.walk_chunk_ref`) consumes the *same*
+bits with the same arithmetic, which is what makes the two backends
+bit-for-bit comparable (tests/test_walk_backends.py).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_W = 256  # walkers per grid cell
+
+_RMASK = 0x7FFFFFFF  # keep modulo operands non-negative int32
 
 
 def _walk_step_kernel(
@@ -136,3 +163,240 @@ def walk_step(
         b2p_offsets.astype(jnp.int32),
         b2p_targets.astype(jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-superstep kernel — the serving hot path
+# ---------------------------------------------------------------------------
+
+
+def _walk_steps_fused_kernel(
+    *refs,
+    n_pins: int,
+    n_slots: int,
+    n_boards: int,
+    alpha_u32: int,
+    beta_u32: int,
+    chunk_steps: int,
+    block_w: int,
+    use_bias: bool,
+    count_boards: bool,
+):
+    """chunk_steps supersteps for one walker block, state resident in VMEM.
+
+    Ref layout (inputs then outputs, bias bounds present only if use_bias):
+      curr, query, feat, slot, rbits,
+      p2b_off, p2b_tgt, b2p_off, b2p_tgt, [p2b_fb, b2p_fb],
+      -> next, events, [board_events]
+    """
+    (curr_ref, query_ref, feat_ref, slot_ref, rbits_ref,
+     p2b_off_ref, p2b_tgt_ref, b2p_off_ref, b2p_tgt_ref) = refs[:9]
+    i = 9
+    if use_bias:
+        p2b_fb_ref, b2p_fb_ref = refs[9:11]
+        i = 11
+    next_ref, events_ref = refs[i:i + 2]
+    bevents_ref = refs[i + 2] if count_boards else None
+
+    # Walker state + the whole chunk's random bits: loaded into
+    # VREGs/VMEM once, resident for all chunk_steps supersteps.
+    query = query_ref[...]
+    slot = slot_ref[...]
+    feat = feat_ref[...]
+    rbits = rbits_ref[...]                       # (chunk_steps, block_w, 4)
+    sentinel = jnp.int32(n_slots * n_pins)
+    # board sentinel only exists when boards are packed (see wrapper guard)
+    bsentinel = jnp.int32(n_slots * n_boards if count_boards else 0)
+
+    def one_step(s, carry):
+        curr, events, bevents = carry
+        # vectorized decision logic across the walker block
+        restart = rbits[s, :, 0] < jnp.uint32(alpha_u32)
+        use_b = rbits[s, :, 1] < jnp.uint32(beta_u32)
+        r_board = (rbits[s, :, 2] & jnp.uint32(_RMASK)).astype(jnp.int32)
+        r_pin = (rbits[s, :, 3] & jnp.uint32(_RMASK)).astype(jnp.int32)
+        pos = jnp.where(restart, query, curr)
+
+        # per-walker two-level CSR gather (data-dependent random access)
+        def walker(i, acc):
+            nxt, vis, bvis, okv = acc
+            p = pos[i]
+            off = p2b_off_ref[pl.ds(p, 2)]
+            start, deg = off[0], off[1] - off[0]
+            base, span = start, jnp.maximum(deg, 1)
+            if use_bias:
+                fb = p2b_fb_ref[pl.ds(p, 1), pl.ds(feat[i], 2)][0]
+                sub_ok = use_b[i] & (fb[1] > fb[0])
+                base = jnp.where(sub_ok, start + fb[0], base)
+                span = jnp.where(sub_ok, fb[1] - fb[0], span)
+            board_ok = deg > 0
+            eidx = jnp.where(board_ok, base + r_board[i] % span, 0)
+            board = p2b_tgt_ref[pl.ds(eidx, 1)][0]
+            b_local = jnp.where(board_ok, board - n_pins, 0)
+
+            boff = b2p_off_ref[pl.ds(b_local, 2)]
+            bstart, bdeg = boff[0], boff[1] - boff[0]
+            bbase, bspan = bstart, jnp.maximum(bdeg, 1)
+            if use_bias:
+                bfb = b2p_fb_ref[pl.ds(b_local, 1), pl.ds(feat[i], 2)][0]
+                bsub_ok = use_b[i] & (bfb[1] > bfb[0])
+                bbase = jnp.where(bsub_ok, bstart + bfb[0], bbase)
+                bspan = jnp.where(bsub_ok, bfb[1] - bfb[0], bspan)
+            ok = board_ok & (bdeg > 0)
+            bidx = jnp.where(ok, bbase + r_pin[i] % bspan, 0)
+            pin = b2p_tgt_ref[pl.ds(bidx, 1)][0]
+
+            nxt = nxt.at[i].set(jnp.where(ok, pin, query[i]))
+            vis = vis.at[i].set(pin)
+            bvis = bvis.at[i].set(b_local)
+            okv = okv.at[i].set(ok)
+            return nxt, vis, bvis, okv
+
+        init = (
+            jnp.zeros((block_w,), jnp.int32),
+            jnp.zeros((block_w,), jnp.int32),
+            jnp.zeros((block_w,), jnp.int32),
+            jnp.zeros((block_w,), jnp.bool_),
+        )
+        nxt, vis, bvis, okv = jax.lax.fori_loop(0, block_w, walker, init)
+
+        # vectorized in-kernel event emission: packed (slot, pin) ids
+        ev = jnp.where(okv, slot * n_pins + vis, sentinel)
+        events = events.at[s].set(ev)
+        if count_boards:
+            bev = jnp.where(okv, slot * n_boards + bvis, bsentinel)
+            bevents = bevents.at[s].set(bev)
+        return nxt, events, bevents
+
+    carry0 = (
+        curr_ref[...],
+        jnp.full((chunk_steps, block_w), sentinel, jnp.int32),
+        jnp.full(
+            (chunk_steps, block_w) if count_boards else (1, 1),
+            bsentinel, jnp.int32,
+        ),
+    )
+    curr, events, bevents = jax.lax.fori_loop(
+        0, chunk_steps, one_step, carry0
+    )
+    next_ref[...] = curr
+    events_ref[...] = events
+    if count_boards:
+        bevents_ref[...] = bevents
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_pins", "n_slots", "n_boards", "alpha_u32", "beta_u32",
+        "count_boards", "block_w", "interpret",
+    ),
+)
+def walk_steps_fused(
+    curr: jax.Array,          # (w,) int32 current pin per walker
+    query: jax.Array,         # (w,) int32 restart pin per walker
+    feat: jax.Array,          # (w,) int32 personalization feature per walker
+    slot: jax.Array,          # (w,) int32 query-slot id per walker
+    rbits: jax.Array,         # (chunk_steps, w, 4) uint32
+    p2b_offsets: jax.Array,   # (n_pins + 1,)
+    p2b_targets: jax.Array,   # (e,)
+    b2p_offsets: jax.Array,   # (n_boards + 1,)
+    b2p_targets: jax.Array,   # (e,)
+    p2b_feat_bounds: Optional[jax.Array] = None,  # (n_pins, n_feats + 1)
+    b2p_feat_bounds: Optional[jax.Array] = None,  # (n_boards, n_feats + 1)
+    *,
+    n_pins: int,
+    n_slots: int,
+    n_boards: int,
+    alpha_u32: int,
+    beta_u32: int,
+    count_boards: bool = False,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool | None = None,
+):
+    """``chunk_steps`` fused walk supersteps in ONE ``pallas_call``.
+
+    rbits columns: 0 = restart draw (< alpha_u32 restarts), 1 = bias draw
+    (< beta_u32 uses the personalized subrange), 2 = board pick, 3 = pin
+    pick.  Returns ``(next_curr (w,), events (chunk_steps, w))`` plus
+    ``board_events (chunk_steps, w)`` when ``count_boards``; events are
+    packed ``slot * n_pins + pin`` int32 with ``n_slots * n_pins`` as the
+    invalid-step sentinel (board events: ``slot * n_boards + board_local``,
+    sentinel ``n_slots * n_boards``).  Aggregate with the tile-scan
+    ``visit_counter`` kernel — no scatters anywhere on the hot path.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    chunk_steps, w = rbits.shape[0], rbits.shape[1]
+    if w % block_w != 0:
+        raise ValueError(f"n_walkers {w} must be a multiple of {block_w}")
+    # board ids are only packed when count_boards; don't reject a
+    # pin-only walk because the board id space would overflow
+    packed_max = n_slots * (max(n_pins, n_boards) if count_boards else n_pins)
+    if packed_max + 1 >= 2 ** 31:
+        raise ValueError(
+            "fused walk kernel packs events as int32; largest packed id "
+            f"{packed_max} overflows (n_slots={n_slots}, n_pins={n_pins}"
+            + (f", n_boards={n_boards})" if count_boards else ")")
+        )
+    use_bias = p2b_feat_bounds is not None and beta_u32 > 0
+    grid = (w // block_w,)
+    blk = lambda i: (i,)
+    any_spec = pl.BlockSpec(memory_space=pl.ANY)
+
+    in_specs = [
+        pl.BlockSpec((block_w,), blk),                       # curr
+        pl.BlockSpec((block_w,), blk),                       # query
+        pl.BlockSpec((block_w,), blk),                       # feat
+        pl.BlockSpec((block_w,), blk),                       # slot
+        pl.BlockSpec((chunk_steps, block_w, 4), lambda i: (0, i, 0)),
+        any_spec, any_spec, any_spec, any_spec,              # CSR arrays
+    ]
+    args = [
+        curr.astype(jnp.int32),
+        query.astype(jnp.int32),
+        feat.astype(jnp.int32),
+        slot.astype(jnp.int32),
+        rbits.astype(jnp.uint32),
+        p2b_offsets.astype(jnp.int32),
+        p2b_targets.astype(jnp.int32),
+        b2p_offsets.astype(jnp.int32),
+        b2p_targets.astype(jnp.int32),
+    ]
+    if use_bias:
+        in_specs += [any_spec, any_spec]
+        args += [
+            p2b_feat_bounds.astype(jnp.int32),
+            b2p_feat_bounds.astype(jnp.int32),
+        ]
+
+    ev_spec = pl.BlockSpec((chunk_steps, block_w), lambda i: (0, i))
+    ev_sds = jax.ShapeDtypeStruct((chunk_steps, w), jnp.int32)
+    out_specs = [pl.BlockSpec((block_w,), blk), ev_spec]
+    out_shape = [jax.ShapeDtypeStruct((w,), jnp.int32), ev_sds]
+    if count_boards:
+        out_specs.append(ev_spec)
+        out_shape.append(ev_sds)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _walk_steps_fused_kernel,
+            n_pins=n_pins,
+            n_slots=n_slots,
+            n_boards=n_boards,
+            alpha_u32=alpha_u32,
+            beta_u32=beta_u32,
+            chunk_steps=chunk_steps,
+            block_w=block_w,
+            use_bias=use_bias,
+            count_boards=count_boards,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if count_boards:
+        return out[0], out[1], out[2]
+    return out[0], out[1], None

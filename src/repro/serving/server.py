@@ -59,7 +59,13 @@ class PixieServer:
         batch_size: int = 8,
         n_slots: int = 8,
         seed: int = 0,
+        backend: Optional[str] = None,
     ):
+        """``backend`` overrides cfg.backend ("xla" | "pallas") so a fleet
+        can flip every replica onto the fused Pallas walk engine at server
+        construction; recommendations are bit-identical either way."""
+        if backend is not None and backend != cfg.backend:
+            cfg = dataclasses.replace(cfg, backend=backend)
         self.graph = graph
         self.cfg = cfg
         self.batch_size = batch_size

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.data.pipeline import ClickLogPipeline, SeqRecPipeline, TokenPipeline
 from repro.models import embedding as emb_lib

@@ -201,17 +201,18 @@ def test_compressed_psum_error_feedback():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
-    mesh = jax.make_mesh(
-        (1,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    from repro.launch.mesh import make_mesh_compat, set_mesh_compat
+
+    # the pinned JAX has neither jax.sharding.AxisType nor jax.set_mesh;
+    # shard_map receives the mesh explicitly so the ambient mesh is optional
+    mesh = make_mesh_compat((1,), ("data",))
     g = {"w": jax.random.normal(jax.random.key(1), (64,))}
     r = compression.init_residual(g)
 
     def f(gg, rr):
         return compression.compressed_psum(gg, rr, "data")
 
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         out, new_r = shard_map(
             f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
             check_rep=False,

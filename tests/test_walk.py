@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core import counter as counter_lib
 from repro.core import sampling, walk as walk_lib

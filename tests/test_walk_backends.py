@@ -1,0 +1,224 @@
+"""Fused Pallas walk engine vs the XLA reference engine.
+
+The contract under test (core/walk.py): both backends consume the same
+counter-RNG bits and do the same integer arithmetic, so for the same key
+they must agree BIT-FOR-BIT — visit counts, emitted events, board counts,
+and final recommendations — while the pallas engine fuses all
+``chunk_steps`` supersteps of a chunk into a single ``pallas_call``.
+
+Kernels run in interpret mode on CPU hosts (the wrappers auto-detect)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import service, walk as walk_lib
+from repro.graphs.synthetic import small_test_graph, top_degree_pins
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def sg():
+    return small_test_graph()
+
+
+def _cfgs(**kw):
+    kw = {
+        "n_steps": 3_000, "n_walkers": 128, "chunk_steps": 8,
+        "n_p": 10**9, "n_v": 10**9, **kw,
+    }
+    base = walk_lib.WalkConfig(**kw)
+    return base, dataclasses.replace(base, backend="pallas")
+
+
+def _queries(sg, n_slots=4):
+    qs = top_degree_pins(sg, 2)
+    qp = jnp.full((n_slots,), -1, jnp.int32).at[:2].set(
+        jnp.asarray([int(qs[0]), int(qs[1])], jnp.int32)
+    )
+    qw = jnp.zeros((n_slots,), jnp.float32).at[:2].set(
+        jnp.asarray([1.0, 0.5])
+    )
+    return qp, qw
+
+
+@pytest.mark.parametrize("bias_beta", [0.0, 0.9])
+def test_dense_counts_bit_identical(sg, bias_beta):
+    g = sg.graph
+    qp, qw = _queries(sg)
+    cfg_x, cfg_p = _cfgs(bias_beta=bias_beta)
+    key = jax.random.key(11)
+    rx = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(1, jnp.int32), key, cfg_x
+    )
+    rp = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(1, jnp.int32), key, cfg_p
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rx.counts), np.asarray(rp.counts)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rx.steps_taken), np.asarray(rp.steps_taken)
+    )
+    assert int(rx.counts.sum()) > 0  # walk actually walked
+
+
+def test_event_buffers_bit_identical(sg):
+    g = sg.graph
+    qp, qw = _queries(sg)
+    cfg_x, cfg_p = _cfgs()
+    key = jax.random.key(5)
+    ex = walk_lib.pixie_walk_events(
+        g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg_x, check_every=10**9
+    )
+    ep = walk_lib.pixie_walk_events(
+        g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg_p, check_every=10**9
+    )
+    np.testing.assert_array_equal(np.asarray(ex.events), np.asarray(ep.events))
+    assert int(ex.chunks_run) == int(ep.chunks_run)
+
+
+def test_board_counts_bit_identical(sg):
+    g = sg.graph
+    qp, qw = _queries(sg)
+    cfg_x, cfg_p = _cfgs(count_boards=True)
+    key = jax.random.key(2)
+    rx = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(1, jnp.int32), key, cfg_x
+    )
+    rp = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(1, jnp.int32), key, cfg_p
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rx.board_counts), np.asarray(rp.board_counts)
+    )
+
+
+def test_recommendations_identical_through_serve_batch(sg):
+    """The whole batched serving path returns the same pins either way."""
+    g = sg.graph
+    qp, qw = _queries(sg)
+    pins = jnp.stack([qp, qp])
+    weights = jnp.stack([qw, qw])
+    feats = jnp.asarray([0, 1], jnp.int32)
+    cfg_x, _ = _cfgs(top_k=20)
+    key = jax.random.key(9)
+    sx, ix = service.serve_batch(g, pins, weights, feats, key, cfg_x)
+    sp, ip = service.serve_batch(
+        g, pins, weights, feats, key, cfg_x, backend="pallas"
+    )
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(ip))
+    np.testing.assert_allclose(np.asarray(sx), np.asarray(sp), rtol=1e-6)
+
+
+def test_dead_end_restarts_agree():
+    """Walkers on a degree-0 pin restart at the query, visit uncounted —
+    identically on both backends."""
+    # pin 0 has no boards; pin 1 connects to board 0 <-> pins {0, 1}
+    from repro.core.graph import CSR, PinBoardGraph
+
+    p2b = CSR(
+        offsets=jnp.asarray([0, 0, 2], jnp.int32),
+        targets=jnp.asarray([2, 2], jnp.int32),
+    )
+    b2p = CSR(
+        offsets=jnp.asarray([0, 2], jnp.int32),
+        targets=jnp.asarray([0, 1], jnp.int32),
+    )
+    g = PinBoardGraph(p2b=p2b, b2p=b2p, n_pins=2, n_boards=1, max_pin_degree=2)
+    qp = jnp.asarray([0], jnp.int32)   # query IS the dead end
+    qw = jnp.ones((1,), jnp.float32)
+    cfg_x, cfg_p = _cfgs(n_steps=512, n_walkers=64, bias_beta=0.0)
+    key = jax.random.key(0)
+    rx = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg_x
+    )
+    rp = walk_lib.pixie_random_walk(
+        g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg_p
+    )
+    np.testing.assert_array_equal(np.asarray(rx.counts), np.asarray(rp.counts))
+    # every step restarted at the dead-end query: nothing countable
+    assert int(rx.counts.sum()) == 0
+    assert int(rp.counts.sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# chunk-level checks on the fused op itself
+# ---------------------------------------------------------------------------
+
+
+def _chunk_args(key, chunk_steps=8, w=128, n_pins=50, n_boards=12,
+                n_slots=4, n_edges=400):
+    kp, kb, kr = jax.random.split(key, 3)
+    pins = np.asarray(jax.random.randint(kp, (n_edges,), 0, n_pins))
+    boards = np.asarray(jax.random.randint(kb, (n_edges,), 0, n_boards))
+    order = np.argsort(pins, kind="stable")
+    p2b_off = np.zeros(n_pins + 1, np.int32)
+    np.cumsum(np.bincount(pins, minlength=n_pins), out=p2b_off[1:])
+    p2b_tgt = (boards[order] + n_pins).astype(np.int32)
+    order_b = np.argsort(boards, kind="stable")
+    b2p_off = np.zeros(n_boards + 1, np.int32)
+    np.cumsum(np.bincount(boards, minlength=n_boards), out=b2p_off[1:])
+    b2p_tgt = pins[order_b].astype(np.int32)
+    k1, k2, k3 = jax.random.split(kr, 3)
+    curr = jax.random.randint(k1, (w,), 0, n_pins, dtype=jnp.int32)
+    query = jax.random.randint(k2, (w,), 0, n_pins, dtype=jnp.int32)
+    rbits = jax.random.bits(k3, (chunk_steps, w, 4), dtype=jnp.uint32)
+    slot = jnp.arange(w, dtype=jnp.int32) % n_slots
+    feat = jnp.zeros((w,), jnp.int32)
+    return dict(
+        curr=curr, query=query, feat=feat, slot=slot, rbits=rbits,
+        p2b_offsets=jnp.asarray(p2b_off), p2b_targets=jnp.asarray(p2b_tgt),
+        b2p_offsets=jnp.asarray(b2p_off), b2p_targets=jnp.asarray(b2p_tgt),
+        n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
+    )
+
+
+@pytest.mark.parametrize("alpha_u32", [0, 2**31, 2**32 - 1])
+def test_fused_chunk_kernel_matches_ref(alpha_u32):
+    a = _chunk_args(jax.random.key(alpha_u32 % 101))
+    common = dict(alpha_u32=alpha_u32, beta_u32=0, count_boards=True)
+    got = ops.walk_chunk_fused(use_kernel=True, **a, **common)
+    want = ops.walk_chunk_fused(use_kernel=False, **a, **common)
+    for g_, w_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+def test_one_pallas_call_covers_all_chunk_steps():
+    """The fusion claim itself: a chunk of `chunk_steps` supersteps lowers
+    to exactly ONE pallas_call (the seed kernel needed one per step)."""
+    chunk_steps = 8
+    a = _chunk_args(jax.random.key(3), chunk_steps=chunk_steps)
+
+    def chunk(curr, rbits):
+        return ops.walk_chunk_fused(
+            curr, a["query"], a["feat"], a["slot"], rbits,
+            a["p2b_offsets"], a["p2b_targets"],
+            a["b2p_offsets"], a["b2p_targets"],
+            n_pins=a["n_pins"], n_slots=a["n_slots"], n_boards=a["n_boards"],
+            alpha_u32=2**31, beta_u32=0, use_kernel=True,
+        )
+
+    jaxpr = jax.make_jaxpr(chunk)(a["curr"], a["rbits"])
+    n_calls = str(jaxpr).count("pallas_call")
+    assert n_calls == 1, f"expected 1 fused pallas_call, found {n_calls}"
+    # and that single call really emits chunk_steps steps of events
+    _, events, _ = chunk(a["curr"], a["rbits"])
+    assert events.shape == (chunk_steps, a["curr"].shape[0])
+    sentinel = a["n_slots"] * a["n_pins"]
+    ev = np.asarray(events)
+    assert (ev[ev < sentinel] >= 0).all()
+    assert (ev <= sentinel).all()
+
+
+def test_chunk_ref_unroll_matches_loop():
+    """Cost-model mode (python-unrolled steps) is the same function."""
+    a = _chunk_args(jax.random.key(7))
+    common = dict(alpha_u32=2**30, beta_u32=0, use_kernel=False)
+    got = ops.walk_chunk_fused(unroll=True, **a, **common)
+    want = ops.walk_chunk_fused(unroll=False, **a, **common)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))

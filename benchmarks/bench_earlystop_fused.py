@@ -1,0 +1,152 @@
+"""Early-stop counting sweep: fused in-VMEM tally vs full re-histogram.
+
+Quantifies the tentpole of the fused early-stop path on two levels:
+
+1. **Counting micro-bench** — the per-while-iteration cost of the dense
+   engine's counting step, old formulation (accumulate the chunk, then
+   recount ``n_high`` by reducing the whole ``n_slots * n_pins`` buffer)
+   vs the fused API (``accumulate_packed_events_with_high`` carries the
+   tally incrementally), on both counting engines.  This is the exact
+   computation Algorithm 3 runs between chunks at serving time.
+2. **Walk sweep** — full ``pixie_random_walk`` with early stopping active
+   across (n_v, n_p) thresholds, xla vs pallas, checking the engines stay
+   bit-identical on counts / n_high / steps_taken and recording timings.
+
+On CPU hosts the Pallas numbers run in interpret mode (plumbing, not kernel
+speed) — regress on the agreement verdicts, not the CPU ratios.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import counter as counter_lib
+from repro.core import walk as walk_lib
+from repro.graphs.synthetic import SyntheticGraphConfig, generate
+
+
+def _counting_microbench(seed: int) -> Dict:
+    """One dense-loop counting iteration: old recount vs fused tally."""
+    n_slots, n_pins, n_v = 8, 20_000, 4
+    n_bins = n_slots * n_pins
+    n_events = 8 * 512  # chunk_steps * n_walkers worth of packed events
+    kc, ke = jax.random.split(jax.random.key(seed))
+    counts = jax.random.randint(kc, (n_bins,), 0, n_v + 1, dtype=jnp.int32)
+    events = jax.random.randint(
+        ke, (n_events,), 0, n_bins + 1, dtype=jnp.int32
+    )
+    high = counter_lib.n_high_visited(counts.reshape(n_slots, n_pins), n_v)
+
+    out: Dict = {"n_slots": n_slots, "n_pins": n_pins,
+                 "n_events": n_events, "paths": {}}
+    agree = True
+    for backend in ("xla", "pallas"):
+
+        @jax.jit
+        def old_path(c, e, backend=backend):
+            c2 = counter_lib.accumulate_packed_events(c, e, n_bins, backend)
+            return c2, counter_lib.n_high_visited(
+                c2.reshape(n_slots, n_pins), n_v
+            )
+
+        @jax.jit
+        def fused_path(c, h, e, backend=backend):
+            return counter_lib.accumulate_packed_events_with_high(
+                c, h, e, n_slots, n_pins, n_v, backend
+            )
+
+        t_old = timed(old_path, counts, events, warmup=1, iters=5)
+        t_new = timed(fused_path, counts, high, events, warmup=1, iters=5)
+        c_old, h_old = old_path(counts, events)
+        c_new, h_new = fused_path(counts, high, events)
+        agree &= bool(
+            np.array_equal(np.asarray(c_old), np.asarray(c_new))
+            and np.array_equal(np.asarray(h_old), np.asarray(h_new))
+        )
+        out["paths"][backend] = {
+            "recount_ms": round(t_old["mean_ms"], 3),
+            "fused_ms": round(t_new["mean_ms"], 3),
+            "fused_speedup_x": round(
+                t_old["mean_ms"] / max(t_new["mean_ms"], 1e-9), 3
+            ),
+        }
+    out["fused_matches_naive"] = agree
+    return out
+
+
+def _walk_sweep(seed: int) -> Dict:
+    sg = generate(SyntheticGraphConfig(
+        n_pins=4_000, n_boards=400, n_topics=8, n_langs=2, seed=seed
+    ))
+    g = sg.graph
+    degs = np.asarray(g.p2b.degrees())
+    q = int(np.argmax(degs))
+    qp = jnp.asarray([q], jnp.int32)
+    qw = jnp.ones((1,), jnp.float32)
+    base = walk_lib.WalkConfig(
+        n_steps=8_000, n_walkers=256, chunk_steps=8, bias_beta=0.0
+    )
+    key = jax.random.key(seed)
+
+    sweep = []
+    agree = True
+    for n_v, n_p in ((2, 200), (4, 500), (4, 2_000)):
+        cfg = dataclasses.replace(base, n_v=n_v, n_p=n_p)
+        row: Dict = {"n_v": n_v, "n_p": n_p, "backends": {}}
+        results = {}
+        for backend in ("xla", "pallas"):
+            bcfg = dataclasses.replace(cfg, backend=backend)
+
+            def fn(k, bcfg=bcfg):
+                return walk_lib.pixie_random_walk(g, qp, qw,
+                                                  jnp.asarray(0, jnp.int32),
+                                                  k, bcfg)
+
+            t = timed(fn, key, warmup=1, iters=2)
+            res = fn(key)
+            results[backend] = res
+            row["backends"][backend] = {"walk_ms": round(t["mean_ms"], 2)}
+        rx, rp = results["xla"], results["pallas"]
+        agree &= bool(
+            np.array_equal(np.asarray(rx.counts), np.asarray(rp.counts))
+            and np.array_equal(np.asarray(rx.n_high), np.asarray(rp.n_high))
+            and np.array_equal(
+                np.asarray(rx.steps_taken), np.asarray(rp.steps_taken)
+            )
+        )
+        row["steps_taken"] = int(np.asarray(rx.steps_taken)[0])
+        row["n_high"] = int(np.asarray(rx.n_high)[0])
+        sweep.append(row)
+    # tighter thresholds must stop earlier AND the tight row must actually
+    # fire (a dead tally running every row to full budget must not pass)
+    early_stop_saves = (
+        sweep[0]["steps_taken"] < base.n_steps
+        and sweep[0]["steps_taken"] <= sweep[-1]["steps_taken"]
+    )
+    return {
+        "graph": {"n_pins": g.n_pins, "n_boards": g.n_boards},
+        "sweep": sweep,
+        "both_backends_agree": agree,
+        "early_stop_saves_steps": bool(early_stop_saves),
+    }
+
+
+def run(seed: int = 0) -> Dict:
+    out: Dict = {
+        "host_backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "counting": _counting_microbench(seed),
+        "walk": _walk_sweep(seed),
+    }
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -9,10 +9,18 @@ Numbers recorded on a CPU host run the Pallas kernels in *interpret mode* —
 they measure correctness plumbing, not kernel speed (`host_backend` in the
 output says which).  On a TPU host the same file records the real fused-kernel
 speedup.
+
+The ``earlystop`` section runs the same batch with Algorithm 3's early
+stopping ACTIVE, exercising the fused in-VMEM ``n_high`` tally on the
+serving path; ``earlystop_backends_agree`` asserts both engines return
+bit-identical ids, steps_taken, and n_high — that (plus
+``both_backends_agree``) is the regression signal on CPU hosts, not the
+interpret-mode timing ratio.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -87,6 +95,36 @@ def run(seed: int = 0) -> Dict:
     x_ms = out["backends"]["xla"]["batch_ms"]
     p_ms = out["backends"]["pallas"]["batch_ms"]
     out["pallas_speedup_x"] = round(x_ms / max(p_ms, 1e-9), 3)
+
+    # early stopping active: the fused in-VMEM n_high tally on the hot path
+    es_cfg = dataclasses.replace(base, n_p=60, n_v=3)
+    es = {"config": {"n_p": es_cfg.n_p, "n_v": es_cfg.n_v}, "backends": {}}
+    es_out = {}
+    for backend in ("xla", "pallas"):
+        fn = jax.jit(
+            lambda k, b=backend: service.serve_batch(
+                g, pins_j, weights_j, feats, k, es_cfg, backend=b,
+                with_stats=True,
+            )
+        )
+        t = timed(fn, key, warmup=1, iters=3)
+        _, ids, steps, n_high = fn(key)
+        es_out[backend] = (np.asarray(ids), np.asarray(steps),
+                           np.asarray(n_high))
+        es["backends"][backend] = {
+            "batch_ms": round(t["mean_ms"], 2),
+            "mean_steps": float(np.asarray(steps).mean()),
+            "mean_n_high": float(np.asarray(n_high).mean()),
+        }
+    es["earlystop_backends_agree"] = bool(
+        all(np.array_equal(a, b)
+            for a, b in zip(es_out["xla"], es_out["pallas"]))
+    )
+    # the thresholds actually stop the walk before the full budget
+    es["stops_early"] = bool(
+        (es_out["xla"][1].sum(axis=-1) < base.n_steps).all()
+    )
+    out["earlystop"] = es
     out["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)

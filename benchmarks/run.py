@@ -15,6 +15,7 @@ import os
 import time
 
 from benchmarks import (
+    bench_earlystop_fused,
     bench_fig1_runtime,
     bench_fig2_stability,
     bench_fig3_earlystop,
@@ -38,6 +39,8 @@ SUITES = {
     "serving": ("Serving fleet QPS/latency (§3.3)", bench_serving.run),
     "smoke": ("Serving smoke: xla vs pallas walk engines -> "
               "BENCH_serving.json", bench_smoke.run),
+    "earlystop_fused": ("Fused in-VMEM early-stop tally vs full re-histogram",
+                        bench_earlystop_fused.run),
 }
 
 VERDICT_KEYS = (
@@ -45,7 +48,7 @@ VERDICT_KEYS = (
     "query_size_sublinear", "stability_grows_with_steps",
     "early_stop_saves_steps", "edges_monotone_in_delta",
     "pruning_improves_f1", "memory_decreases", "batching_overhead_bounded",
-    "both_backends_agree",
+    "both_backends_agree", "fused_matches_naive", "earlystop_backends_agree",
 )
 
 
@@ -102,6 +105,7 @@ def main(argv=None):
         return 0 if (n_ok == n_claims and not rc_all) else 1
 
     results = {}
+    n_errors = 0
     for name in names:
         title, fn = SUITES[name]
         t0 = time.time()
@@ -115,6 +119,7 @@ def main(argv=None):
             }
             print(json.dumps(verdicts), f"({res['_seconds']}s)", flush=True)
         except Exception as e:  # record, keep going
+            n_errors += 1
             results[name] = {"error": f"{type(e).__name__}: {e}"}
             print("FAILED:", results[name]["error"], flush=True)
 
@@ -129,8 +134,10 @@ def main(argv=None):
             if k in VERDICT_KEYS:
                 n_claims += 1
                 n_ok += bool(v)
-    print(f"paper-claim verdicts: {n_ok}/{n_claims} reproduced")
-    return 0 if n_ok == n_claims else 1
+    print(f"paper-claim verdicts: {n_ok}/{n_claims} reproduced"
+          + (f" ({n_errors} suite(s) crashed)" if n_errors else ""))
+    # a crashed suite contributes no verdicts — it must not look like a pass
+    return 0 if (n_ok == n_claims and n_errors == 0) else 1
 
 
 if __name__ == "__main__":

@@ -85,6 +85,85 @@ def accumulate_packed_events(
     )
 
 
+def accumulate_packed_events_with_high(
+    counts: Array,
+    high: Array,
+    events: Array,
+    n_slots: int,
+    n_pins: int,
+    n_v: int,
+    backend: str,
+) -> Tuple[Array, Array]:
+    """Accumulate packed events AND maintain the early-stop tally (Alg. 3).
+
+    counts: (n_slots * n_pins,) int32 running visit counts.
+    high:   (n_slots,) int32 running count of pins that reached ``n_v``
+            visits (the quantity Algorithm 3 compares against ``n_p``).
+    events: packed ``slot * n_pins + pin`` ids; values >= n_slots * n_pins
+            are the walk's invalid-step sentinel and are dropped.
+
+    Returns ``(new_counts, new_high)``.  The point of this API is that the
+    caller's while-loop body no longer reduces the whole
+    ``n_slots * n_pins`` buffer per iteration to recompute ``n_high``:
+
+      * "pallas" — the fused ``visit_counter_update_high`` kernel: the
+        count tile is updated in VMEM and per-slot threshold crossings come
+        out of the same kernel launch.
+      * "xla"    — chunk-local twin: scatter-add the events, then find the
+        crossings by sorting only the CHUNK's events (O(E log E),
+        E = chunk_steps * n_walkers) — old/new counts are gathered at the
+        touched bins, a bin that crossed is counted once via the sort's
+        first-occurrence mask.
+
+    Both paths do identical integer arithmetic, so counts and tallies are
+    bit-identical (tests/test_earlystop_parity.py).  Graphs whose packed id
+    space overflows int32 (``n_slots * n_pins >= 2**31``) fall back to the
+    xla path exactly like the fused walk kernel does.  Requires
+    ``n_v >= 1``: counts start at zero, so a non-positive threshold could
+    never *cross* and the tally would disagree with a full recount.
+    """
+    if n_v < 1:
+        raise ValueError(f"n_v must be >= 1 for crossing tallies, got {n_v}")
+    n_bins = n_slots * n_pins
+    flat = events.reshape(-1)
+    if (
+        backend == "pallas"
+        and n_bins + 1 < 2**31
+        and flat.dtype == jnp.int32
+    ):
+        from repro.kernels import ops  # local import: kernels layer on top
+
+        new_counts, delta = ops.visit_counts_update_high(
+            counts, flat, n_slots=n_slots, n_pins=n_pins, n_v=n_v,
+            use_kernel=True,
+        )
+        return new_counts, high + delta
+
+    # the id space can be wider than the event dtype (int32 events against
+    # an int64-scale n_bins only happens in shape-level tests — the walk
+    # emits int64 events at that scale — but the bound must not overflow)
+    dt_max = int(jnp.iinfo(flat.dtype).max)
+    oob = min(n_bins, dt_max)
+    valid = (flat >= 0) & (flat < oob)
+    idx = jnp.where(valid, flat, 0)
+    new_counts = counts.at[idx].add(valid.astype(counts.dtype), mode="drop")
+    # crossings from the touched bins only: sort the chunk, dedup runs
+    sorted_e = jnp.sort(jnp.where(valid, flat, oob))
+    first = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sorted_e[1:] != sorted_e[:-1]]
+    )
+    in_range = sorted_e < oob
+    safe = jnp.where(in_range, sorted_e, 0)
+    old_c = jnp.take(counts, safe)
+    new_c = jnp.take(new_counts, safe)
+    crossed = first & in_range & (old_c < n_v) & (new_c >= n_v)
+    slot = jnp.where(in_range, safe // n_pins, n_slots).astype(jnp.int32)
+    delta = jax.ops.segment_sum(
+        crossed.astype(jnp.int32), slot, num_segments=n_slots + 1
+    )[:n_slots]
+    return new_counts, high + delta
+
+
 def boost_combine(counts_q: Array, weights: Array | None = None) -> Array:
     """Multi-hit booster, Eq. 3:  V[p] = (sum_q w_q * sqrt(V_q[p]))**2.
 
@@ -179,3 +258,25 @@ def n_high_from_events(event_ids: Array, n_v: int, max_unique: int) -> Array:
     """Early-stopping statistic from an event buffer: #(slot,pin) runs >= n_v."""
     _, counts = events_to_counts(event_ids, 1, max_unique)
     return jnp.sum((counts >= n_v).astype(jnp.int32))
+
+
+def events_n_high_per_slot(
+    event_ids: Array, n_slots: int, n_pins: int, n_v: int, max_unique: int
+) -> Array:
+    """Per-slot Algorithm 3 statistic from a packed event buffer.
+
+    Returns (n_slots,) int32 — the number of pins of each query slot whose
+    aggregated visit count reached ``n_v``.  This is the event-mode twin of
+    the dense engine's running ``n_high`` tally (the buffer has no dense
+    counts to tally incrementally, so it re-aggregates by sort; the walk
+    only calls it every ``check_every`` chunks).
+    """
+    sentinel = n_slots * n_pins
+    uniq, counts = events_to_counts(event_ids, n_slots, max_unique)
+    hot = (counts >= n_v) & (uniq < sentinel)
+    slot_of_run = jnp.where(hot, uniq // n_pins, n_slots)
+    return jax.ops.segment_sum(
+        hot.astype(jnp.int32),
+        slot_of_run.astype(jnp.int32),
+        num_segments=n_slots + 1,
+    )[:n_slots]

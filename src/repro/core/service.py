@@ -93,7 +93,8 @@ def serve_batch(
     key: jax.Array,
     cfg: walk_lib.WalkConfig,
     backend: str | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    with_stats: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
     """One SPMD serving step: vmapped Pixie over a query batch.
 
     This is the TPU replacement for the paper's worker-thread-per-query
@@ -101,13 +102,23 @@ def serve_batch(
     ``cfg.backend`` ("xla" | "pallas") for the whole batch, so a serving
     fleet can flip the hot path to the fused Pallas walk engine without
     rebuilding its configs; both engines return bit-identical
-    recommendations for the same key (core/walk.py).
+    recommendations for the same key (core/walk.py) — including the
+    early-stop observables, since both maintain the same incremental
+    ``n_high`` tally.
+
+    Returns ``(scores, ids)``; with ``with_stats=True`` returns
+    ``(scores, ids, steps_taken, n_high)`` (each leading with the batch
+    axis) so the fleet can monitor how much step budget Algorithm 3's
+    early stopping saves per query shape.
     """
     if backend is not None and backend != cfg.backend:
         cfg = dataclasses.replace(cfg, backend=backend)
     keys = jax.random.split(key, pins.shape[0])
 
     def one(qp, qw, uf, k):
-        return walk_lib.recommend(graph, qp, qw, uf, k, cfg)
+        return walk_lib.recommend_with_stats(graph, qp, qw, uf, k, cfg)
 
-    return jax.vmap(one)(pins, weights, user_feats, keys)
+    scores, ids, steps, n_high = jax.vmap(one)(pins, weights, user_feats, keys)
+    if with_stats:
+        return scores, ids, steps, n_high
+    return scores, ids

@@ -38,7 +38,13 @@ Two counting backends (see core/counter.py):
 
 Early stopping (Algorithm 2 lines 10-13) is evaluated every chunk: a query
 slot stops once >= n_p pins reached n_v visits or its step budget N_q is
-spent; the whole walk stops when every slot stopped.
+spent; the whole walk stops when every slot stopped.  The statistic is
+maintained INCREMENTALLY: the while-loop carries a (n_slots,) running
+``n_high`` tally updated by ``counter_lib.accumulate_packed_events_with_high``
+from just the chunk's own events (xla: sort the chunk and gather old/new
+counts at the touched bins; pallas: threshold crossings emitted by the fused
+``visit_counter_update_high`` kernel while the count tile is in VMEM) — the
+loop body never reduces the full n_slots * n_pins buffer.
 """
 
 from __future__ import annotations
@@ -69,6 +75,27 @@ def packed_event_dtype(n_slots: int, n_pins: int):
     if n_slots * n_pins + 1 < 2**31:
         return jnp.int32
     return jnp.int64
+
+
+def select_count_engine(
+    backend: str, n_slots: int, n_pins: int, n_boards: int = 0
+) -> str:
+    """Counting engine for a packed (slot, pin/board) id space.
+
+    The fused walk and counter kernels pack ids as int32; graphs whose
+    packed id space needs int64 (``n_slots * n_pins >= 2**31``, the 3B-pin
+    production scale) fall back to the xla engine — results are identical
+    either way.  Pure shape arithmetic so production configs can be
+    validated without materializing a graph.
+    """
+    idt = packed_event_dtype(n_slots, max(n_pins, n_boards))
+    return backend if idt == jnp.int32 else "xla"
+
+
+# disables Algorithm 2's early stopping: no pin can ever reach this many
+# visits.  int32-safe because the tally machinery only COMPARES counts
+# against n_v (never adds to it) — see accumulate_packed_events_with_high.
+NO_EARLY_STOP_NV = jnp.iinfo(jnp.int32).max // 2
 
 
 def _prob_u32(p: float) -> int:
@@ -116,6 +143,17 @@ class WalkConfig:
         per_chunk = self.n_walkers * self.chunk_steps
         return max(1, -(-self.n_steps // per_chunk))
 
+    def without_early_stop(self) -> "WalkConfig":
+        """Algorithm 1 mode: run the full step budget, never stop early.
+
+        Uses thresholds no walk can reach (``NO_EARLY_STOP_NV`` is compared
+        against counts, never added to them, so the sentinel cannot
+        overflow the incremental high tally).
+        """
+        return dataclasses.replace(
+            self, n_p=self.n_steps + 1, n_v=NO_EARLY_STOP_NV
+        )
+
 
 class WalkResult(NamedTuple):
     """Dense-mode walk output."""
@@ -124,6 +162,7 @@ class WalkResult(NamedTuple):
     board_counts: Optional[Array]  # (n_slots, n_boards) or None
     steps_taken: Array      # (n_slots,) int32
     n_high: Array           # (n_slots,) int32 pins that reached n_v visits
+                            # (the loop's running tally, query pins debited)
 
 
 class EventWalkResult(NamedTuple):
@@ -182,11 +221,16 @@ def _walk_chunk(
     w = curr.shape[0]
     rbits = _chunk_rbits(key, step_base, cfg.chunk_steps, w)
     feat = jnp.broadcast_to(jnp.asarray(user_feat, jnp.int32), (w,))
-    use_bias = (
-        graph.p2b.feat_bounds is not None
-        and graph.b2p.feat_bounds is not None
-        and cfg.bias_beta > 0.0
-    )
+    has_p2b = graph.p2b.feat_bounds is not None
+    has_b2p = graph.b2p.feat_bounds is not None
+    if has_p2b != has_b2p and cfg.bias_beta > 0.0:
+        # a one-sided graph can't answer a biased walk; refusing loudly
+        # beats silently dropping personalization
+        raise ValueError(
+            "graph has feat_bounds on only one CSR side; build both sides "
+            "for biased walks or set bias_beta=0"
+        )
+    use_bias = has_p2b and has_b2p and cfg.bias_beta > 0.0
     return ops.walk_chunk_fused(
         curr,
         query_of_walker,
@@ -230,15 +274,27 @@ def pixie_random_walk(
     Returns dense per-slot visit counts; combine with
     ``counter_lib.boost_combine`` + ``topk_dense`` for recommendations.
     """
+    if cfg.n_v < 1:
+        raise ValueError(
+            f"n_v must be >= 1, got {cfg.n_v}; use "
+            "cfg.without_early_stop() to disable early stopping"
+        )
     n_slots = query_pins.shape[0]
     n_pins = graph.n_pins
     w = cfg.n_walkers
-    idt = packed_event_dtype(n_slots, max(n_pins, graph.n_boards))
+    # board ids are only packed when count_boards: a pin-only walk must not
+    # lose the int32 fast path to a board id space nobody counts (the fused
+    # kernel's own overflow guard makes the same distinction)
+    n_boards_packed = graph.n_boards if cfg.count_boards else 0
+    idt = packed_event_dtype(n_slots, max(n_pins, n_boards_packed))
     sentinel = jnp.asarray(n_slots * n_pins, idt)
-    bsentinel = jnp.asarray(n_slots * graph.n_boards, idt)
-    # the fused kernel and histogram kernel are int32-packed; int64-scale
-    # graphs fall back to the xla engine (identical results)
-    count_engine = cfg.backend if idt == jnp.int32 else "xla"
+    bsentinel = (
+        jnp.asarray(n_slots * graph.n_boards, idt) if cfg.count_boards
+        else None
+    )
+    count_engine = select_count_engine(
+        cfg.backend, n_slots, n_pins, n_boards_packed
+    )
 
     valid_q = (query_pins >= 0) & (query_weights > 0)
     safe_q = jnp.where(valid_q, query_pins, 0)
@@ -265,11 +321,11 @@ def pixie_random_walk(
     )
 
     def cond(state):
-        _, _, _, steps_taken, slot_active, it = state
+        _, _, _, _, steps_taken, slot_active, it = state
         return jnp.any(slot_active) & (it < cfg.max_chunks())
 
     def body(state):
-        curr, counts, bcounts, steps_taken, slot_active, it = state
+        curr, counts, bcounts, high, steps_taken, slot_active, it = state
         step_base = it * cfg.chunk_steps
         walker_active = jnp.take(slot_active, slot_of_walker)
 
@@ -279,8 +335,10 @@ def pixie_random_walk(
         )
         curr = jnp.where(walker_active, curr2, curr)
         events = jnp.where(walker_active[None, :], events, sentinel)
-        counts = counter_lib.accumulate_packed_events(
-            counts, events, n_slots * n_pins, count_engine
+        # fused: accumulate the chunk AND update the running n_high tally —
+        # no n_slots * n_pins reduction anywhere in this loop body
+        counts, high = counter_lib.accumulate_packed_events_with_high(
+            counts, high, events, n_slots, n_pins, cfg.n_v, count_engine
         )
         if cfg.count_boards:
             bevents = jnp.where(walker_active[None, :], bevents, bsentinel)
@@ -293,37 +351,38 @@ def pixie_random_walk(
         ) * cfg.chunk_steps
 
         # early stopping: slot stops when n_high > n_p or budget exhausted
-        per_slot = counts.reshape(n_slots, n_pins)
-        n_high = counter_lib.n_high_visited(per_slot, cfg.n_v)
         slot_active = (
             valid_q
             & (steps_taken < n_q)
-            & (n_high <= cfg.n_p)
+            & (high <= cfg.n_p)
         )
-        return curr, counts, bcounts, steps_taken, slot_active, it + 1
+        return curr, counts, bcounts, high, steps_taken, slot_active, it + 1
 
     state0 = (
         query_of_walker,
         counts0,
         bcounts0,
         jnp.zeros((n_slots,), jnp.int32),
+        jnp.zeros((n_slots,), jnp.int32),
         valid_q,
         jnp.asarray(0, jnp.int32),
     )
-    curr, counts, bcounts, steps_taken, _, _ = jax.lax.while_loop(
+    curr, counts, bcounts, high, steps_taken, _, _ = jax.lax.while_loop(
         cond, body, state0
     )
     per_slot = counts.reshape(n_slots, n_pins)
-    # never recommend the query pins themselves
-    per_slot = per_slot.at[jnp.arange(n_slots), safe_q].set(0)
-    n_high = counter_lib.n_high_visited(per_slot, cfg.n_v)
+    # never recommend the query pins themselves; the running tally counted
+    # a query pin that reached n_v, so zeroing it must also debit the tally
+    q_rows = jnp.arange(n_slots)
+    q_reached = (per_slot[q_rows, safe_q] >= cfg.n_v).astype(jnp.int32)
+    per_slot = per_slot.at[q_rows, safe_q].set(0)
     return WalkResult(
         counts=per_slot,
         board_counts=None
         if bcounts is None
         else bcounts.reshape(n_slots, graph.n_boards),
         steps_taken=steps_taken,
-        n_high=n_high,
+        n_high=high - q_reached,
     )
 
 
@@ -334,9 +393,7 @@ def basic_random_walk(
     cfg: WalkConfig,
 ) -> Array:
     """Algorithm 1: unbiased, single query pin, fixed budget. -> (n_pins,)"""
-    cfg_basic = dataclasses.replace(
-        cfg, bias_beta=0.0, n_p=cfg.n_steps + 1, n_v=jnp.iinfo(jnp.int32).max // 2
-    )
+    cfg_basic = dataclasses.replace(cfg, bias_beta=0.0).without_early_stop()
     res = pixie_random_walk(
         graph,
         jnp.asarray([query_pin], jnp.int32),
@@ -346,6 +403,26 @@ def basic_random_walk(
         cfg_basic,
     )
     return res.counts[0]
+
+
+def recommend_with_stats(
+    graph: PinBoardGraph,
+    query_pins: Array,
+    query_weights: Array,
+    user_feat: Array,
+    key: Array,
+    cfg: WalkConfig,
+) -> Tuple[Array, Array, Array, Array]:
+    """recommend plus walk telemetry -> (scores, ids, steps_taken, n_high).
+
+    ``steps_taken``/``n_high`` are Algorithm 3's early-stop observables —
+    the serving layer exports them so a fleet can see how much of the step
+    budget early stopping is actually saving (paper §4's latency lever).
+    """
+    res = pixie_random_walk(graph, query_pins, query_weights, user_feat, key, cfg)
+    boosted = counter_lib.boost_combine(res.counts)
+    scores, ids = counter_lib.topk_dense(boosted, cfg.top_k)
+    return scores, ids, res.steps_taken, res.n_high
 
 
 def recommend(
@@ -361,9 +438,10 @@ def recommend(
     Dispatches on ``cfg.backend``: the whole walk loop runs on the fused
     Pallas engine when ``backend="pallas"``.
     """
-    res = pixie_random_walk(graph, query_pins, query_weights, user_feat, key, cfg)
-    boosted = counter_lib.boost_combine(res.counts)
-    return counter_lib.topk_dense(boosted, cfg.top_k)
+    scores, ids, _, _ = recommend_with_stats(
+        graph, query_pins, query_weights, user_feat, key, cfg
+    )
+    return scores, ids
 
 
 # ---------------------------------------------------------------------------
@@ -388,6 +466,13 @@ def pixie_walk_events(
     fused kernel and are appended to the buffer — no packing arithmetic in
     XLA at all.
     """
+    if cfg.n_v < 1:
+        # same contract as the dense engine: n_v=0 would mark every touched
+        # run "hot" and silently truncate the walk at the first check
+        raise ValueError(
+            f"n_v must be >= 1, got {cfg.n_v}; use "
+            "cfg.without_early_stop() to disable early stopping"
+        )
     if cfg.count_boards:
         # event mode only buffers pin visits; don't make the chunk engine
         # emit board events nobody reads
@@ -441,16 +526,9 @@ def pixie_walk_events(
 
         def check(args):
             events, steps_taken = args
-            uniq, counts = counter_lib.events_to_counts(
-                events, n_slots, max_events
+            n_high = counter_lib.events_n_high_per_slot(
+                events, n_slots, n_pins, cfg.n_v, max_events
             )
-            hot = (counts >= cfg.n_v) & (uniq < sentinel)
-            slot_of_run = jnp.where(hot, uniq // n_pins, n_slots)
-            n_high = jax.ops.segment_sum(
-                hot.astype(jnp.int32),
-                slot_of_run.astype(jnp.int32),
-                num_segments=n_slots + 1,
-            )[:n_slots]
             return valid_q & (steps_taken < n_q) & (n_high <= cfg.n_p)
 
         do_check = (it + 1) % check_every == 0

@@ -22,6 +22,9 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.embedding_bag import embedding_bag as _bag_kernel
 from repro.kernels.visit_counter import visit_counter as _counter_kernel
+from repro.kernels.visit_counter import (
+    visit_counter_update_high as _counter_high_kernel,
+)
 from repro.kernels.walk_step import walk_step as _walk_kernel
 from repro.kernels.walk_step import DEFAULT_BLOCK_W as _DEFAULT_BLOCK_W
 from repro.kernels.walk_step import walk_steps_fused as _fused_kernel
@@ -42,6 +45,33 @@ def visit_counts(
     if use_kernel:
         return _counter_kernel(events, n_bins)
     return ref.visit_counter_ref(events, n_bins)
+
+
+def visit_counts_update_high(
+    prior_counts: Array,
+    events: Array,
+    *,
+    n_slots: int,
+    n_pins: int,
+    n_v: int,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    """Fused running-count update + per-slot n_v-crossing tally.
+
+    Returns ``(new_counts (n_slots * n_pins,), delta_high (n_slots,))`` —
+    the incremental early-stop statistic of the dense walk engine
+    (Algorithm 3): the while-loop carries a running ``n_high`` tally instead
+    of re-reducing the whole count buffer each chunk.
+    """
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        return _counter_high_kernel(
+            prior_counts, events, n_slots=n_slots, n_pins=n_pins, n_v=n_v
+        )
+    return ref.visit_counter_update_high_ref(
+        prior_counts, events, n_slots, n_pins, n_v
+    )
 
 
 def walk_step(

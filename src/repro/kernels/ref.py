@@ -31,6 +31,30 @@ def visit_counter_ref(events: Array, n_bins: int) -> Array:
     return counts.at[safe].add(valid.astype(jnp.int32))
 
 
+def visit_counter_update_high_ref(
+    prior_counts: Array,
+    events: Array,
+    n_slots: int,
+    n_pins: int,
+    n_v: int,
+) -> Tuple[Array, Array]:
+    """Oracle for the fused count-update + early-stop tally kernel.
+
+    Returns ``(prior + hist(events), delta_high)`` where ``delta_high[s]``
+    is the number of bins of query slot s whose count crossed ``>= n_v``
+    during this update.  Deliberately does the full O(n_slots * n_pins)
+    reduction — this is the obviously-correct ground truth the fused kernel
+    (and the chunk-local XLA twin in core/counter.py) must match exactly.
+    """
+    n_bins = n_slots * n_pins
+    new = prior_counts + visit_counter_ref(events, n_bins)
+    crossed = (prior_counts < n_v) & (new >= n_v)
+    delta = jnp.sum(
+        crossed.reshape(n_slots, n_pins).astype(jnp.int32), axis=1
+    )
+    return new, delta
+
+
 # ---------------------------------------------------------------------------
 # walk_step: one fused pin->board->pin superstep for a walker block
 # ---------------------------------------------------------------------------
@@ -109,7 +133,13 @@ def walk_chunk_ref(
     with a Python loop (XLA cost-model mode, see launch/dryrun.py).
     """
     chunk_steps, w = rbits.shape[0], rbits.shape[1]
-    use_bias = p2b_feat_bounds is not None and beta_u32 > 0
+    # biasing needs BOTH hop tables; one-sided bounds mean no bias (the
+    # walk layer rejects that combination before it gets here)
+    use_bias = (
+        p2b_feat_bounds is not None
+        and b2p_feat_bounds is not None
+        and beta_u32 > 0
+    )
     idt = event_dtype
     sentinel = jnp.asarray(n_slots * n_pins, idt)
     bsentinel = jnp.asarray(n_slots * n_boards, idt)

@@ -18,13 +18,26 @@ VMEM budget per program: tile (TILE,) int32 + chunk (CHUNK,) int32 + the
 (CHUNK, TILE) one-hot intermediate = 4*(512 + 2048 + 512*2048) B ~ 4.2 MiB,
 comfortably inside the ~16 MiB v5e VMEM.
 
+Two entry points share the tile-scan core:
+
+* ``visit_counter`` — plain histogram of an event buffer (kept as the
+  minimal kernel; used by the event-mode aggregation paths).
+* ``visit_counter_update_high`` — the fused early-stop counter for the
+  dense walk engine (Algorithm 3): takes the PRIOR running counts as an
+  input, accumulates the chunk's events on top of them *inside VMEM*, and
+  additionally emits, per query slot, how many count-table entries crossed
+  the ``n_v`` visit threshold during this update.  The walk loop's
+  early-stop condition then reads a ``(n_slots,)`` running tally instead of
+  re-reducing the whole ``n_slots * n_pins`` buffer every while-loop
+  iteration — the last O(n_slots*n_pins)-per-chunk cost on the dense path.
+
 This kernel is the aggregation half of the fused walk engine
 (``WalkConfig(backend="pallas")``): ``kernels/walk_step.walk_steps_fused``
 emits packed ``slot * n_pins + pin`` events (sentinel = ``n_slots * n_pins``,
 conveniently out-of-range here, so invalid steps drop out of the histogram
-for free) and ``core/counter.accumulate_packed_events`` histograms each
-chunk over ``n_slots * n_pins`` bins with this kernel instead of XLA
-scatter-add.
+for free) and ``core/counter.accumulate_packed_events[_with_high]``
+histograms each chunk over ``n_slots * n_pins`` bins with these kernels
+instead of XLA scatter-add.
 """
 
 from __future__ import annotations
@@ -37,6 +50,7 @@ from jax.experimental import pallas as pl
 
 DEFAULT_TILE = 512     # count-table entries per grid cell (lane-dim multiple)
 DEFAULT_CHUNK = 2048   # events streamed per inner grid step
+SLOT_PAD = 8           # sublane-friendly padding of the per-slot high output
 
 
 def _visit_counter_kernel(events_ref, counts_ref, *, tile: int, chunk: int):
@@ -90,3 +104,133 @@ def visit_counter(
         interpret=interpret,
     )(events.astype(jnp.int32))
     return out[:n_bins]
+
+
+# ---------------------------------------------------------------------------
+# Fused count-update + incremental early-stop tally (dense walk hot path)
+# ---------------------------------------------------------------------------
+
+
+def _visit_counter_high_kernel(
+    events_ref, prior_ref, counts_ref, high_ref,
+    *, tile: int, chunk: int, n_chunks: int, n_pins: int, n_v: int,
+    slot_pad: int,
+):
+    """Tile-scan histogram on top of PRIOR counts, plus threshold crossings.
+
+    The count tile is initialised from the prior running counts, stays in
+    VMEM while every event chunk streams past (inner grid axis), and after
+    the last chunk the tile is compared against its prior values: entries
+    that crossed ``count >= n_v`` during this update are summed per query
+    slot (``bin // n_pins``) with a one-hot compare — no scatter, no
+    full-buffer reduction outside the kernel.
+    """
+    j = pl.program_id(1)
+    tile_base = pl.program_id(0) * tile
+
+    @pl.when(j == 0)
+    def _init():
+        counts_ref[...] = prior_ref[...]
+        high_ref[...] = jnp.zeros_like(high_ref)
+
+    ev = events_ref[...]                                   # (chunk,)
+    ids = tile_base + jax.lax.broadcasted_iota(jnp.int32, (chunk, tile), 1)
+    hit = (ev[:, None] == ids).astype(jnp.int32)
+    counts_ref[...] += jnp.sum(hit, axis=0)
+
+    @pl.when(j == n_chunks - 1)
+    def _emit_high():
+        prior = prior_ref[...]                             # (tile,)
+        new = counts_ref[...]
+        # n_v is compared, never added: a huge disable-early-stop sentinel
+        # (e.g. int32max // 2) cannot overflow anything here.
+        crossed = ((prior < n_v) & (new >= n_v)).astype(jnp.int32)
+        bin_row = tile_base + jax.lax.broadcasted_iota(
+            jnp.int32, (1, tile), 1
+        )                                                  # (1, tile)
+        slot_row = bin_row // n_pins
+        slot_col = jax.lax.broadcasted_iota(
+            jnp.int32, (slot_pad, tile), 0
+        )
+        onehot = (slot_col == slot_row).astype(jnp.int32)  # (slot_pad, tile)
+        high_ref[...] = jnp.sum(
+            onehot * crossed[None, :], axis=1
+        )[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_slots", "n_pins", "n_v", "tile", "chunk", "interpret"
+    ),
+)
+def visit_counter_update_high(
+    prior_counts: jax.Array,
+    events: jax.Array,
+    *,
+    n_slots: int,
+    n_pins: int,
+    n_v: int,
+    tile: int = DEFAULT_TILE,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused ``new = prior + hist(events)`` plus per-slot n_v crossings.
+
+    prior_counts: (n_slots * n_pins,) int32 running visit counts.
+    events:       (m,) int32 packed ``slot * n_pins + pin`` ids; anything
+                  outside [0, n_slots * n_pins) (the walk's invalid-step
+                  sentinel) is dropped.
+    Returns ``(new_counts (n_slots * n_pins,), delta_high (n_slots,))``
+    where ``delta_high[s]`` counts bins of slot s whose visit count crossed
+    from below ``n_v`` to ``>= n_v`` during this update.  Requires
+    ``n_v >= 1`` (counts start at zero, so a non-positive threshold would
+    be "already crossed" and never increment the tally).
+    """
+    if n_v < 1:
+        raise ValueError(f"n_v must be >= 1 for crossing tallies, got {n_v}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n_bins = n_slots * n_pins
+    m = events.shape[0]
+    if m == 0:  # zero-size grid is illegal; nothing to count either way
+        return (
+            prior_counts.astype(jnp.int32),
+            jnp.zeros((n_slots,), jnp.int32),
+        )
+    m_pad = -(-m // chunk) * chunk
+    if m_pad != m:
+        events = jnp.concatenate(
+            [events, jnp.full((m_pad - m,), -1, events.dtype)]
+        )
+    n_pad = -(-n_bins // tile) * tile
+    prior = prior_counts.astype(jnp.int32)
+    if n_pad != n_bins:
+        prior = jnp.concatenate(
+            [prior, jnp.zeros((n_pad - n_bins,), jnp.int32)]
+        )
+    slot_pad = -(-n_slots // SLOT_PAD) * SLOT_PAD
+    n_tiles, n_chunks = n_pad // tile, m_pad // chunk
+    counts, high_parts = pl.pallas_call(
+        functools.partial(
+            _visit_counter_high_kernel,
+            tile=tile, chunk=chunk, n_chunks=n_chunks,
+            n_pins=n_pins, n_v=n_v, slot_pad=slot_pad,
+        ),
+        grid=(n_tiles, n_chunks),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i, j: (j,)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((1, slot_pad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, slot_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(events.astype(jnp.int32), prior)
+    # (n_tiles, slot_pad) partials: a tiny reduction, NOT O(n_slots*n_pins)
+    return counts[:n_bins], jnp.sum(high_parts, axis=0)[:n_slots]

@@ -339,7 +339,11 @@ def walk_steps_fused(
             f"{packed_max} overflows (n_slots={n_slots}, n_pins={n_pins}"
             + (f", n_boards={n_boards})" if count_boards else ")")
         )
-    use_bias = p2b_feat_bounds is not None and beta_u32 > 0
+    use_bias = (
+        p2b_feat_bounds is not None
+        and b2p_feat_bounds is not None
+        and beta_u32 > 0
+    )
     grid = (w // block_w,)
     blk = lambda i: (i,)
     any_spec = pl.BlockSpec(memory_space=pl.ANY)

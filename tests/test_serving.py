@@ -1,9 +1,11 @@
 """Serving-layer tests: LM generation, Pixie server batching/swap,
-two-stage recommendation, query construction."""
+two-stage recommendation, query construction, and serve_batch
+backend-override parity."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import service, walk as walk_lib
 from repro.graphs.synthetic import small_test_graph, top_degree_pins
@@ -67,6 +69,51 @@ def test_build_query_weights_decay_and_rank():
     idx3 = list(pins).index(3)
     assert weights[idx3] < weights[1]
     assert pins[3] == -1 and weights[3] == 0.0  # padding
+
+
+@pytest.mark.parametrize(
+    "shape_cfg",
+    [service.homefeed_config, service.related_pins_config,
+     service.board_rec_config],
+    ids=["homefeed", "related_pins", "board_rec"],
+)
+def test_serve_batch_backend_override_parity(shape_cfg):
+    """Same key, backend="xla" vs "pallas": bit-identical recommendations
+    (ids AND scores) plus identical early-stop telemetry across the §5
+    query shapes — early stopping active so the incremental n_high tally is
+    on the line."""
+    sg = small_test_graph()
+    g = sg.graph
+    qs = top_degree_pins(sg, 8)
+    batch, n_slots = 4, 2
+    pins = np.full((batch, n_slots), -1, np.int32)
+    weights = np.zeros((batch, n_slots), np.float32)
+    for i in range(batch):
+        pins[i, 0] = int(qs[2 * i])
+        pins[i, 1] = int(qs[2 * i + 1])
+        weights[i] = [1.0, 0.6]
+    pins_j, weights_j = jnp.asarray(pins), jnp.asarray(weights)
+    feats = jnp.zeros((batch,), jnp.int32)
+    cfg = shape_cfg(
+        walk_lib.WalkConfig(
+            n_steps=3_000, n_walkers=128, chunk_steps=8, top_k=20,
+            n_p=60, n_v=3,
+        )
+    )
+    key = jax.random.key(17)
+    sx, ix, stx, nhx = service.serve_batch(
+        g, pins_j, weights_j, feats, key, cfg, backend="xla",
+        with_stats=True,
+    )
+    sp, ip, stp, nhp = service.serve_batch(
+        g, pins_j, weights_j, feats, key, cfg, backend="pallas",
+        with_stats=True,
+    )
+    np.testing.assert_array_equal(np.asarray(ix), np.asarray(ip))
+    np.testing.assert_array_equal(np.asarray(sx), np.asarray(sp))
+    np.testing.assert_array_equal(np.asarray(stx), np.asarray(stp))
+    np.testing.assert_array_equal(np.asarray(nhx), np.asarray(nhp))
+    assert (np.asarray(nhx) >= 0).all()
 
 
 def test_two_stage_recommendation_returns_walk_candidates():

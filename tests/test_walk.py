@@ -128,6 +128,37 @@ def test_event_mode_matches_dense_mode(sg):
     np.testing.assert_array_equal(counts, dense_counts)
 
 
+def test_basic_walk_pins_algorithm_1_contract(sg):
+    """Algorithm 1: unbiased, single query, FULL fixed budget — early
+    stopping must be disabled through the incremental-tally API without the
+    huge n_v sentinel corrupting anything."""
+    g = sg.graph
+    q = int(top_degree_pins(sg, 1)[0])
+    cfg = walk_lib.WalkConfig(n_steps=2_048, n_walkers=128, chunk_steps=4)
+    # the sentinel config basic_random_walk builds internally
+    cfg_off = dataclasses.replace(cfg, bias_beta=0.0).without_early_stop()
+    assert cfg_off.n_v == walk_lib.NO_EARLY_STOP_NV
+    assert cfg_off.n_p == cfg.n_steps + 1
+    res = walk_lib.pixie_random_walk(
+        g, jnp.asarray([q], jnp.int32), jnp.ones((1,), jnp.float32),
+        jnp.asarray(0, jnp.int32), jax.random.key(4), cfg_off,
+    )
+    # no pin can reach the sentinel threshold: tally stays exactly zero
+    assert int(res.n_high[0]) == 0
+    # full budget spent: the walk never stopped early
+    assert int(res.steps_taken[0]) >= cfg.n_steps
+    # basic_random_walk is that walk's slot-0 counts
+    v = walk_lib.basic_random_walk(g, q, jax.random.key(4), cfg)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(res.counts[0]))
+    assert int(v.sum()) > 0
+    assert int(v[q]) == 0  # query pin never recommended
+    # and both step engines agree on Algorithm 1 too
+    v_p = walk_lib.basic_random_walk(
+        g, q, jax.random.key(4), dataclasses.replace(cfg, backend="pallas")
+    )
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_p))
+
+
 def test_recommend_excludes_query_pins(sg):
     g = sg.graph
     qs = top_degree_pins(sg, 2)

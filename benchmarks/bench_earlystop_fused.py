@@ -35,13 +35,15 @@ from repro.graphs.synthetic import SyntheticGraphConfig, generate
 def _counting_microbench(seed: int) -> Dict:
     """One dense-loop counting iteration: old recount vs fused tally."""
     n_slots, n_pins, n_v = 8, 20_000, 4
-    n_bins = n_slots * n_pins
-    n_events = 8 * 512  # chunk_steps * n_walkers worth of packed events
-    kc, ke = jax.random.split(jax.random.key(seed))
-    counts = jax.random.randint(kc, (n_bins,), 0, n_v + 1, dtype=jnp.int32)
-    events = jax.random.randint(
-        ke, (n_events,), 0, n_bins + 1, dtype=jnp.int32
+    n_events = 8 * 512  # chunk_steps * n_walkers worth of wide events
+    kc, ks, ke = jax.random.split(jax.random.key(seed), 3)
+    counts = jax.random.randint(
+        kc, (n_slots * n_pins,), 0, n_v + 1, dtype=jnp.int32
     )
+    slot_ev = jax.random.randint(
+        ks, (n_events,), 0, n_slots + 1, dtype=jnp.int32
+    )
+    pin_ev = jax.random.randint(ke, (n_events,), 0, n_pins, dtype=jnp.int32)
     high = counter_lib.n_high_visited(counts.reshape(n_slots, n_pins), n_v)
 
     out: Dict = {"n_slots": n_slots, "n_pins": n_pins,
@@ -50,22 +52,26 @@ def _counting_microbench(seed: int) -> Dict:
     for backend in ("xla", "pallas"):
 
         @jax.jit
-        def old_path(c, e, backend=backend):
-            c2 = counter_lib.accumulate_packed_events(c, e, n_bins, backend)
+        def old_path(c, s, p, backend=backend):
+            c2 = counter_lib.accumulate_packed_events(
+                c, s, p, n_slots, n_pins, backend
+            )
             return c2, counter_lib.n_high_visited(
                 c2.reshape(n_slots, n_pins), n_v
             )
 
         @jax.jit
-        def fused_path(c, h, e, backend=backend):
+        def fused_path(c, h, s, p, backend=backend):
             return counter_lib.accumulate_packed_events_with_high(
-                c, h, e, n_slots, n_pins, n_v, backend
+                c, h, s, p, n_slots, n_pins, n_v, backend
             )
 
-        t_old = timed(old_path, counts, events, warmup=1, iters=5)
-        t_new = timed(fused_path, counts, high, events, warmup=1, iters=5)
-        c_old, h_old = old_path(counts, events)
-        c_new, h_new = fused_path(counts, high, events)
+        t_old = timed(old_path, counts, slot_ev, pin_ev, warmup=1, iters=5)
+        t_new = timed(
+            fused_path, counts, high, slot_ev, pin_ev, warmup=1, iters=5
+        )
+        c_old, h_old = old_path(counts, slot_ev, pin_ev)
+        c_new, h_new = fused_path(counts, high, slot_ev, pin_ev)
         agree &= bool(
             np.array_equal(np.asarray(c_old), np.asarray(c_new))
             and np.array_equal(np.asarray(h_old), np.asarray(h_new))

@@ -126,6 +126,16 @@ def run(seed: int = 0) -> Dict:
     )
     out["earlystop"] = es
     out["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    # bench_widepack merges its section into this file; a smoke-only rerun
+    # must not silently erase it (check_verdicts asserts it exists)
+    if os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                prev = json.load(f)
+            if "widepack" in prev:
+                out["widepack"] = prev["widepack"]
+        except Exception:
+            pass
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     out["wrote"] = OUT_PATH

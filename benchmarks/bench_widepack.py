@@ -1,0 +1,185 @@
+"""Wide-pack sweep: production-scale id spaces + incremental event checks.
+
+Two levels, mirroring the wide-lane tentpole:
+
+1. **Scale sweep** — event-mode walks over graphs whose packed
+   ``slot * n_pins + pin`` id space spans from comfortably-int32 to PAST
+   2**31 (the regime that used to force the xla fallback), xla vs pallas,
+   asserting bit-identical lane buffers / n_high / steps_taken / top-k
+   (``widepack_backends_agree``).  The >= 2**31 rows are the paper's 3B-pin
+   operating point in miniature: huge id space, bounded event memory.
+2. **Check-mode micro-bench** — the same walk with
+   ``check_mode="incremental"`` (fold only the new window's events into
+   sorted runs) vs ``check_mode="full"`` (re-sort the whole buffer each
+   check), asserting bit-identical outputs (``incremental_matches_full``)
+   and recording the timing ratio.
+
+Results are returned for ``results/bench.json`` AND merged into
+``BENCH_serving.json`` as the ``widepack`` section, so the serving
+trajectory file carries the scale verdicts next to the backend-agreement
+ones.  On CPU hosts the Pallas kernels run in interpret mode — regress on
+the agreement verdicts, not the CPU ratios.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import walk as walk_lib
+from repro.graphs.synthetic import sparse_wide_graph as _sparse_wide_graph
+
+BENCH_SERVING_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(__file__)), "BENCH_serving.json"
+)
+
+
+def _query(n_slots):
+    qp = np.full((n_slots,), -1, np.int32)
+    qw = np.zeros((n_slots,), np.float32)
+    qp[0], qp[1] = 3, 17
+    qw[0], qw[1] = 1.0, 0.5
+    return jnp.asarray(qp), jnp.asarray(qw)
+
+
+def _scale_sweep(seed: int) -> Dict:
+    """xla vs pallas across id-space scales, incl. past the old int32 cliff."""
+    shapes = (
+        # (n_slots, n_pins): packed id space n_slots * n_pins
+        (8, 40_000),            # 3.2e5 — benchmark scale
+        (4_096, 40_000),        # 1.6e8 — large but int32-packable
+        (65_536, 40_000),       # 2.6e9 — PAST 2**31: the old fallback regime
+    )
+    cfg = walk_lib.WalkConfig(
+        n_steps=1_024, n_walkers=64, chunk_steps=4, n_p=500, n_v=3,
+        bias_beta=0.0,
+    )
+    key = jax.random.key(seed)
+    rows = []
+    agree = True
+    for n_slots, n_pins in shapes:
+        g = _sparse_wide_graph(
+            seed, n_pins=n_pins, n_boards=64, n_edges=4_000, hot_pins=2_000
+        )
+        qp, qw = _query(n_slots)
+        row: Dict = {
+            "n_slots": n_slots,
+            "n_pins": n_pins,
+            "packed_ids": n_slots * n_pins,
+            "past_int32": bool(n_slots * n_pins >= 2**31),
+            "backends": {},
+        }
+        outs = {}
+        for backend in ("xla", "pallas"):
+            bcfg = dataclasses.replace(cfg, backend=backend)
+
+            def fn(k, bcfg=bcfg, g=g, qp=qp, qw=qw, ns=n_slots, npn=n_pins):
+                r = walk_lib.pixie_walk_events(
+                    g, qp, qw, jnp.asarray(0, jnp.int32), k, bcfg,
+                    check_every=2,
+                )
+                s, i = walk_lib.recommend_from_events(r, ns, npn, qp, 20)
+                return r, s, i
+
+            t = timed(lambda k, fn=fn: fn(k)[1], key, warmup=1, iters=2)
+            r, s, i = fn(key)
+            outs[backend] = tuple(
+                np.asarray(x) for x in (*r, s, i)
+            )
+            row["backends"][backend] = {"walk_ms": round(t["mean_ms"], 2)}
+        row_agree = all(
+            np.array_equal(a, b)
+            for a, b in zip(outs["xla"], outs["pallas"])
+        )
+        agree &= row_agree
+        row["agree"] = bool(row_agree)
+        rows.append(row)
+    # verdict key lives only at the suite top level (run.py counts every
+    # occurrence of a verdict key, at any nesting)
+    return {"sweep": rows, "agree_all": bool(agree)}
+
+
+def _check_mode_bench(seed: int) -> Dict:
+    """Incremental window-fold vs full-buffer re-sort in the check body."""
+    g = _sparse_wide_graph(
+        seed + 1, n_pins=4_000, n_boards=64, n_edges=8_000, hot_pins=1_500
+    )
+    n_slots = 8
+    qp, qw = _query(n_slots)
+    cfg = walk_lib.WalkConfig(
+        n_steps=16_384, n_walkers=128, chunk_steps=4, n_p=400, n_v=3,
+        bias_beta=0.0,
+    )
+    key = jax.random.key(seed)
+    out: Dict = {"modes": {}, "max_events": cfg.max_chunks()
+                 * cfg.n_walkers * cfg.chunk_steps}
+    results = {}
+    for mode in ("incremental", "full"):
+
+        def fn(k, mode=mode):
+            return walk_lib.pixie_walk_events(
+                g, qp, qw, jnp.asarray(0, jnp.int32), k, cfg,
+                check_every=2, check_mode=mode,
+            )
+
+        t = timed(lambda k, fn=fn: fn(k).n_high, key, warmup=1, iters=3)
+        results[mode] = tuple(np.asarray(x) for x in fn(key))
+        out["modes"][mode] = {"walk_ms": round(t["mean_ms"], 2)}
+    out["matches"] = bool(
+        all(
+            np.array_equal(a, b)
+            for a, b in zip(results["incremental"], results["full"])
+        )
+    )
+    out["incremental_speedup_x"] = round(
+        out["modes"]["full"]["walk_ms"]
+        / max(out["modes"]["incremental"]["walk_ms"], 1e-9),
+        3,
+    )
+    return out
+
+
+def run(seed: int = 0) -> Dict:
+    out: Dict = {
+        "host_backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "scale": _scale_sweep(seed),
+        "check_mode": _check_mode_bench(seed),
+    }
+    # surface the two verdicts at the suite's top level for the driver
+    out["widepack_backends_agree"] = out["scale"]["agree_all"]
+    out["incremental_matches_full"] = out["check_mode"]["matches"]
+    # merge into the serving trajectory file so the scale verdicts live
+    # next to the backend-agreement ones (bench_smoke writes the base file)
+    serving = {}
+    if os.path.exists(BENCH_SERVING_PATH):
+        try:
+            with open(BENCH_SERVING_PATH) as f:
+                serving = json.load(f)
+        except Exception:
+            serving = {}
+    serving["widepack"] = {
+        "widepack_backends_agree": out["widepack_backends_agree"],
+        "incremental_matches_full": out["incremental_matches_full"],
+        "incremental_speedup_x": out["check_mode"]["incremental_speedup_x"],
+        "scales": [
+            {k: row[k] for k in
+             ("n_slots", "n_pins", "packed_ids", "past_int32", "agree")}
+            for row in out["scale"]["sweep"]
+        ],
+    }
+    with open(BENCH_SERVING_PATH, "w") as f:
+        json.dump(serving, f, indent=2)
+    out["wrote"] = BENCH_SERVING_PATH
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

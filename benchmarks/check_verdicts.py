@@ -1,0 +1,103 @@
+"""Single source of truth for the CI agreement verdicts.
+
+CPU runners interpret the Pallas kernels, so timings are meaningless
+there — the regression signal is the set of bit-identical xla/pallas
+agreement verdicts recorded by the smoke suites.  This module owns the
+list of (file, path) verdicts CI asserts, so adding a suite means adding
+a line HERE, not editing a YAML heredoc.
+
+Run locally after the smokes:
+
+    PYTHONPATH=src python -m benchmarks.run --only smoke earlystop_fused widepack
+    PYTHONPATH=src python -m benchmarks.check_verdicts
+
+Exit code 0 iff every verdict is present and truthy.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Iterable, Tuple
+
+# (file, key path) pairs; every leaf must exist and be truthy.
+VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    # bench_smoke: serving path, both walk engines, early stopping active
+    ("BENCH_serving.json", ("both_backends_agree",)),
+    ("BENCH_serving.json", ("earlystop", "earlystop_backends_agree")),
+    ("BENCH_serving.json", ("earlystop", "stops_early")),
+    # bench_widepack (merged into the serving trajectory file): wide
+    # (slot, pin) lanes past 2**31 packed ids + incremental event checks
+    ("BENCH_serving.json", ("widepack", "widepack_backends_agree")),
+    ("BENCH_serving.json", ("widepack", "incremental_matches_full")),
+    # bench_earlystop_fused: fused in-VMEM tally == naive recount
+    ("results/bench.json", ("earlystop_fused", "counting",
+                            "fused_matches_naive")),
+    ("results/bench.json", ("earlystop_fused", "walk",
+                            "both_backends_agree")),
+    # widepack suite verdicts as recorded by the driver
+    ("results/bench.json", ("widepack", "widepack_backends_agree")),
+    ("results/bench.json", ("widepack", "incremental_matches_full")),
+)
+
+
+def _lookup(tree, path: Iterable[str]):
+    for key in path:
+        if not isinstance(tree, dict) or key not in tree:
+            return None
+        tree = tree[key]
+    return tree
+
+
+def check(root: str = ".") -> int:
+    """Print every verdict; return the number of missing/false ones."""
+    import os
+
+    cache = {}
+    n_bad = 0
+    for fname, path in VERDICTS:
+        fpath = os.path.join(root, fname)
+        if fname not in cache:
+            try:
+                with open(fpath) as f:
+                    cache[fname] = json.load(f)
+            except Exception as e:
+                cache[fname] = e
+        tree = cache[fname]
+        label = f"{fname}:{'.'.join(path)}"
+        if isinstance(tree, Exception):
+            print(f"MISSING {label} ({type(tree).__name__}: {tree})")
+            n_bad += 1
+            continue
+        val = _lookup(tree, path)
+        if val is None:
+            print(f"MISSING {label}")
+            n_bad += 1
+        elif not val:
+            print(f"FAIL    {label} = {val!r}")
+            n_bad += 1
+        else:
+            print(f"ok      {label}")
+    return n_bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=".",
+                    help="repo root holding the result files")
+    ap.add_argument("--list", action="store_true",
+                    help="print the verdict list and exit")
+    args = ap.parse_args(argv)
+    if args.list:
+        for fname, path in VERDICTS:
+            print(f"{fname}:{'.'.join(path)}")
+        return 0
+    n_bad = check(args.root)
+    total = len(VERDICTS)
+    print(f"\nagreement verdicts: {total - n_bad}/{total} ok")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

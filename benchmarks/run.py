@@ -25,6 +25,7 @@ from benchmarks import (
     bench_smoke,
     bench_table1_hitrate,
     bench_table3_bias,
+    bench_widepack,
 )
 
 SUITES = {
@@ -41,6 +42,8 @@ SUITES = {
               "BENCH_serving.json", bench_smoke.run),
     "earlystop_fused": ("Fused in-VMEM early-stop tally vs full re-histogram",
                         bench_earlystop_fused.run),
+    "widepack": ("Wide (slot, pin) lanes: id spaces past 2**31 + "
+                 "incremental event checks", bench_widepack.run),
 }
 
 VERDICT_KEYS = (
@@ -49,6 +52,7 @@ VERDICT_KEYS = (
     "early_stop_saves_steps", "edges_monotone_in_delta",
     "pruning_improves_f1", "memory_decreases", "batching_overhead_bounded",
     "both_backends_agree", "fused_matches_naive", "earlystop_backends_agree",
+    "widepack_backends_agree", "incremental_matches_full",
 )
 
 

@@ -9,23 +9,56 @@ keep the *bound* and change the *mechanism*:
     when the (per-shard) pin range fits comfortably in HBM; this is the fast
     path for the sharded production graph (each shard only counts its own
     node range) and for all benchmark-scale graphs.
-  * ``events`` — walkers emit bounded (pin, query-slot) event buffers; counts
-    are recovered with sort + segment-sum.  Scale-free: memory is O(N events)
+  * ``events`` — walkers emit bounded (slot, pin) event buffers; counts are
+    recovered with sort + segment-sum.  Scale-free: memory is O(N events)
     exactly like the paper's table, independent of graph size.
+
+Events are WIDE: two int32 lanes, ``(slot, pin)``, never the packed
+``slot * n_pins + pin`` product — so the event representation has no int32
+cliff at production id spaces (``n_slots * n_pins >= 2**31``, the paper's
+3B-pin regime).  An event is invalid iff its slot lane holds ``n_slots``
+(value lane 0).  Dense counting still materializes an
+``(n_slots * n_pins,)`` buffer, which *inherently* requires the flat bin
+space to fit (< 2**31 bins — enforced loudly here); beyond that scale the
+event path carries the lanes end-to-end and aggregates by lexicographic
+pair sort (``lax.sort(..., num_keys=2)``), no 64-bit ids anywhere.
 
 Both paths implement the multi-hit booster (Eq. 3):
     V[p] = (sum_q sqrt(V_q[p]))**2
+
+Event-mode early stopping is INCREMENTAL: ``EventHighState`` keeps the
+sorted (slot, pin, count) runs of every previous check window plus the
+running per-slot ``n_high`` tally; ``events_high_fold`` folds in ONE new
+window by sorting only that window's events (O(window log window)) and
+binary-searching prior runs for the old counts — the check body never
+sorts the whole ``max_events`` buffer again (``events_n_high_per_slot``
+remains as the full re-sort oracle the incremental tally must match
+bit-for-bit).
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+def _require_dense_bins(n_bins: int) -> None:
+    """Dense counting materializes an (n_bins,) buffer: must fit int32."""
+    # single source of truth lives with the kernels (local import: the
+    # kernels layer sits on top of core)
+    from repro.kernels.visit_counter import _require_dense_bins as _req
+
+    _req(n_bins)
+
+
+def _valid_lanes(slot_ev: Array, id_ev: Array, n_slots: int, n_dim: int):
+    return (
+        (slot_ev >= 0) & (slot_ev < n_slots)
+        & (id_ev >= 0) & (id_ev < n_dim)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -57,56 +90,65 @@ def dense_accumulate_flat(counts: Array, pins: Array, valid: Array) -> Array:
 
 
 def accumulate_packed_events(
-    counts: Array, events: Array, n_bins: int, backend: str
+    counts: Array,
+    slot_events: Array,
+    id_events: Array,
+    n_slots: int,
+    n_dim: int,
+    backend: str,
 ) -> Array:
-    """Accumulate packed ``slot * n_pins + pin`` events into flat counts.
+    """Accumulate wide (slot, id) event lanes into flat dense counts.
 
-    Events >= n_bins are the walk's invalid-step sentinel and are dropped.
-    Two engines, matching the walk backends (core/walk.py):
+    counts: (n_slots * n_dim,) int32.  An event is counted iff
+    ``0 <= slot < n_slots`` and ``0 <= id < n_dim`` (the walk's
+    invalid-step sentinel, slot = ``n_slots``, is dropped).  Two engines,
+    matching the walk backends (core/walk.py):
 
       * "xla"    — scatter-add (``.at[].add``): random writes, fine on
                    CPU/GPU, the worst access pattern on TPU.
-      * "pallas" — the tile-scan histogram kernel (kernels/visit_counter):
-                   each count tile scans the event chunk with vectorized
-                   compares in VMEM; no scatters anywhere.
+      * "pallas" — the wide tile-scan histogram kernel
+                   (kernels/visit_counter): each count tile scans the event
+                   chunk with vectorized compares in VMEM, the flat bin id
+                   formed in-register; no scatters anywhere.
     """
+    _require_dense_bins(n_slots * n_dim)
+    sev = slot_events.reshape(-1).astype(jnp.int32)
+    iev = id_events.reshape(-1).astype(jnp.int32)
     if backend == "pallas":
         from repro.kernels import ops  # local import: kernels layer on top
 
-        return counts + ops.visit_counts(
-            events.reshape(-1).astype(jnp.int32), n_bins, use_kernel=True
+        return counts + ops.visit_counts_wide(
+            sev, iev, n_slots=n_slots, n_dim=n_dim, use_kernel=True
         )
-    # not dense_accumulate_flat: that helper casts indices to int32, which
-    # would corrupt int64 packed ids on production-scale graphs
-    valid = events < n_bins
-    safe = jnp.where(valid, events, 0)
-    return counts.at[safe.reshape(-1)].add(
-        valid.astype(counts.dtype).reshape(-1), mode="drop"
-    )
+    valid = _valid_lanes(sev, iev, n_slots, n_dim)
+    # pack on masked values only: garbage lanes must not overflow int32
+    flat = jnp.where(valid, sev, 0) * n_dim + jnp.where(valid, iev, 0)
+    return counts.at[flat].add(valid.astype(counts.dtype), mode="drop")
 
 
 def accumulate_packed_events_with_high(
     counts: Array,
     high: Array,
-    events: Array,
+    slot_events: Array,
+    pin_events: Array,
     n_slots: int,
     n_pins: int,
     n_v: int,
     backend: str,
 ) -> Tuple[Array, Array]:
-    """Accumulate packed events AND maintain the early-stop tally (Alg. 3).
+    """Accumulate wide events AND maintain the early-stop tally (Alg. 3).
 
     counts: (n_slots * n_pins,) int32 running visit counts.
     high:   (n_slots,) int32 running count of pins that reached ``n_v``
             visits (the quantity Algorithm 3 compares against ``n_p``).
-    events: packed ``slot * n_pins + pin`` ids; values >= n_slots * n_pins
-            are the walk's invalid-step sentinel and are dropped.
+    slot_events / pin_events: wide int32 event lanes; slot ``n_slots`` is
+            the walk's invalid-step sentinel and is dropped.
 
     Returns ``(new_counts, new_high)``.  The point of this API is that the
     caller's while-loop body no longer reduces the whole
     ``n_slots * n_pins`` buffer per iteration to recompute ``n_high``:
 
-      * "pallas" — the fused ``visit_counter_update_high`` kernel: the
+      * "pallas" — the fused wide ``visit_counter_update_high`` kernel: the
         count tile is updated in VMEM and per-slot threshold crossings come
         out of the same kernel launch.
       * "xla"    — chunk-local twin: scatter-add the events, then find the
@@ -116,43 +158,39 @@ def accumulate_packed_events_with_high(
         first-occurrence mask.
 
     Both paths do identical integer arithmetic, so counts and tallies are
-    bit-identical (tests/test_earlystop_parity.py).  Graphs whose packed id
-    space overflows int32 (``n_slots * n_pins >= 2**31``) fall back to the
-    xla path exactly like the fused walk kernel does.  Requires
-    ``n_v >= 1``: counts start at zero, so a non-positive threshold could
-    never *cross* and the tally would disagree with a full recount.
+    bit-identical (tests/test_earlystop_parity.py).  Dense counting
+    inherently requires ``n_slots * n_pins < 2**31`` (the counts buffer is
+    materialized); larger id spaces use event-mode counting, which has no
+    such limit.  Requires ``n_v >= 1``: counts start at zero, so a
+    non-positive threshold could never *cross* and the tally would
+    disagree with a full recount.
     """
     if n_v < 1:
         raise ValueError(f"n_v must be >= 1 for crossing tallies, got {n_v}")
     n_bins = n_slots * n_pins
-    flat = events.reshape(-1)
-    if (
-        backend == "pallas"
-        and n_bins + 1 < 2**31
-        and flat.dtype == jnp.int32
-    ):
+    _require_dense_bins(n_bins)
+    sev = slot_events.reshape(-1).astype(jnp.int32)
+    pev = pin_events.reshape(-1).astype(jnp.int32)
+    if backend == "pallas":
         from repro.kernels import ops  # local import: kernels layer on top
 
         new_counts, delta = ops.visit_counts_update_high(
-            counts, flat, n_slots=n_slots, n_pins=n_pins, n_v=n_v,
+            counts, sev, pev, n_slots=n_slots, n_pins=n_pins, n_v=n_v,
             use_kernel=True,
         )
         return new_counts, high + delta
 
-    # the id space can be wider than the event dtype (int32 events against
-    # an int64-scale n_bins only happens in shape-level tests — the walk
-    # emits int64 events at that scale — but the bound must not overflow)
-    dt_max = int(jnp.iinfo(flat.dtype).max)
-    oob = min(n_bins, dt_max)
-    valid = (flat >= 0) & (flat < oob)
+    valid = _valid_lanes(sev, pev, n_slots, n_pins)
+    flat = jnp.where(valid, sev, 0) * n_pins + jnp.where(valid, pev, 0)
+    flat = jnp.where(valid, flat, n_bins)
     idx = jnp.where(valid, flat, 0)
     new_counts = counts.at[idx].add(valid.astype(counts.dtype), mode="drop")
     # crossings from the touched bins only: sort the chunk, dedup runs
-    sorted_e = jnp.sort(jnp.where(valid, flat, oob))
+    sorted_e = jnp.sort(flat)
     first = jnp.concatenate(
         [jnp.ones((1,), jnp.bool_), sorted_e[1:] != sorted_e[:-1]]
     )
-    in_range = sorted_e < oob
+    in_range = sorted_e < n_bins
     safe = jnp.where(in_range, sorted_e, 0)
     old_c = jnp.take(counts, safe)
     new_c = jnp.take(new_counts, safe)
@@ -190,50 +228,73 @@ def topk_dense(boosted: Array, k: int) -> Tuple[Array, Array]:
 
 
 # ---------------------------------------------------------------------------
-# Event-buffer (sort-based) counters — scale-free path
+# Event-buffer (sort-based) counters — scale-free path, wide lanes
 # ---------------------------------------------------------------------------
 
 
 def events_to_counts(
-    event_ids: Array, n_slots: int, max_unique: int
-) -> Tuple[Array, Array]:
-    """Aggregate visit events by (slot, pin) without dense graph-size state.
+    slot_ids: Array,
+    pin_ids: Array,
+    n_slots: int,
+    max_unique: int,
+) -> Tuple[Array, Array, Array]:
+    """Aggregate wide visit events by (slot, pin) with a lexicographic sort.
 
-    event_ids: (m,) int64 packed events ``slot * n_pins + pin``; invalid
-               events are encoded as a sentinel larger than every valid id.
-    Returns (unique_packed_ids, counts) each (max_unique,), padded with the
-    sentinel / zero.  Equivalent to the paper's hash-table contents.
+    slot_ids / pin_ids: (m,) int32 event lanes; invalid events carry slot
+    ``n_slots`` (they aggregate into trailing sentinel runs the consumers
+    mask out).  Returns ``(uniq_slot, uniq_pin, counts)`` each
+    (max_unique,), lexicographically sorted by (slot, pin) with unused
+    bins normalized to the (``n_slots``, 0) sentinel — the arrays stay
+    sorted end to end, which is what lets ``events_high_fold`` binary
+    search them.  Equivalent to the paper's hash-table contents; no lane
+    ever holds the packed ``slot * n_pins + pin`` product, so this works
+    unchanged past 2**31 packed ids.
     """
-    m = event_ids.shape[0]
-    sorted_ids = jnp.sort(event_ids)
-    # boundary[i] = 1 where a new run starts
-    boundary = jnp.concatenate(
-        [jnp.ones((1,), jnp.int32), (sorted_ids[1:] != sorted_ids[:-1]).astype(jnp.int32)]
+    m = slot_ids.shape[0]
+    s_sorted, p_sorted = jax.lax.sort(
+        (slot_ids.astype(jnp.int32), pin_ids.astype(jnp.int32)), num_keys=2
     )
-    run_idx = jnp.cumsum(boundary) - 1  # which unique slot each event maps to
+    # boundary[i] = 1 where a new (slot, pin) run starts
+    boundary = jnp.concatenate(
+        [
+            jnp.ones((1,), jnp.int32),
+            (
+                (s_sorted[1:] != s_sorted[:-1])
+                | (p_sorted[1:] != p_sorted[:-1])
+            ).astype(jnp.int32),
+        ]
+    )
+    run_idx = jnp.cumsum(boundary) - 1  # which unique bin each event maps to
     counts = jax.ops.segment_sum(
         jnp.ones((m,), jnp.int32), run_idx, num_segments=max_unique
     )
-    # representative id per run
-    uniq = jax.ops.segment_max(sorted_ids, run_idx, num_segments=max_unique)
-    return uniq, counts
+    uniq_slot = jax.ops.segment_max(s_sorted, run_idx, num_segments=max_unique)
+    uniq_pin = jax.ops.segment_max(p_sorted, run_idx, num_segments=max_unique)
+    # unused trailing bins come back as int32 min from segment_max; pin the
+    # sentinel so the run arrays remain lexicographically sorted
+    used = counts > 0
+    uniq_slot = jnp.where(used, uniq_slot, n_slots)
+    uniq_pin = jnp.where(used, uniq_pin, 0)
+    return uniq_slot, uniq_pin, counts
 
 
 def boosted_from_events(
-    uniq_packed: Array,
+    uniq_slot: Array,
+    uniq_pin: Array,
     counts: Array,
-    n_pins_total: int,
-    sentinel: int,
+    n_slots: int,
+    n_pins: int,
     max_unique: int,
 ) -> Tuple[Array, Array]:
-    """Apply Eq. 3 across query slots given (slot*n_pins + pin, count) pairs.
+    """Apply Eq. 3 across query slots given (slot, pin, count) runs.
 
     Strategy: map every (slot, pin, count) run to (pin, sqrt(count)), then
     aggregate again by pin with a second sort, and square.  Returns
-    (pin_ids, boosted_scores) padded with (sentinel, 0).
+    (pin_ids, boosted_scores) padded with (``n_pins``, 0).
     """
-    pin = jnp.where(uniq_packed >= sentinel, sentinel, uniq_packed % n_pins_total)
-    root = jnp.where(uniq_packed >= sentinel, 0.0, jnp.sqrt(counts.astype(jnp.float32)))
+    valid = _valid_lanes(uniq_slot, uniq_pin, n_slots, n_pins) & (counts > 0)
+    pin = jnp.where(valid, uniq_pin, n_pins)
+    root = jnp.where(valid, jnp.sqrt(counts.astype(jnp.float32)), 0.0)
     order = jnp.argsort(pin)
     pin_s = pin[order]
     root_s = root[order]
@@ -244,7 +305,9 @@ def boosted_from_events(
     summed = jax.ops.segment_sum(root_s, run_idx, num_segments=max_unique)
     rep_pin = jax.ops.segment_max(pin_s, run_idx, num_segments=max_unique)
     boosted = summed * summed
-    boosted = jnp.where(rep_pin >= sentinel, 0.0, boosted)
+    boosted = jnp.where(
+        (rep_pin >= 0) & (rep_pin < n_pins), boosted, 0.0
+    )
     return rep_pin, boosted
 
 
@@ -253,30 +316,193 @@ def topk_events(pin_ids: Array, scores: Array, k: int) -> Tuple[Array, Array]:
     return vals, jnp.take(pin_ids, idx)
 
 
-@partial(jax.jit, static_argnames=("n_v", "max_unique"))
-def n_high_from_events(event_ids: Array, n_v: int, max_unique: int) -> Array:
-    """Early-stopping statistic from an event buffer: #(slot,pin) runs >= n_v."""
-    _, counts = events_to_counts(event_ids, 1, max_unique)
-    return jnp.sum((counts >= n_v).astype(jnp.int32))
-
-
 def events_n_high_per_slot(
-    event_ids: Array, n_slots: int, n_pins: int, n_v: int, max_unique: int
+    slot_ids: Array,
+    pin_ids: Array,
+    n_slots: int,
+    n_pins: int,
+    n_v: int,
+    max_unique: int,
 ) -> Array:
-    """Per-slot Algorithm 3 statistic from a packed event buffer.
+    """Per-slot Algorithm 3 statistic by FULL re-aggregation of the buffer.
 
     Returns (n_slots,) int32 — the number of pins of each query slot whose
-    aggregated visit count reached ``n_v``.  This is the event-mode twin of
-    the dense engine's running ``n_high`` tally (the buffer has no dense
-    counts to tally incrementally, so it re-aggregates by sort; the walk
-    only calls it every ``check_every`` chunks).
+    aggregated visit count reached ``n_v``.  This sorts the whole event
+    buffer (O(max_events log max_events)) and exists as the
+    obviously-correct oracle: the event walk's check body now carries
+    ``EventHighState`` and folds in only each new window
+    (``events_high_fold``), and the two must agree bit-for-bit at every
+    check point (tests/test_widepack.py).
     """
-    sentinel = n_slots * n_pins
-    uniq, counts = events_to_counts(event_ids, n_slots, max_unique)
-    hot = (counts >= n_v) & (uniq < sentinel)
-    slot_of_run = jnp.where(hot, uniq // n_pins, n_slots)
+    uniq_slot, uniq_pin, counts = events_to_counts(
+        slot_ids, pin_ids, n_slots, max_unique
+    )
+    hot = (counts >= n_v) & _valid_lanes(uniq_slot, uniq_pin, n_slots, n_pins)
+    slot_of_run = jnp.where(hot, uniq_slot, n_slots)
     return jax.ops.segment_sum(
         hot.astype(jnp.int32),
         slot_of_run.astype(jnp.int32),
         num_segments=n_slots + 1,
     )[:n_slots]
+
+
+# ---------------------------------------------------------------------------
+# Incremental event-mode early stopping: sorted runs folded window by window
+# ---------------------------------------------------------------------------
+
+
+class EventHighState(NamedTuple):
+    """Carried state of the incremental event-mode ``n_high`` tally.
+
+    ``seg_slot`` / ``seg_pin`` / ``seg_count`` hold one SORTED run segment
+    per completed check window, laid out back to back (segment k occupies
+    ``[k * seg_cap, (k + 1) * seg_cap)``); unwritten segments hold the
+    (``n_slots``, 0, 0) sentinel, which no valid lookup can match.  A
+    (slot, pin) key that appears in several windows has its count spread
+    over their segments — its cumulative prior count is the sum of its
+    matches, which is how ``events_high_fold`` detects the (unique)
+    check window where the key crosses ``n_v``.
+    """
+
+    seg_slot: Array    # (n_segments * seg_cap,) int32
+    seg_pin: Array     # (n_segments * seg_cap,) int32
+    seg_count: Array   # (n_segments * seg_cap,) int32
+    high: Array        # (n_slots,) int32 running Algorithm 3 tally
+    n_checks: Array    # () int32 windows folded so far
+
+
+def events_high_init(
+    n_slots: int, n_segments: int, seg_cap: int
+) -> EventHighState:
+    """Fresh state sized for ``n_segments`` check windows of ``seg_cap``."""
+    m = max(1, n_segments) * seg_cap
+    return EventHighState(
+        seg_slot=jnp.full((m,), n_slots, jnp.int32),
+        seg_pin=jnp.zeros((m,), jnp.int32),
+        seg_count=jnp.zeros((m,), jnp.int32),
+        high=jnp.zeros((n_slots,), jnp.int32),
+        n_checks=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _searchsorted_pair(
+    keys_slot: Array, keys_pin: Array, q_slot: Array, q_pin: Array
+) -> Array:
+    """Left insertion points of (q_slot, q_pin) into lexicographically
+    sorted (keys_slot, keys_pin) — a vectorized binary search (no sort)."""
+    n = keys_slot.shape[0]
+    lo = jnp.zeros(q_slot.shape, jnp.int32)
+    hi = jnp.full(q_slot.shape, n, jnp.int32)
+
+    def step(_, lohi):
+        lo, hi = lohi
+        live = lo < hi
+        mid = (lo + hi) // 2
+        ms = jnp.take(keys_slot, jnp.minimum(mid, n - 1))
+        mp = jnp.take(keys_pin, jnp.minimum(mid, n - 1))
+        less = (ms < q_slot) | ((ms == q_slot) & (mp < q_pin))
+        lo = jnp.where(live & less, mid + 1, lo)
+        hi = jnp.where(live & ~less, mid, hi)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, n.bit_length() + 1, step, (lo, hi))
+    return lo
+
+
+def events_high_fold(
+    state: EventHighState,
+    slot_events: Array,
+    pin_events: Array,
+    n_slots: int,
+    n_pins: int,
+    n_v: int,
+    *,
+    seg_cap: int,
+) -> EventHighState:
+    """Fold ONE check window's events into the running ``n_high`` tally.
+
+    The only sort here is over the window's own events (``seg_cap`` of
+    them) — O(window log window), never the full buffer.  Prior counts of
+    the window's keys come from vectorized binary searches into the
+    segments written so far (k segments at the k-th check, each a
+    log-window probe), so no operation ever touches an
+    O(max_events)-sized operand.  Bit-identical to re-aggregating the
+    full buffer with ``events_n_high_per_slot`` at every check point.
+
+    CONTRACT: the state must be sized (``events_high_init``'s
+    ``n_segments``) for every fold that will ever run.  A fold past
+    capacity keeps stored segments intact but cannot store its own runs,
+    so LATER folds would see stale priors and could re-count a crossing —
+    size for the worst case (``pixie_walk_events`` sizes exactly).  The
+    run segments cost ~3 int32 lanes of window capacity per check window
+    (same O(events) class as the buffers, ~2.5x the constant); the
+    ROADMAP notes LSM-style segment merging as the follow-up that cuts
+    both this and the per-check probe count.
+    """
+    sev = slot_events.reshape(-1).astype(jnp.int32)
+    pev = pin_events.reshape(-1).astype(jnp.int32)
+    if sev.shape[0] != seg_cap:
+        raise ValueError(
+            f"window has {sev.shape[0]} events but seg_cap={seg_cap}"
+        )
+    uniq_slot, uniq_pin, counts = events_to_counts(
+        sev, pev, n_slots, seg_cap
+    )
+
+    n_segments = state.seg_slot.shape[0] // seg_cap
+
+    def lookup(k, prior):
+        ss = jax.lax.dynamic_slice(state.seg_slot, (k * seg_cap,), (seg_cap,))
+        sp = jax.lax.dynamic_slice(state.seg_pin, (k * seg_cap,), (seg_cap,))
+        sc = jax.lax.dynamic_slice(state.seg_count, (k * seg_cap,), (seg_cap,))
+        pos = _searchsorted_pair(ss, sp, uniq_slot, uniq_pin)
+        pos_c = jnp.minimum(pos, seg_cap - 1)
+        match = (
+            (pos < seg_cap)
+            & (jnp.take(ss, pos_c) == uniq_slot)
+            & (jnp.take(sp, pos_c) == uniq_pin)
+        )
+        return prior + jnp.where(match, jnp.take(sc, pos_c), 0)
+
+    # only the segments actually written so far (a traced bound is fine
+    # for fori_loop): the early checks of a long walk must not pay for
+    # the whole window capacity
+    prior = jax.lax.fori_loop(
+        0, jnp.minimum(state.n_checks, n_segments), lookup,
+        jnp.zeros((seg_cap,), jnp.int32)
+    )
+
+    valid_run = (
+        _valid_lanes(uniq_slot, uniq_pin, n_slots, n_pins) & (counts > 0)
+    )
+    crossed = valid_run & (prior < n_v) & (prior + counts >= n_v)
+    slot_of = jnp.where(crossed, uniq_slot, n_slots)
+    delta = jax.ops.segment_sum(
+        crossed.astype(jnp.int32), slot_of, num_segments=n_slots + 1
+    )[:n_slots]
+
+    # callers must size the state for every fold (pixie_walk_events does);
+    # a fold past capacity must not clobber a stored segment — its runs
+    # are dropped (so LATER folds would see stale priors), never a prior
+    # window's (which would corrupt the tally retroactively)
+    def store(seg_slot, seg_pin, seg_count):
+        off = state.n_checks * seg_cap
+        return (
+            jax.lax.dynamic_update_slice(seg_slot, uniq_slot, (off,)),
+            jax.lax.dynamic_update_slice(seg_pin, uniq_pin, (off,)),
+            jax.lax.dynamic_update_slice(seg_count, counts, (off,)),
+        )
+
+    seg_slot, seg_pin, seg_count = jax.lax.cond(
+        state.n_checks < n_segments,
+        store,
+        lambda a, b, c: (a, b, c),
+        state.seg_slot, state.seg_pin, state.seg_count,
+    )
+    return EventHighState(
+        seg_slot=seg_slot,
+        seg_pin=seg_pin,
+        seg_count=seg_count,
+        high=state.high + delta,
+        n_checks=state.n_checks + 1,
+    )

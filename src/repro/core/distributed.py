@@ -166,7 +166,8 @@ class ShardedWalkResult(NamedTuple):
     top_scores: Array    # (top_k,) f32 boosted scores
     top_pins: Array      # (top_k,) int32 global pin ids
     dropped: Array       # () int32 walkers dropped by routing overflow
-    events: Array        # (S, max_events) per-shard packed event buffers
+    slot_events: Array   # (S, max_events) per-shard wide event slot lanes
+    pin_events: Array    # (S, max_events) per-shard local-pin lanes
 
 
 def _route(
@@ -227,11 +228,10 @@ def pixie_walk_sharded(
     pps = graph.pins_per_shard
     bps = graph.boards_per_shard
     max_events = cfg.n_supersteps * recv
-    # events are packed per-shard as slot * pins_per_shard + local_pin, so
-    # int32 suffices whenever n_slots * pins_per_shard < 2^31 — node-range
-    # sharding is what keeps the production graph in 32-bit ids
-    sentinel_val = n_slots * pps
-    idt = jnp.int64 if sentinel_val >= 2**31 else jnp.int32
+    # events are WIDE (slot, local_pin) int32 lane pairs — the per-shard
+    # id space n_slots * pins_per_shard may exceed 2^31 with no dtype
+    # change (the old packed-int64 branch is gone); the slot lane carries
+    # n_slots for uncounted steps
     alpha_u32 = min(int(cfg.alpha * 2**32), 2**32 - 1)
 
     valid_q = (query_pins >= 0) & (query_weights > 0)
@@ -259,10 +259,11 @@ def pixie_walk_sharded(
         # headroom so skewed hops don't immediately overflow capacity
         valid0 = any_resident & (jnp.arange(recv) < wl)
 
-        events0 = jnp.full((max_events,), sentinel_val, idt)
+        sev0 = jnp.full((max_events,), n_slots, jnp.int32)
+        pev0 = jnp.zeros((max_events,), jnp.int32)
 
         def superstep(carry, t):
-            curr, slot, valid, events, dropped = carry
+            curr, slot, valid, sev, pev, dropped = carry
             k_t = jax.random.fold_in(jax.random.fold_in(key, sid), t)
             rb = jax.random.bits(k_t, (recv, 3), dtype=jnp.uint32)
 
@@ -315,30 +316,30 @@ def pixie_walk_sharded(
                 (tgt_pin, slot1, counted.astype(jnp.int32)),
             )
 
-            # record visits (walkers now resident on this shard)
+            # record visits (walkers now resident on this shard) — wide
+            # (slot, local_pin) lanes, slot lane n_slots = uncounted
             local2 = jnp.clip(pos2 - pin_lo, 0, pps - 1)
-            packed = jnp.where(
-                v2 & (cnt2 == 1),
-                slot2.astype(idt) * pps + local2.astype(idt),
-                jnp.asarray(sentinel_val, idt),
-            )
-            events = jax.lax.dynamic_update_slice(events, packed, (t * recv,))
-            return (pos2, slot2, v2, events, dropped + d1 + d2), None
+            counted2 = v2 & (cnt2 == 1)
+            ev_s = jnp.where(counted2, slot2, n_slots).astype(jnp.int32)
+            ev_p = jnp.where(counted2, local2, 0).astype(jnp.int32)
+            sev = jax.lax.dynamic_update_slice(sev, ev_s, (t * recv,))
+            pev = jax.lax.dynamic_update_slice(pev, ev_p, (t * recv,))
+            return (pos2, slot2, v2, sev, pev, dropped + d1 + d2), None
 
         carry0 = (
-            curr0, slot0, valid0, events0, jnp.asarray(0, jnp.int32)
+            curr0, slot0, valid0, sev0, pev0, jnp.asarray(0, jnp.int32)
         )
-        (curr, slot, valid, events, dropped), _ = jax.lax.scan(
+        (curr, slot, valid, sev, pev, dropped), _ = jax.lax.scan(
             superstep, carry0, jnp.arange(cfg.n_supersteps),
             unroll=cfg.unroll or 1,
         )
 
         # ---- shard-local aggregation + boosted top-k ----
-        uniq, counts = counter_lib.events_to_counts(
-            events, n_slots, max_events
+        uniq_slot, uniq_pin, counts = counter_lib.events_to_counts(
+            sev, pev, n_slots, max_events
         )
         pin_ids, boosted = counter_lib.boosted_from_events(
-            uniq, counts, pps, sentinel_val, max_events
+            uniq_slot, uniq_pin, counts, n_slots, pps, max_events
         )
         top_s, top_i = jax.lax.top_k(boosted, cfg.top_k)
         top_pins_local = jnp.where(
@@ -352,7 +353,7 @@ def pixie_walk_sharded(
         gs, gi = jax.lax.top_k(all_s.reshape(-1), cfg.top_k)
         gp = jnp.take(all_p.reshape(-1), gi)
         dropped_total = jax.lax.psum(dropped, axis)
-        return gs, gp, dropped_total, events[None]
+        return gs, gp, dropped_total, sev[None], pev[None]
 
     other_axes = tuple(a for a in mesh.axis_names if a != axis)
     rep = P()
@@ -363,14 +364,15 @@ def pixie_walk_sharded(
             P(axis, None), P(axis, None), P(axis, None), P(axis, None),
             rep, rep, rep,
         ),
-        out_specs=(rep, rep, rep, P(axis, None)),
+        out_specs=(rep, rep, rep, P(axis, None), P(axis, None)),
         check_rep=False,
     )
-    gs, gp, dropped, events = fn(
+    gs, gp, dropped, sev, pev = fn(
         graph.p2b_offsets, graph.p2b_targets,
         graph.b2p_offsets, graph.b2p_targets,
         safe_q, jnp.where(valid_q, query_weights, 0.0), key,
     )
     return ShardedWalkResult(
-        top_scores=gs, top_pins=gp, dropped=dropped, events=events
+        top_scores=gs, top_pins=gp, dropped=dropped,
+        slot_events=sev, pin_events=pev,
     )

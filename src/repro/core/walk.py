@@ -17,10 +17,16 @@ Two interchangeable step engines (``WalkConfig.backend``):
   * ``"pallas"`` — the fused multi-superstep Pallas kernel
                    (kernels/walk_step.walk_steps_fused): ONE kernel launch
                    per ``chunk_steps`` steps with walker state resident in
-                   VMEM across the whole chunk, packed (slot, pin) visit
+                   VMEM across the whole chunk, wide (slot, pin) visit
                    events emitted in-kernel, and counts recovered with the
-                   scatter-free tile-scan ``visit_counter`` kernel.  On CPU
+                   scatter-free tile-scan ``visit_counter`` kernels.  On CPU
                    hosts the kernel runs in interpret mode.
+
+Events are WIDE — two int32 lanes, (slot, pin), slot lane ``n_slots`` as
+the invalid-step sentinel — never the packed ``slot * n_pins + pin``
+product, so BOTH engines cover production id spaces past 2**31 (the
+paper's 3B-pin regime) with no int64 anywhere and no fallback: backend
+choice is a pure performance knob at every scale.
 
 Both engines consume the SAME counter-based random bits (one uint32
 quadruple per walker-step, threefry fold-in of the step index), do the same
@@ -30,11 +36,12 @@ tests/test_walk_backends.py.
 
 Two counting backends (see core/counter.py):
   * dense  — per-(query-slot, pin) counts; benchmark-scale and per-shard
-             production counting.  The xla engine scatter-adds; the pallas
-             engine histograms the packed event chunk (no scatters).
-  * events — bounded (slot, pin) event buffer + sort aggregation; scale-free,
-             memory O(N) like the paper's hash table.  Both engines emit the
-             packed buffer directly.
+             production counting (a dense buffer inherently needs
+             n_slots * n_pins < 2**31).  The xla engine scatter-adds; the
+             pallas engine histograms the event lanes (no scatters).
+  * events — bounded wide (slot, pin) lane buffers + pair-sort aggregation;
+             scale-free, memory O(N) like the paper's hash table, id space
+             unlimited.  Both engines emit the lane buffers directly.
 
 Early stopping (Algorithm 2 lines 10-13) is evaluated every chunk: a query
 slot stops once >= n_p pins reached n_v visits or its step budget N_q is
@@ -44,13 +51,15 @@ maintained INCREMENTALLY: the while-loop carries a (n_slots,) running
 from just the chunk's own events (xla: sort the chunk and gather old/new
 counts at the touched bins; pallas: threshold crossings emitted by the fused
 ``visit_counter_update_high`` kernel while the count tile is in VMEM) — the
-loop body never reduces the full n_slots * n_pins buffer.
+loop body never reduces the full n_slots * n_pins buffer.  Event mode is
+incremental too: ``counter_lib.EventHighState`` keeps each check window's
+sorted runs, and the ``check_every`` body sorts ONLY the new window's
+events (``events_high_fold``) — never the whole ``max_events`` buffer.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -67,29 +76,43 @@ BACKENDS = ("xla", "pallas")
 
 
 def packed_event_dtype(n_slots: int, n_pins: int):
-    """Smallest int dtype that can hold packed (slot, pin) event ids.
+    """Dtype of EACH wide event lane — always int32.
 
-    int32 covers every benchmark-scale graph; the 3B-pin production graph
-    needs int64 (the dry-run launcher enables jax_enable_x64).
+    Events are (slot, pin) lane pairs; no lane ever holds the packed
+    ``slot * n_pins + pin`` product, so the lane dtype is int32 at every
+    id-space scale (including the 3B-pin production graph that used to
+    force int64 packing).  Kept as the single documented statement of the
+    lane-dtype contract — nothing in the engine branches on it anymore,
+    and tests pin that it stays int32 at production shapes.
     """
-    if n_slots * n_pins + 1 < 2**31:
-        return jnp.int32
-    return jnp.int64
+    del n_slots, n_pins  # wide lanes: scale no longer changes the dtype
+    return jnp.int32
 
 
 def select_count_engine(
     backend: str, n_slots: int, n_pins: int, n_boards: int = 0
 ) -> str:
-    """Counting engine for a packed (slot, pin/board) id space.
+    """Counting engine for a (slot, pin/board) id space: the backend itself.
 
-    The fused walk and counter kernels pack ids as int32; graphs whose
-    packed id space needs int64 (``n_slots * n_pins >= 2**31``, the 3B-pin
-    production scale) fall back to the xla engine — results are identical
-    either way.  Pure shape arithmetic so production configs can be
-    validated without materializing a graph.
+    Wide event lanes removed the int32 packing cliff, so there is no
+    fallback branch left — ``backend="pallas"`` counts with the wide
+    tile-scan kernels at every id-space scale that dense counting can
+    materialize at all, and event-mode counting has no scale limit on
+    either engine.  Still the single shape-level validation point: dense
+    counting inherently needs ``n_slots * max(n_pins, n_boards) < 2**31``
+    (the count buffer is materialized), checked here loudly so production
+    configs fail before a giant allocation, pointing at event mode.
     """
-    idt = packed_event_dtype(n_slots, max(n_pins, n_boards))
-    return backend if idt == jnp.int32 else "xla"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown walk backend {backend!r}; use {BACKENDS}")
+    n_bins = n_slots * max(n_pins, n_boards)
+    if n_bins + 1 >= 2**31:
+        raise ValueError(
+            f"dense counting materializes n_slots * n_dim = {n_bins} bins, "
+            "past int32 indexing; use event-mode counting "
+            "(pixie_walk_events) for production-scale id spaces"
+        )
+    return backend
 
 
 # disables Algorithm 2's early stopping: no pin can ever reach this many
@@ -166,11 +189,15 @@ class WalkResult(NamedTuple):
 
 
 class EventWalkResult(NamedTuple):
-    """Event-mode walk output (scale-free)."""
+    """Event-mode walk output (scale-free, wide lanes)."""
 
-    events: Array           # (max_events,) int64 packed slot*n_pins+pin
+    slot_events: Array      # (max_events,) int32 slot lane (n_slots = invalid)
+    pin_events: Array       # (max_events,) int32 pin lane
     steps_taken: Array      # (n_slots,) int32
     chunks_run: Array       # () int32
+    n_high: Array           # (n_slots,) int32 incremental Algorithm 3 tally
+                            # as of the last completed check window (zeros
+                            # when early stopping never checked)
 
 
 # ---------------------------------------------------------------------------
@@ -201,20 +228,17 @@ def _walk_chunk(
     step_base: Array,        # () int32 global step counter (for counter RNG)
     cfg: WalkConfig,
     n_slots: int,
-    event_dtype,
     unroll: bool = False,
-) -> Tuple[Array, Array, Optional[Array]]:
-    """Run cfg.chunk_steps steps; return (new_curr, events, board_events).
+) -> Tuple[Array, Array, Array, Optional[Array]]:
+    """Run cfg.chunk_steps steps.
 
-    events: (chunk_steps, W) packed ``slot * n_pins + pin`` in
-    ``event_dtype``, sentinel ``n_slots * n_pins`` for uncountable steps
-    (dead-end forced restarts).  board_events is None unless
+    Returns ``(new_curr, slot_events, pin_events, board_events)`` — wide
+    int32 event lanes, each (chunk_steps, W); the slot lane carries
+    ``n_slots`` for uncountable steps (dead-end forced restarts) and is
+    shared by the pin and board lanes.  board_events is None unless
     cfg.count_boards.  Dispatches on cfg.backend; both engines consume the
-    same random bits and agree bit-for-bit.
-
-    The fused kernel packs events as int32, so graphs whose packed id
-    space needs int64 (n_slots * n_pins >= 2**31) silently fall back to
-    the xla engine — the results are identical either way.
+    same random bits and agree bit-for-bit at every id-space scale — wide
+    lanes have no int32 packing cliff, so there is no fallback.
     """
     if cfg.backend not in BACKENDS:
         raise ValueError(f"unknown walk backend {cfg.backend!r}; use {BACKENDS}")
@@ -249,10 +273,9 @@ def _walk_chunk(
         alpha_u32=_prob_u32(cfg.alpha),
         beta_u32=_prob_u32(cfg.bias_beta),
         count_boards=cfg.count_boards,
-        event_dtype=event_dtype,
         unroll=unroll,
         block_w=cfg.pallas_block_w,
-        use_kernel=(cfg.backend == "pallas" and event_dtype == jnp.int32),
+        use_kernel=(cfg.backend == "pallas"),
     )
 
 
@@ -282,16 +305,11 @@ def pixie_random_walk(
     n_slots = query_pins.shape[0]
     n_pins = graph.n_pins
     w = cfg.n_walkers
-    # board ids are only packed when count_boards: a pin-only walk must not
-    # lose the int32 fast path to a board id space nobody counts (the fused
-    # kernel's own overflow guard makes the same distinction)
+    # board ids are only counted when count_boards: a pin-only walk must
+    # not be rejected because a board id space nobody counts would not fit
+    # a dense buffer (the shape-level chooser makes the same distinction)
     n_boards_packed = graph.n_boards if cfg.count_boards else 0
-    idt = packed_event_dtype(n_slots, max(n_pins, n_boards_packed))
-    sentinel = jnp.asarray(n_slots * n_pins, idt)
-    bsentinel = (
-        jnp.asarray(n_slots * graph.n_boards, idt) if cfg.count_boards
-        else None
-    )
+    slot_sentinel = jnp.int32(n_slots)
     count_engine = select_count_engine(
         cfg.backend, n_slots, n_pins, n_boards_packed
     )
@@ -329,21 +347,21 @@ def pixie_random_walk(
         step_base = it * cfg.chunk_steps
         walker_active = jnp.take(slot_active, slot_of_walker)
 
-        curr2, events, bevents = _walk_chunk(
+        curr2, sev, pev, bev = _walk_chunk(
             graph, curr, query_of_walker, user_feat, slot_of_walker,
-            key, step_base, cfg, n_slots, idt,
+            key, step_base, cfg, n_slots,
         )
         curr = jnp.where(walker_active, curr2, curr)
-        events = jnp.where(walker_active[None, :], events, sentinel)
+        # masking the shared slot lane invalidates pin AND board events
+        sev = jnp.where(walker_active[None, :], sev, slot_sentinel)
         # fused: accumulate the chunk AND update the running n_high tally —
         # no n_slots * n_pins reduction anywhere in this loop body
         counts, high = counter_lib.accumulate_packed_events_with_high(
-            counts, high, events, n_slots, n_pins, cfg.n_v, count_engine
+            counts, high, sev, pev, n_slots, n_pins, cfg.n_v, count_engine
         )
         if cfg.count_boards:
-            bevents = jnp.where(walker_active[None, :], bevents, bsentinel)
             bcounts = counter_lib.accumulate_packed_events(
-                bcounts, bevents, n_slots * graph.n_boards, count_engine
+                bcounts, sev, bev, n_slots, graph.n_boards, count_engine
             )
 
         steps_taken = steps_taken + walkers_per_slot * slot_active.astype(
@@ -457,14 +475,27 @@ def pixie_walk_events(
     key: Array,
     cfg: WalkConfig,
     check_every: int = 4,
+    check_mode: str = "incremental",
 ) -> EventWalkResult:
-    """Event-buffer walk: O(N) memory independent of graph size.
+    """Event-buffer walk: O(N) memory independent of graph size AND id space.
 
-    The event buffer plays the role of the paper's N-sized hash table;
-    early stopping re-aggregates the buffer every ``check_every`` chunks.
-    With ``backend="pallas"`` the packed events come straight out of the
-    fused kernel and are appended to the buffer — no packing arithmetic in
-    XLA at all.
+    The wide (slot, pin) lane buffers play the role of the paper's N-sized
+    hash table; because no lane ever holds the packed ``slot * n_pins +
+    pin`` product, this path serves packed id spaces past 2**31 (8 slots x
+    2**28 pins and beyond) on either backend with plain int32.  With
+    ``backend="pallas"`` the lanes come straight out of the fused kernel
+    and are appended to the buffers — no packing arithmetic in XLA at all.
+
+    Early stopping checks every ``check_every`` chunks.  ``check_mode``:
+
+      * ``"incremental"`` (default) — the check body folds ONLY the new
+        window's events into a carried ``counter_lib.EventHighState``
+        (sorted runs per window + running tally): O(window log window) per
+        check, no sort over the ``max_events`` buffer anywhere in the loop
+        (pinned by jaxpr inspection in tests/test_widepack.py).
+      * ``"full"`` — the pre-incremental formulation (re-sort the whole
+        buffer each check via ``events_n_high_per_slot``); kept as the
+        bit-identical oracle the incremental path is verified against.
     """
     if cfg.n_v < 1:
         # same contract as the dense engine: n_v=0 would mark every touched
@@ -472,6 +503,10 @@ def pixie_walk_events(
         raise ValueError(
             f"n_v must be >= 1, got {cfg.n_v}; use "
             "cfg.without_early_stop() to disable early stopping"
+        )
+    if check_mode not in ("incremental", "full"):
+        raise ValueError(
+            f"unknown check_mode {check_mode!r}; use 'incremental' or 'full'"
         )
     if cfg.count_boards:
         # event mode only buffers pin visits; don't make the chunk engine
@@ -483,8 +518,12 @@ def pixie_walk_events(
     per_chunk = w * cfg.chunk_steps
     max_chunks = cfg.max_chunks()
     max_events = max_chunks * per_chunk
-    idt = packed_event_dtype(n_slots, n_pins)
-    sentinel = jnp.asarray(n_slots * n_pins, dtype=idt)
+    slot_sentinel = jnp.int32(n_slots)
+    # number of check windows that can actually fire; sizes the run-segment
+    # state (check_every past max_chunks means checks never fire at all —
+    # e.g. the check_every=10**9 idiom — and must not size anything)
+    n_windows = max_chunks // check_every
+    seg_cap = check_every * per_chunk
 
     valid_q = (query_pins >= 0) & (query_weights > 0)
     safe_q = jnp.where(valid_q, query_pins, 0)
@@ -501,54 +540,99 @@ def pixie_walk_events(
         jnp.ones((w,), jnp.int32), slot_of_walker, num_segments=n_slots
     )
 
-    events0 = jnp.full((max_events,), sentinel, dtype=idt)
+    sev0 = jnp.full((max_events,), slot_sentinel, jnp.int32)
+    pev0 = jnp.zeros((max_events,), jnp.int32)
+    incremental = check_mode == "incremental" and n_windows > 0
+    hstate0 = counter_lib.events_high_init(
+        n_slots, n_windows if incremental else 0, seg_cap if incremental else 1
+    )
 
     def cond(state):
-        _, _, _, slot_active, it = state
+        _, _, _, _, _, slot_active, it = state
         return jnp.any(slot_active) & (it < max_chunks)
 
     def body(state):
-        curr, events, steps_taken, slot_active, it = state
+        curr, sev_buf, pev_buf, hstate, steps_taken, slot_active, it = state
         step_base = it * cfg.chunk_steps
         walker_active = jnp.take(slot_active, slot_of_walker)
-        curr2, chunk_events, _ = _walk_chunk(
+        curr2, sev, pev, _ = _walk_chunk(
             graph, curr, query_of_walker, user_feat, slot_of_walker,
-            key, step_base, cfg, n_slots, idt,
+            key, step_base, cfg, n_slots,
         )
         curr = jnp.where(walker_active, curr2, curr)
-        packed = jnp.where(
-            walker_active[None, :], chunk_events, sentinel
+        # mask BOTH lanes: sentinel events are uniformly (n_slots, 0), the
+        # kernel's own convention, so aggregated run arrays stay sorted
+        # end to end (events_high_fold binary-searches them)
+        sev = jnp.where(
+            walker_active[None, :], sev, slot_sentinel
         ).reshape(-1)
-        events = jax.lax.dynamic_update_slice(events, packed, (it * per_chunk,))
+        pev = jnp.where(walker_active[None, :], pev, 0).reshape(-1)
+        off = it * per_chunk
+        sev_buf = jax.lax.dynamic_update_slice(sev_buf, sev, (off,))
+        pev_buf = jax.lax.dynamic_update_slice(pev_buf, pev, (off,))
         steps_taken = steps_taken + walkers_per_slot * slot_active.astype(
             jnp.int32
         ) * cfg.chunk_steps
 
-        def check(args):
-            events, steps_taken = args
-            n_high = counter_lib.events_n_high_per_slot(
-                events, n_slots, n_pins, cfg.n_v, max_events
-            )
-            return valid_q & (steps_taken < n_q) & (n_high <= cfg.n_p)
-
         do_check = (it + 1) % check_every == 0
-        slot_active = jax.lax.cond(
+
+        if incremental:
+
+            def check(args):
+                sev_buf, pev_buf, hstate, steps_taken, it = args
+                # fold ONLY this window's events: the last check_every
+                # chunks, ending at the chunk just written
+                start = (it + 1) * per_chunk - seg_cap
+                hstate = counter_lib.events_high_fold(
+                    hstate,
+                    jax.lax.dynamic_slice(sev_buf, (start,), (seg_cap,)),
+                    jax.lax.dynamic_slice(pev_buf, (start,), (seg_cap,)),
+                    n_slots, n_pins, cfg.n_v, seg_cap=seg_cap,
+                )
+                active = (
+                    valid_q & (steps_taken < n_q) & (hstate.high <= cfg.n_p)
+                )
+                return active, hstate
+
+        else:
+
+            def check(args):
+                sev_buf, pev_buf, hstate, steps_taken, it = args
+                n_high = counter_lib.events_n_high_per_slot(
+                    sev_buf, pev_buf, n_slots, n_pins, cfg.n_v, max_events
+                )
+                hstate = hstate._replace(high=n_high)
+                return valid_q & (steps_taken < n_q) & (
+                    n_high <= cfg.n_p
+                ), hstate
+
+        slot_active, hstate = jax.lax.cond(
             do_check,
             check,
-            lambda args: valid_q & (args[1] < n_q),
-            (events, steps_taken),
+            lambda args: (valid_q & (args[3] < n_q), args[2]),
+            (sev_buf, pev_buf, hstate, steps_taken, it),
         )
-        return curr, events, steps_taken, slot_active, it + 1
+        return curr, sev_buf, pev_buf, hstate, steps_taken, slot_active, it + 1
 
     state0 = (
         query_of_walker,
-        events0,
+        sev0,
+        pev0,
+        hstate0,
         jnp.zeros((n_slots,), jnp.int32),
         valid_q,
         jnp.asarray(0, jnp.int32),
     )
-    _, events, steps_taken, _, it = jax.lax.while_loop(cond, body, state0)
-    return EventWalkResult(events=events, steps_taken=steps_taken, chunks_run=it)
+    _, sev_buf, pev_buf, hstate, steps_taken, _, it = jax.lax.while_loop(
+        cond, body, state0
+    )
+    return EventWalkResult(
+        slot_events=sev_buf,
+        pin_events=pev_buf,
+        steps_taken=steps_taken,
+        chunks_run=it,
+        n_high=hstate.high,
+    )
 
 
 def pixie_walk_events_fixed(
@@ -571,9 +655,7 @@ def pixie_walk_events_fixed(
     if cfg.count_boards:
         cfg = dataclasses.replace(cfg, count_boards=False)
     n_slots = query_pins.shape[0]
-    n_pins = graph.n_pins
     w = cfg.n_walkers
-    idt = packed_event_dtype(n_slots, n_pins)
 
     valid_q = (query_pins >= 0) & (query_weights > 0)
     safe_q = jnp.where(valid_q, query_pins, 0)
@@ -589,20 +671,22 @@ def pixie_walk_events_fixed(
 
     def body(curr, it):
         step_base = it * cfg.chunk_steps
-        curr2, chunk_events, _ = _walk_chunk(
+        curr2, sev, pev, _ = _walk_chunk(
             graph, curr, query_of_walker, user_feat, slot_of_walker,
-            key, step_base, cfg, n_slots, idt, unroll=unroll,
+            key, step_base, cfg, n_slots, unroll=unroll,
         )
-        return curr2, chunk_events.reshape(-1)
+        return curr2, (sev.reshape(-1), pev.reshape(-1))
 
-    curr, chunks = jax.lax.scan(
+    curr, (sev_chunks, pev_chunks) = jax.lax.scan(
         body, query_of_walker, jnp.arange(n_chunks), unroll=True
     )
     steps = jnp.full((n_slots,), n_chunks * cfg.chunk_steps, jnp.int32)
     return EventWalkResult(
-        events=chunks.reshape(-1),
+        slot_events=sev_chunks.reshape(-1),
+        pin_events=pev_chunks.reshape(-1),
         steps_taken=steps,
         chunks_run=jnp.asarray(n_chunks, jnp.int32),
+        n_high=jnp.zeros((n_slots,), jnp.int32),
     )
 
 
@@ -613,12 +697,17 @@ def recommend_from_events(
     query_pins: Array,
     top_k: int,
 ) -> Tuple[Array, Array]:
-    """Eq. 3 + top-k from an event buffer. -> (scores, pin ids)."""
-    max_events = result.events.shape[0]
-    sentinel = n_slots * n_pins
-    uniq, counts = counter_lib.events_to_counts(result.events, n_slots, max_events)
+    """Eq. 3 + top-k from wide event lane buffers. -> (scores, pin ids).
+
+    Pure pair-sort aggregation on the int32 lanes: serves id spaces past
+    2**31 packed ids without 64-bit arithmetic anywhere.
+    """
+    max_events = result.slot_events.shape[0]
+    uniq_slot, uniq_pin, counts = counter_lib.events_to_counts(
+        result.slot_events, result.pin_events, n_slots, max_events
+    )
     pin_ids, boosted = counter_lib.boosted_from_events(
-        uniq, counts, n_pins, sentinel, max_events
+        uniq_slot, uniq_pin, counts, n_slots, n_pins, max_events
     )
     # mask out query pins
     is_query = jnp.isin(pin_ids, query_pins)

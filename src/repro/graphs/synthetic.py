@@ -191,3 +191,20 @@ def top_degree_pins(sg: SyntheticGraph, k: int = 16) -> np.ndarray:
     """Pins with the highest degree — safe query pins for tests/benchmarks."""
     degs = np.asarray(sg.graph.p2b.degrees())
     return np.argsort(-degs)[:k].astype(np.int32)
+
+
+def sparse_wide_graph(
+    seed: int, n_pins: int, n_boards: int, n_edges: int, hot_pins: int
+) -> PinBoardGraph:
+    """A graph with a huge pin-id space but edges concentrated on a small
+    hot prefix — tiny CSR arrays, production-sized id space.
+
+    This is how the wide-pack tests and benchmarks reach packed id spaces
+    past 2**31 (e.g. 65536 query slots x 40000 pins) without a gigabyte of
+    offsets: all ``n_edges`` edges land on pins ``[0, hot_pins)`` so the
+    walk has somewhere to go, while ``n_pins`` stretches the id space.
+    """
+    rng = np.random.default_rng(seed)
+    pins = rng.integers(0, hot_pins, n_edges)
+    boards = rng.integers(0, n_boards, n_edges)
+    return build_graph(pins, boards, n_pins=n_pins, n_boards=n_boards)

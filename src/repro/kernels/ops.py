@@ -23,6 +23,9 @@ from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.embedding_bag import embedding_bag as _bag_kernel
 from repro.kernels.visit_counter import visit_counter as _counter_kernel
 from repro.kernels.visit_counter import (
+    visit_counter_wide as _counter_wide_kernel,
+)
+from repro.kernels.visit_counter import (
     visit_counter_update_high as _counter_high_kernel,
 )
 from repro.kernels.walk_step import walk_step as _walk_kernel
@@ -47,16 +50,35 @@ def visit_counts(
     return ref.visit_counter_ref(events, n_bins)
 
 
+def visit_counts_wide(
+    slot_events: Array,
+    id_events: Array,
+    *,
+    n_slots: int,
+    n_dim: int,
+    use_kernel: Optional[bool] = None,
+) -> Array:
+    """Histogram of wide (slot, id) event lanes over n_slots * n_dim bins."""
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        return _counter_wide_kernel(
+            slot_events, id_events, n_slots=n_slots, n_dim=n_dim
+        )
+    return ref.visit_counter_wide_ref(slot_events, id_events, n_slots, n_dim)
+
+
 def visit_counts_update_high(
     prior_counts: Array,
-    events: Array,
+    slot_events: Array,
+    pin_events: Array,
     *,
     n_slots: int,
     n_pins: int,
     n_v: int,
     use_kernel: Optional[bool] = None,
 ) -> Tuple[Array, Array]:
-    """Fused running-count update + per-slot n_v-crossing tally.
+    """Fused running-count update + per-slot n_v-crossing tally (wide events).
 
     Returns ``(new_counts (n_slots * n_pins,), delta_high (n_slots,))`` —
     the incremental early-stop statistic of the dense walk engine
@@ -67,10 +89,11 @@ def visit_counts_update_high(
         use_kernel = _default_use_kernel()
     if use_kernel:
         return _counter_high_kernel(
-            prior_counts, events, n_slots=n_slots, n_pins=n_pins, n_v=n_v
+            prior_counts, slot_events, pin_events,
+            n_slots=n_slots, n_pins=n_pins, n_v=n_v,
         )
     return ref.visit_counter_update_high_ref(
-        prior_counts, events, n_slots, n_pins, n_v
+        prior_counts, slot_events, pin_events, n_slots, n_pins, n_v
     )
 
 
@@ -122,27 +145,25 @@ def walk_chunk_fused(
     alpha_u32: int,
     beta_u32: int,
     count_boards: bool = False,
-    event_dtype=jnp.int32,
     unroll: bool = False,
     block_w: Optional[int] = None,
     use_kernel: Optional[bool] = None,
-) -> Tuple[Array, Array, Optional[Array]]:
-    """chunk_steps fused walk supersteps -> (next, events, board_events|None).
+) -> Tuple[Array, Array, Array, Optional[Array]]:
+    """chunk_steps fused walk supersteps.
 
-    The kernel path runs ALL chunk_steps steps in one pallas_call with
-    walker state resident in VMEM; the oracle path is the same arithmetic
-    as two-level XLA gathers (this is the walk's "xla" backend).  Both
-    consume the same (chunk_steps, w, 4) uint32 counter-RNG bits, so their
-    emitted events agree bit-for-bit.
+    Returns ``(next, slot_events, pin_events, board_events | None)`` —
+    wide (slot, pin) int32 event lanes (slot lane sentinel ``n_slots`` for
+    invalid steps; the board lane shares the slot lane), so both engines
+    cover packed id spaces past 2**31 with no fallback.  The kernel path
+    runs ALL chunk_steps steps in one pallas_call with walker state
+    resident in VMEM; the oracle path is the same arithmetic as two-level
+    XLA gathers (this is the walk's "xla" backend).  Both consume the same
+    (chunk_steps, w, 4) uint32 counter-RNG bits, so their emitted events
+    agree bit-for-bit.
     """
     if use_kernel is None:
         use_kernel = _default_use_kernel()
     if use_kernel:
-        if event_dtype != jnp.int32:
-            raise ValueError(
-                "fused walk kernel emits int32 packed events; "
-                "use the xla backend for graphs needing int64 packing"
-            )
         w = curr.shape[0]
         if block_w is None:
             # one grid cell per DEFAULT_BLOCK_W walkers when it divides the
@@ -162,7 +183,7 @@ def walk_chunk_fused(
         p2b_feat_bounds, b2p_feat_bounds,
         n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
         alpha_u32=alpha_u32, beta_u32=beta_u32,
-        count_boards=count_boards, event_dtype=event_dtype, unroll=unroll,
+        count_boards=count_boards, unroll=unroll,
     )
 
 

@@ -31,9 +31,34 @@ def visit_counter_ref(events: Array, n_bins: int) -> Array:
     return counts.at[safe].add(valid.astype(jnp.int32))
 
 
+def visit_counter_wide_ref(
+    slot_events: Array, id_events: Array, n_slots: int, n_dim: int
+) -> Array:
+    """Histogram of wide (slot, id) event lanes over n_slots * n_dim bins.
+
+    slot_events / id_events: (m,) int32 lanes; an event is valid iff
+    ``0 <= slot < n_slots`` and ``0 <= id < n_dim`` (the walk's invalid
+    sentinel is slot = n_slots).  Returns (n_slots * n_dim,) int32.  Only
+    meaningful when the flat bin space fits a dense buffer — the wrapper
+    layer enforces ``n_slots * n_dim < 2**31``.
+    """
+    valid = (
+        (slot_events >= 0) & (slot_events < n_slots)
+        & (id_events >= 0) & (id_events < n_dim)
+    )
+    flat = jnp.where(
+        valid,
+        slot_events.astype(jnp.int32) * n_dim + id_events.astype(jnp.int32),
+        0,
+    )
+    counts = jnp.zeros((n_slots * n_dim,), jnp.int32)
+    return counts.at[flat].add(valid.astype(jnp.int32))
+
+
 def visit_counter_update_high_ref(
     prior_counts: Array,
-    events: Array,
+    slot_events: Array,
+    id_events: Array,
     n_slots: int,
     n_pins: int,
     n_v: int,
@@ -46,8 +71,9 @@ def visit_counter_update_high_ref(
     reduction — this is the obviously-correct ground truth the fused kernel
     (and the chunk-local XLA twin in core/counter.py) must match exactly.
     """
-    n_bins = n_slots * n_pins
-    new = prior_counts + visit_counter_ref(events, n_bins)
+    new = prior_counts + visit_counter_wide_ref(
+        slot_events, id_events, n_slots, n_pins
+    )
     crossed = (prior_counts < n_v) & (new >= n_v)
     delta = jnp.sum(
         crossed.reshape(n_slots, n_pins).astype(jnp.int32), axis=1
@@ -94,9 +120,9 @@ def walk_step_ref(
 
 
 # ---------------------------------------------------------------------------
-# walk_chunk: chunk_steps fused supersteps, packed event emission (the XLA
-# twin of kernels/walk_step.walk_steps_fused — same random bits, same
-# arithmetic, so the two backends agree bit-for-bit)
+# walk_chunk: chunk_steps fused supersteps, wide (slot, pin) event emission
+# (the XLA twin of kernels/walk_step.walk_steps_fused — same random bits,
+# same arithmetic, so the two backends agree bit-for-bit)
 # ---------------------------------------------------------------------------
 
 _RMASK = 0x7FFFFFFF  # keep modulo operands non-negative int32
@@ -121,16 +147,17 @@ def walk_chunk_ref(
     alpha_u32: int,
     beta_u32: int,
     count_boards: bool = False,
-    event_dtype=jnp.int32,
     unroll: bool = False,
-) -> Tuple[Array, Array, Optional[Array]]:
+) -> Tuple[Array, Array, Array, Optional[Array]]:
     """chunk_steps walk supersteps; two-level vectorized gathers per step.
 
-    Returns (next_curr (w,), events (chunk_steps, w), board_events | None).
-    Events are packed ``slot * n_pins + pin`` in ``event_dtype`` with
-    ``n_slots * n_pins`` as the invalid-step sentinel — identical packing to
-    the fused Pallas kernel.  ``unroll`` replaces the fori_loop over steps
-    with a Python loop (XLA cost-model mode, see launch/dryrun.py).
+    Returns ``(next_curr (w,), slot_events (chunk_steps, w), pin_events
+    (chunk_steps, w), board_events | None)``.  Events are WIDE (slot, pin)
+    int32 lane pairs with slot = ``n_slots`` as the invalid-step sentinel
+    (value lanes 0) — identical emission to the fused Pallas kernel; the
+    board lane shares the slot lane.  ``unroll`` replaces the fori_loop
+    over steps with a Python loop (XLA cost-model mode, see
+    launch/dryrun.py).
     """
     chunk_steps, w = rbits.shape[0], rbits.shape[1]
     # biasing needs BOTH hop tables; one-sided bounds mean no bias (the
@@ -140,16 +167,14 @@ def walk_chunk_ref(
         and b2p_feat_bounds is not None
         and beta_u32 > 0
     )
-    idt = event_dtype
-    sentinel = jnp.asarray(n_slots * n_pins, idt)
-    bsentinel = jnp.asarray(n_slots * n_boards, idt)
+    slot_sentinel = jnp.int32(n_slots)
     curr = curr.astype(jnp.int32)
     query = query.astype(jnp.int32)
     slot = slot.astype(jnp.int32)
     off_dt = p2b_offsets.dtype
 
     def one_step(s, carry):
-        curr, events, bevents = carry
+        curr, sev, pev, bev = carry
         restart = rbits[s, :, 0] < jnp.uint32(alpha_u32)
         use_b = rbits[s, :, 1] < jnp.uint32(beta_u32)
         r_board = (rbits[s, :, 2] & jnp.uint32(_RMASK)).astype(jnp.int32)
@@ -184,31 +209,25 @@ def walk_chunk_ref(
         pin = jnp.take(b2p_targets, bidx).astype(jnp.int32)
 
         new_curr = jnp.where(ok, pin, query)
-        ev = jnp.where(
-            ok, slot.astype(idt) * n_pins + pin.astype(idt), sentinel
-        )
-        events = events.at[s].set(ev)
+        sev = sev.at[s].set(jnp.where(ok, slot, slot_sentinel))
+        pev = pev.at[s].set(jnp.where(ok, pin, 0))
         if count_boards:
-            bev = jnp.where(
-                ok,
-                slot.astype(idt) * n_boards + b_local.astype(idt),
-                bsentinel,
-            )
-            bevents = bevents.at[s].set(bev)
-        return new_curr, events, bevents
+            bev = bev.at[s].set(jnp.where(ok, b_local, 0))
+        return new_curr, sev, pev, bev
 
     carry = (
         curr,
-        jnp.full((chunk_steps, w), sentinel, idt),
-        jnp.full((chunk_steps, w) if count_boards else (1, 1), bsentinel, idt),
+        jnp.full((chunk_steps, w), slot_sentinel, jnp.int32),
+        jnp.zeros((chunk_steps, w), jnp.int32),
+        jnp.zeros((chunk_steps, w) if count_boards else (1, 1), jnp.int32),
     )
     if unroll:
         for s in range(chunk_steps):
             carry = one_step(s, carry)
     else:
         carry = jax.lax.fori_loop(0, chunk_steps, one_step, carry)
-    new_curr, events, bevents = carry
-    return new_curr, events, bevents if count_boards else None
+    new_curr, sev, pev, bev = carry
+    return new_curr, sev, pev, bev if count_boards else None
 
 
 # ---------------------------------------------------------------------------

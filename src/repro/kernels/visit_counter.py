@@ -18,12 +18,15 @@ VMEM budget per program: tile (TILE,) int32 + chunk (CHUNK,) int32 + the
 (CHUNK, TILE) one-hot intermediate = 4*(512 + 2048 + 512*2048) B ~ 4.2 MiB,
 comfortably inside the ~16 MiB v5e VMEM.
 
-Two entry points share the tile-scan core:
+Three entry points share the tile-scan core:
 
-* ``visit_counter`` — plain histogram of an event buffer (kept as the
-  minimal kernel; used by the event-mode aggregation paths).
+* ``visit_counter`` — plain histogram of a flat-id event buffer (kept as
+  the minimal kernel; generic id histograms).
+* ``visit_counter_wide`` — histogram of WIDE (slot, id) int32 event lane
+  pairs; the flat ``slot * n_dim + id`` bin id is formed inside the
+  kernel, so the lanes themselves never carry the packed product.
 * ``visit_counter_update_high`` — the fused early-stop counter for the
-  dense walk engine (Algorithm 3): takes the PRIOR running counts as an
+  dense walk engine (Algorithm 3), also wide: takes the PRIOR running counts as an
   input, accumulates the chunk's events on top of them *inside VMEM*, and
   additionally emits, per query slot, how many count-table entries crossed
   the ``n_v`` visit threshold during this update.  The walk loop's
@@ -33,11 +36,17 @@ Two entry points share the tile-scan core:
 
 This kernel is the aggregation half of the fused walk engine
 (``WalkConfig(backend="pallas")``): ``kernels/walk_step.walk_steps_fused``
-emits packed ``slot * n_pins + pin`` events (sentinel = ``n_slots * n_pins``,
-conveniently out-of-range here, so invalid steps drop out of the histogram
-for free) and ``core/counter.accumulate_packed_events[_with_high]``
-histograms each chunk over ``n_slots * n_pins`` bins with these kernels
-instead of XLA scatter-add.
+emits WIDE (slot, pin) int32 event lanes (slot lane sentinel ``n_slots``
+for invalid steps) and ``core/counter.accumulate_packed_events[_with_high]``
+histograms each chunk over ``n_slots * n_pins`` bins with the ``*_wide``
+kernels instead of XLA scatter-add.  The wide kernels pack
+``slot * n_pins + pin`` INSIDE the kernel, in VMEM: dense counting
+inherently requires the flat bin space to fit a materialized buffer
+(< 2**31 bins — enforced by the wrapper), so the in-kernel product is
+always int32-safe; sentinel events map to bin ``n_slots * n_pins`` which
+never matches a live tile and drops out of the histogram for free.
+Id spaces PAST 2**31 never reach these kernels — they use the event-mode
+(sort-based) counting path, which consumes the wide lanes directly.
 """
 
 from __future__ import annotations
@@ -107,23 +116,124 @@ def visit_counter(
 
 
 # ---------------------------------------------------------------------------
+# Wide-event tile-scan histogram: (slot, id) int32 lanes in, flat bins out
+# ---------------------------------------------------------------------------
+
+
+def _require_dense_bins(n_bins: int) -> None:
+    """Dense counting materializes an (n_bins,) buffer: must fit int32."""
+    if n_bins + 1 >= 2**31:
+        raise ValueError(
+            f"dense counting needs n_slots * n_dim < 2**31, got {n_bins}; "
+            "id spaces past int32 use event-mode (sort-based) counting"
+        )
+
+
+def _flat_ids_from_lanes(slot_ev, id_ev, n_slots: int, n_dim: int):
+    """Pack wide lanes to flat bin ids in-register; invalid events -> -1.
+
+    The product is int32-safe because the wide wrappers only accept bin
+    spaces that fit a dense buffer (``n_slots * n_dim < 2**31``).
+    """
+    valid = (
+        (slot_ev >= 0) & (slot_ev < n_slots)
+        & (id_ev >= 0) & (id_ev < n_dim)
+    )
+    flat = (
+        jnp.where(valid, slot_ev, 0) * jnp.int32(n_dim)
+        + jnp.where(valid, id_ev, 0)
+    )
+    return jnp.where(valid, flat, jnp.int32(-1))
+
+
+def _visit_counter_wide_kernel(
+    slot_ref, id_ref, counts_ref, *, tile: int, chunk: int,
+    n_slots: int, n_dim: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    tile_base = pl.program_id(0) * tile
+    ev = _flat_ids_from_lanes(
+        slot_ref[...], id_ref[...], n_slots, n_dim
+    )                                                      # (chunk,)
+    ids = tile_base + jax.lax.broadcasted_iota(jnp.int32, (chunk, tile), 1)
+    hit = (ev[:, None] == ids).astype(jnp.int32)
+    counts_ref[...] += jnp.sum(hit, axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_slots", "n_dim", "tile", "chunk", "interpret")
+)
+def visit_counter_wide(
+    slot_events: jax.Array,
+    id_events: jax.Array,
+    *,
+    n_slots: int,
+    n_dim: int,
+    tile: int = DEFAULT_TILE,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Histogram of wide (slot, id) lanes over ``n_slots * n_dim`` flat bins.
+
+    slot_events / id_events: (m,) int32; an event counts iff
+    ``0 <= slot < n_slots`` and ``0 <= id < n_dim`` (the walk's invalid
+    sentinel, slot = ``n_slots``, is dropped for free).  Returns
+    ``(n_slots * n_dim,)`` int32.
+    """
+    n_bins = n_slots * n_dim
+    _require_dense_bins(n_bins)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m = slot_events.shape[0]
+    if m == 0:  # zero-size grid is illegal; nothing to count either way
+        return jnp.zeros((n_bins,), jnp.int32)
+    m_pad = -(-m // chunk) * chunk
+    if m_pad != m:
+        pad = jnp.full((m_pad - m,), -1, jnp.int32)
+        slot_events = jnp.concatenate([slot_events.astype(jnp.int32), pad])
+        id_events = jnp.concatenate([id_events.astype(jnp.int32), pad])
+    n_pad = -(-n_bins // tile) * tile
+    grid = (n_pad // tile, m_pad // chunk)
+    ev_spec = pl.BlockSpec((chunk,), lambda i, j: (j,))
+    out = pl.pallas_call(
+        functools.partial(
+            _visit_counter_wide_kernel, tile=tile, chunk=chunk,
+            n_slots=n_slots, n_dim=n_dim,
+        ),
+        grid=grid,
+        in_specs=[ev_spec, ev_spec],
+        out_specs=pl.BlockSpec((tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(slot_events.astype(jnp.int32), id_events.astype(jnp.int32))
+    return out[:n_bins]
+
+
+# ---------------------------------------------------------------------------
 # Fused count-update + incremental early-stop tally (dense walk hot path)
 # ---------------------------------------------------------------------------
 
 
 def _visit_counter_high_kernel(
-    events_ref, prior_ref, counts_ref, high_ref,
-    *, tile: int, chunk: int, n_chunks: int, n_pins: int, n_v: int,
-    slot_pad: int,
+    slot_ref, pin_ref, prior_ref, counts_ref, high_ref,
+    *, tile: int, chunk: int, n_chunks: int, n_slots: int, n_pins: int,
+    n_v: int, slot_pad: int,
 ):
     """Tile-scan histogram on top of PRIOR counts, plus threshold crossings.
 
-    The count tile is initialised from the prior running counts, stays in
-    VMEM while every event chunk streams past (inner grid axis), and after
-    the last chunk the tile is compared against its prior values: entries
-    that crossed ``count >= n_v`` during this update are summed per query
-    slot (``bin // n_pins``) with a one-hot compare — no scatter, no
-    full-buffer reduction outside the kernel.
+    Events arrive as wide (slot, pin) int32 lanes and are packed to flat
+    bin ids in-register (int32-safe: the wrapper enforces the dense-bin
+    precondition).  The count tile is initialised from the prior running
+    counts, stays in VMEM while every event chunk streams past (inner grid
+    axis), and after the last chunk the tile is compared against its prior
+    values: entries that crossed ``count >= n_v`` during this update are
+    summed per query slot (``bin // n_pins``) with a one-hot compare — no
+    scatter, no full-buffer reduction outside the kernel.
     """
     j = pl.program_id(1)
     tile_base = pl.program_id(0) * tile
@@ -133,7 +243,9 @@ def _visit_counter_high_kernel(
         counts_ref[...] = prior_ref[...]
         high_ref[...] = jnp.zeros_like(high_ref)
 
-    ev = events_ref[...]                                   # (chunk,)
+    ev = _flat_ids_from_lanes(
+        slot_ref[...], pin_ref[...], n_slots, n_pins
+    )                                                      # (chunk,)
     ids = tile_base + jax.lax.broadcasted_iota(jnp.int32, (chunk, tile), 1)
     hit = (ev[:, None] == ids).astype(jnp.int32)
     counts_ref[...] += jnp.sum(hit, axis=0)
@@ -166,7 +278,8 @@ def _visit_counter_high_kernel(
 )
 def visit_counter_update_high(
     prior_counts: jax.Array,
-    events: jax.Array,
+    slot_events: jax.Array,
+    pin_events: jax.Array,
     *,
     n_slots: int,
     n_pins: int,
@@ -178,9 +291,10 @@ def visit_counter_update_high(
     """Fused ``new = prior + hist(events)`` plus per-slot n_v crossings.
 
     prior_counts: (n_slots * n_pins,) int32 running visit counts.
-    events:       (m,) int32 packed ``slot * n_pins + pin`` ids; anything
-                  outside [0, n_slots * n_pins) (the walk's invalid-step
-                  sentinel) is dropped.
+    slot_events / pin_events: (m,) int32 wide event lanes; an event counts
+                  iff ``0 <= slot < n_slots`` and ``0 <= pin < n_pins``
+                  (the walk's invalid-step sentinel, slot = ``n_slots``,
+                  is dropped).
     Returns ``(new_counts (n_slots * n_pins,), delta_high (n_slots,))``
     where ``delta_high[s]`` counts bins of slot s whose visit count crossed
     from below ``n_v`` to ``>= n_v`` during this update.  Requires
@@ -189,10 +303,11 @@ def visit_counter_update_high(
     """
     if n_v < 1:
         raise ValueError(f"n_v must be >= 1 for crossing tallies, got {n_v}")
+    n_bins = n_slots * n_pins
+    _require_dense_bins(n_bins)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    n_bins = n_slots * n_pins
-    m = events.shape[0]
+    m = slot_events.shape[0]
     if m == 0:  # zero-size grid is illegal; nothing to count either way
         return (
             prior_counts.astype(jnp.int32),
@@ -200,9 +315,9 @@ def visit_counter_update_high(
         )
     m_pad = -(-m // chunk) * chunk
     if m_pad != m:
-        events = jnp.concatenate(
-            [events, jnp.full((m_pad - m,), -1, events.dtype)]
-        )
+        pad = jnp.full((m_pad - m,), -1, jnp.int32)
+        slot_events = jnp.concatenate([slot_events.astype(jnp.int32), pad])
+        pin_events = jnp.concatenate([pin_events.astype(jnp.int32), pad])
     n_pad = -(-n_bins // tile) * tile
     prior = prior_counts.astype(jnp.int32)
     if n_pad != n_bins:
@@ -211,15 +326,17 @@ def visit_counter_update_high(
         )
     slot_pad = -(-n_slots // SLOT_PAD) * SLOT_PAD
     n_tiles, n_chunks = n_pad // tile, m_pad // chunk
+    ev_spec = pl.BlockSpec((chunk,), lambda i, j: (j,))
     counts, high_parts = pl.pallas_call(
         functools.partial(
             _visit_counter_high_kernel,
             tile=tile, chunk=chunk, n_chunks=n_chunks,
-            n_pins=n_pins, n_v=n_v, slot_pad=slot_pad,
+            n_slots=n_slots, n_pins=n_pins, n_v=n_v, slot_pad=slot_pad,
         ),
         grid=(n_tiles, n_chunks),
         in_specs=[
-            pl.BlockSpec((chunk,), lambda i, j: (j,)),
+            ev_spec,
+            ev_spec,
             pl.BlockSpec((tile,), lambda i, j: (i,)),
         ],
         out_specs=[
@@ -231,6 +348,10 @@ def visit_counter_update_high(
             jax.ShapeDtypeStruct((n_tiles, slot_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(events.astype(jnp.int32), prior)
+    )(
+        slot_events.astype(jnp.int32),
+        pin_events.astype(jnp.int32),
+        prior,
+    )
     # (n_tiles, slot_pad) partials: a tiny reduction, NOT O(n_slots*n_pins)
     return counts[:n_bins], jnp.sum(high_parts, axis=0)[:n_slots]

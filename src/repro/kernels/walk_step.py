@@ -11,13 +11,17 @@ Two generations of kernel live here:
                         feature, query-slot id) is loaded into VMEM once and
                         stays resident across every step of the chunk; only
                         the unavoidable CSR gathers touch HBM.  Each step the
-                        kernel also *emits* packed ``slot * n_pins + pin``
-                        visit events straight into a bounded
-                        ``(chunk_steps, w)`` event buffer (sentinel =
-                        ``n_slots * n_pins`` for invalid / dead-end steps), so
-                        the host-side walk loop never scatter-adds: events are
-                        aggregated afterwards by the tile-scan
-                        ``visit_counter`` kernel.
+                        kernel also *emits* wide (slot, pin) visit events —
+                        two int32 lanes per event, slot lane sentinel
+                        ``n_slots`` for invalid / dead-end steps — straight
+                        into bounded ``(chunk_steps, w)`` event buffers, so
+                        the host-side walk loop never scatter-adds: events
+                        are aggregated afterwards by the tile-scan
+                        ``visit_counter`` kernels.  Wide lanes mean the
+                        packed id space ``n_slots * n_pins`` may exceed
+                        2**31 (the paper's 3B-pin regime): no lane ever
+                        holds the packed product, so there is no int32
+                        cliff and no xla fallback.
 
 The paper's inner loop (Algorithm 2 lines 6-13) is three dependent random
 memory accesses per step: offsets[pin] -> targets[...] (board), then
@@ -187,7 +191,7 @@ def _walk_steps_fused_kernel(
     Ref layout (inputs then outputs, bias bounds present only if use_bias):
       curr, query, feat, slot, rbits,
       p2b_off, p2b_tgt, b2p_off, b2p_tgt, [p2b_fb, b2p_fb],
-      -> next, events, [board_events]
+      -> next, slot_events, pin_events, [board_events]
     """
     (curr_ref, query_ref, feat_ref, slot_ref, rbits_ref,
      p2b_off_ref, p2b_tgt_ref, b2p_off_ref, b2p_tgt_ref) = refs[:9]
@@ -195,8 +199,8 @@ def _walk_steps_fused_kernel(
     if use_bias:
         p2b_fb_ref, b2p_fb_ref = refs[9:11]
         i = 11
-    next_ref, events_ref = refs[i:i + 2]
-    bevents_ref = refs[i + 2] if count_boards else None
+    next_ref, sev_ref, pev_ref = refs[i:i + 3]
+    bev_ref = refs[i + 3] if count_boards else None
 
     # Walker state + the whole chunk's random bits: loaded into
     # VREGs/VMEM once, resident for all chunk_steps supersteps.
@@ -204,12 +208,11 @@ def _walk_steps_fused_kernel(
     slot = slot_ref[...]
     feat = feat_ref[...]
     rbits = rbits_ref[...]                       # (chunk_steps, block_w, 4)
-    sentinel = jnp.int32(n_slots * n_pins)
-    # board sentinel only exists when boards are packed (see wrapper guard)
-    bsentinel = jnp.int32(n_slots * n_boards if count_boards else 0)
+    # wide-event invalid sentinel: slot lane carries n_slots, value lanes 0
+    slot_sentinel = jnp.int32(n_slots)
 
     def one_step(s, carry):
-        curr, events, bevents = carry
+        curr, sev, pev, bev = carry
         # vectorized decision logic across the walker block
         restart = rbits[s, :, 0] < jnp.uint32(alpha_u32)
         use_b = rbits[s, :, 1] < jnp.uint32(beta_u32)
@@ -260,29 +263,30 @@ def _walk_steps_fused_kernel(
         )
         nxt, vis, bvis, okv = jax.lax.fori_loop(0, block_w, walker, init)
 
-        # vectorized in-kernel event emission: packed (slot, pin) ids
-        ev = jnp.where(okv, slot * n_pins + vis, sentinel)
-        events = events.at[s].set(ev)
+        # vectorized in-kernel event emission: wide (slot, pin) lanes — the
+        # pin and board lanes share the slot lane (same validity mask)
+        sev = sev.at[s].set(jnp.where(okv, slot, slot_sentinel))
+        pev = pev.at[s].set(jnp.where(okv, vis, 0))
         if count_boards:
-            bev = jnp.where(okv, slot * n_boards + bvis, bsentinel)
-            bevents = bevents.at[s].set(bev)
-        return nxt, events, bevents
+            bev = bev.at[s].set(jnp.where(okv, bvis, 0))
+        return nxt, sev, pev, bev
 
     carry0 = (
         curr_ref[...],
-        jnp.full((chunk_steps, block_w), sentinel, jnp.int32),
-        jnp.full(
-            (chunk_steps, block_w) if count_boards else (1, 1),
-            bsentinel, jnp.int32,
+        jnp.full((chunk_steps, block_w), slot_sentinel, jnp.int32),
+        jnp.zeros((chunk_steps, block_w), jnp.int32),
+        jnp.zeros(
+            (chunk_steps, block_w) if count_boards else (1, 1), jnp.int32
         ),
     )
-    curr, events, bevents = jax.lax.fori_loop(
+    curr, sev, pev, bev = jax.lax.fori_loop(
         0, chunk_steps, one_step, carry0
     )
     next_ref[...] = curr
-    events_ref[...] = events
+    sev_ref[...] = sev
+    pev_ref[...] = pev
     if count_boards:
-        bevents_ref[...] = bevents
+        bev_ref[...] = bev
 
 
 @functools.partial(
@@ -318,27 +322,22 @@ def walk_steps_fused(
 
     rbits columns: 0 = restart draw (< alpha_u32 restarts), 1 = bias draw
     (< beta_u32 uses the personalized subrange), 2 = board pick, 3 = pin
-    pick.  Returns ``(next_curr (w,), events (chunk_steps, w))`` plus
-    ``board_events (chunk_steps, w)`` when ``count_boards``; events are
-    packed ``slot * n_pins + pin`` int32 with ``n_slots * n_pins`` as the
-    invalid-step sentinel (board events: ``slot * n_boards + board_local``,
-    sentinel ``n_slots * n_boards``).  Aggregate with the tile-scan
-    ``visit_counter`` kernel — no scatters anywhere on the hot path.
+    pick.  Returns ``(next_curr (w,), slot_events (chunk_steps, w),
+    pin_events (chunk_steps, w))`` plus ``board_events (chunk_steps, w)``
+    when ``count_boards``.  Events are WIDE: the slot lane holds the query
+    slot (sentinel ``n_slots`` for invalid / dead-end steps, value lanes 0)
+    and the pin/board lanes hold the visited id — no lane ever carries the
+    packed ``slot * n_pins + pin`` product, so id spaces past 2**31 (the
+    production 3B-pin regime) run on this kernel with plain int32 lanes.
+    The board lane shares the slot lane (identical validity mask).
+    Aggregate with the tile-scan ``visit_counter`` kernels — no scatters
+    anywhere on the hot path.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     chunk_steps, w = rbits.shape[0], rbits.shape[1]
     if w % block_w != 0:
         raise ValueError(f"n_walkers {w} must be a multiple of {block_w}")
-    # board ids are only packed when count_boards; don't reject a
-    # pin-only walk because the board id space would overflow
-    packed_max = n_slots * (max(n_pins, n_boards) if count_boards else n_pins)
-    if packed_max + 1 >= 2 ** 31:
-        raise ValueError(
-            "fused walk kernel packs events as int32; largest packed id "
-            f"{packed_max} overflows (n_slots={n_slots}, n_pins={n_pins}"
-            + (f", n_boards={n_boards})" if count_boards else ")")
-        )
     use_bias = (
         p2b_feat_bounds is not None
         and b2p_feat_bounds is not None
@@ -376,8 +375,8 @@ def walk_steps_fused(
 
     ev_spec = pl.BlockSpec((chunk_steps, block_w), lambda i: (0, i))
     ev_sds = jax.ShapeDtypeStruct((chunk_steps, w), jnp.int32)
-    out_specs = [pl.BlockSpec((block_w,), blk), ev_spec]
-    out_shape = [jax.ShapeDtypeStruct((w,), jnp.int32), ev_sds]
+    out_specs = [pl.BlockSpec((block_w,), blk), ev_spec, ev_spec]
+    out_shape = [jax.ShapeDtypeStruct((w,), jnp.int32), ev_sds, ev_sds]
     if count_boards:
         out_specs.append(ev_spec)
         out_shape.append(ev_sds)
@@ -402,5 +401,5 @@ def walk_steps_fused(
         interpret=interpret,
     )(*args)
     if count_boards:
-        return out[0], out[1], out[2]
-    return out[0], out[1], None
+        return out[0], out[1], out[2], out[3]
+    return out[0], out[1], out[2], None

@@ -22,20 +22,28 @@ from repro.graphs.synthetic import small_test_graph
     n_invalid=st.integers(0, 50),
 )
 def test_events_to_counts_matches_bincount(events, n_invalid):
-    sentinel = 1000
-    ev = np.asarray(events + [sentinel] * n_invalid, np.int64)
-    np.random.default_rng(0).shuffle(ev)
-    uniq, counts = counter_lib.events_to_counts(
-        jnp.asarray(ev), n_slots=1, max_unique=ev.shape[0]
+    # single query slot; invalid events carry the slot-lane sentinel (= 1)
+    pin_ev = np.asarray(events + [0] * n_invalid, np.int32)
+    slot_ev = np.asarray([0] * len(events) + [1] * n_invalid, np.int32)
+    perm = np.random.default_rng(0).permutation(pin_ev.shape[0])
+    pin_ev, slot_ev = pin_ev[perm], slot_ev[perm]
+    uniq_slot, uniq_pin, counts = counter_lib.events_to_counts(
+        jnp.asarray(slot_ev), jnp.asarray(pin_ev),
+        n_slots=1, max_unique=pin_ev.shape[0],
     )
-    uniq, counts = np.asarray(uniq), np.asarray(counts)
+    uniq_slot = np.asarray(uniq_slot)
+    uniq_pin, counts = np.asarray(uniq_pin), np.asarray(counts)
     got = {}
-    for u, c in zip(uniq, counts):
-        if c > 0 and u < sentinel:
+    for s, u, c in zip(uniq_slot, uniq_pin, counts):
+        if c > 0 and s < 1:
             got[int(u)] = got.get(int(u), 0) + int(c)
     want = {int(k): int(v) for k, v in
             zip(*np.unique(np.asarray(events), return_counts=True))}
     assert got == want
+    # the run arrays stay lexicographically sorted (the incremental
+    # early-stop fold binary-searches them)
+    key = uniq_slot.astype(np.int64) * 2**32 + uniq_pin
+    assert (np.diff(key) >= 0).all()
 
 
 @settings(max_examples=30, deadline=None)
@@ -54,11 +62,14 @@ def test_boost_combine_eq3(counts):
 
 def test_boosted_from_events_cross_slot():
     # slot 0 visits pin 3 four times; slot 1 visits pin 3 nine times
-    n_pins, sentinel = 10, 2 * 10
-    events = jnp.asarray([3] * 4 + [13] * 9 + [sentinel] * 3, jnp.int64)
-    uniq, counts = counter_lib.events_to_counts(events, 2, events.shape[0])
+    n_slots, n_pins = 2, 10
+    slot_ev = jnp.asarray([0] * 4 + [1] * 9 + [n_slots] * 3, jnp.int32)
+    pin_ev = jnp.asarray([3] * 4 + [3] * 9 + [0] * 3, jnp.int32)
+    uniq_slot, uniq_pin, counts = counter_lib.events_to_counts(
+        slot_ev, pin_ev, n_slots, slot_ev.shape[0]
+    )
     pins, boosted = counter_lib.boosted_from_events(
-        uniq, counts, n_pins, sentinel, events.shape[0]
+        uniq_slot, uniq_pin, counts, n_slots, n_pins, slot_ev.shape[0]
     )
     pins, boosted = np.asarray(pins), np.asarray(boosted)
     idx = np.where(pins == 3)[0]
@@ -115,6 +126,71 @@ def test_pruning_monotone_in_delta(sg):
         _, stats = pruning.prune_graph(sg.graph, sg.pin_topics, None, cfg)
         edges.append(stats["edges_after"])
     assert edges == sorted(edges, reverse=True)
+
+
+def _tiny_edge_graph():
+    """Hand-built graph with degree-0, degree-1, and high-degree pins.
+
+    pin 0: isolated (degree 0); pin 1: one edge; pin 2: two edges;
+    pin 3: six edges across three boards.
+    """
+    from repro.core.graph import build_graph
+
+    pins = np.asarray([1, 2, 2, 3, 3, 3, 3, 3, 3])
+    boards = np.asarray([0, 0, 1, 0, 1, 2, 0, 1, 2])
+    g = build_graph(pins, boards, n_pins=4, n_boards=3)
+    rng = np.random.default_rng(0)
+    pin_topics = rng.dirichlet(np.ones(4), size=4).astype(np.float32)
+    return g, pin_topics
+
+
+def test_prune_graph_degree_0_and_1_pins_with_min_keep():
+    """Degree pruning must never invent or drop edges below the min_keep
+    floor: a degree-0 pin stays empty, a degree-1 pin keeps its edge even
+    at aggressive delta, and no pin drops below min(degree, min_keep)."""
+    g, pin_topics = _tiny_edge_graph()
+    cfg = pruning.PruneConfig(entropy_board_frac=0.0, delta=0.1, min_keep=2)
+    pruned, stats = pruning.prune_graph(g, pin_topics, None, cfg)
+    degs_before = np.asarray(g.p2b.degrees())
+    degs_after = np.asarray(pruned.p2b.degrees())
+    assert degs_before.tolist() == [0, 1, 2, 6]
+    assert degs_after[0] == 0            # degree-0: nothing to keep
+    assert degs_after[1] == 1            # degree-1: min_keep floor holds it
+    assert degs_after[2] == 2            # at the floor already
+    # min(degree, min_keep) is a hard floor for every pin
+    floor = np.minimum(degs_before, cfg.min_keep)
+    assert (degs_after >= floor).all()
+    assert (degs_after <= degs_before).all()
+    assert stats["edges_after"] <= stats["edges_before"]
+
+
+def test_prune_graph_zero_entropy_frac_drops_no_boards():
+    """entropy_board_frac=0.0 must be a no-op for stage 1: every edge
+    survives to the degree-pruning stage and no board disappears."""
+    g, pin_topics = _tiny_edge_graph()
+    cfg = pruning.PruneConfig(entropy_board_frac=0.0, delta=1.0)
+    pruned, stats = pruning.prune_graph(g, pin_topics, None, cfg)
+    assert "boards_dropped" not in stats
+    assert stats["edges_after_entropy"] == stats["edges_before"]
+    # delta=1.0 keeps ceil(d^1) = d edges: the whole graph passes through
+    assert stats["edges_after"] == stats["edges_before"]
+    np.testing.assert_array_equal(
+        np.asarray(pruned.p2b.degrees()), np.asarray(g.p2b.degrees())
+    )
+
+
+@pytest.mark.parametrize("frac,delta", [(0.0, 0.9), (0.34, 0.7), (0.1, 1.0)])
+def test_prune_graph_stats_invariants(sg, frac, delta):
+    """Invariants every pruning config must satisfy: edge counts only
+    shrink stage to stage, and the keep fraction lands in (0, 1]."""
+    cfg = pruning.PruneConfig(entropy_board_frac=frac, delta=delta)
+    _, stats = pruning.prune_graph(sg.graph, sg.pin_topics, None, cfg)
+    assert stats["edges_after"] <= stats["edges_after_entropy"]
+    assert stats["edges_after_entropy"] <= stats["edges_before"]
+    assert 0.0 < stats["edge_keep_frac"] <= 1.0
+    assert stats["bytes_after"] <= stats["bytes_before"]
+    if frac > 0.0:
+        assert stats["boards_dropped"] == int(frac * sg.graph.n_boards)
 
 
 def test_pruning_keeps_topical_edges(sg):

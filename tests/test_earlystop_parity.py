@@ -12,8 +12,11 @@ gather at the touched bins; pallas: crossings emitted by the fused
   * the tally == full-recount invariant, including chunk-boundary
     crossings (a bin reaching n_v across two accumulate calls, and a slot
     crossing n_p mid-walk);
-  * the int64 fallback: production-scale packed id spaces select the xla
-    engine at SHAPE level (no giant buffers materialized);
+  * the wide-lane scale contract: events are (slot, pin) int32 lane pairs
+    on BOTH engines (no packed product, no int64, no fallback branch);
+    dense counting rejects un-materializable bin spaces loudly at SHAPE
+    level (no giant buffers materialized) — event mode has no such limit
+    (tests/test_widepack.py);
   * the structural claim itself, by jaxpr inspection: the while-loop body
     contains no reduction over an ``n_slots * n_pins``-sized operand.
 """
@@ -29,7 +32,7 @@ from _hypothesis_compat import given, settings, st  # hypothesis, or seeded fall
 from repro.core import counter as counter_lib
 from repro.core import walk as walk_lib
 from repro.core.graph import CSR, PinBoardGraph
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def _random_graph(seed: int, n_pins: int, n_boards: int, n_edges: int):
@@ -118,21 +121,20 @@ def test_counter_api_parity_and_tally_invariant(seed, n_slots, n_pins, n_v):
     """accumulate_packed_events_with_high: xla path == pallas path ==
     full-recount oracle, for random prior counts and event chunks."""
     n_bins = n_slots * n_pins
-    kp, ke = jax.random.split(jax.random.key(seed))
+    kp, ks, ke = jax.random.split(jax.random.key(seed), 3)
     prior = jax.random.randint(kp, (n_bins,), 0, n_v + 2, dtype=jnp.int32)
-    # include negatives and the >= n_bins sentinel range among the events
-    events = jax.random.randint(
-        ke, (1024,), -2, n_bins + 3, dtype=jnp.int32
-    )
+    # include negatives and the slot sentinel among the wide lanes
+    slot_ev = jax.random.randint(ks, (1024,), -1, n_slots + 2, dtype=jnp.int32)
+    pin_ev = jax.random.randint(ke, (1024,), -2, n_pins + 3, dtype=jnp.int32)
     high0 = counter_lib.n_high_visited(
         prior.reshape(n_slots, n_pins), n_v
     )
     want_c, want_d = ref.visit_counter_update_high_ref(
-        prior, events, n_slots, n_pins, n_v
+        prior, slot_ev, pin_ev, n_slots, n_pins, n_v
     )
     for backend in ("xla", "pallas"):
         got_c, got_h = counter_lib.accumulate_packed_events_with_high(
-            prior, high0, events, n_slots, n_pins, n_v, backend
+            prior, high0, slot_ev, pin_ev, n_slots, n_pins, n_v, backend
         )
         np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
         np.testing.assert_array_equal(
@@ -159,17 +161,19 @@ def test_crossing_split_across_chunk_boundary():
     next must be tallied exactly once, in the second call — on both paths."""
     n_slots, n_pins, n_v = 2, 300, 4
     bin_id = 1 * n_pins + 7  # slot 1, pin 7
-    chunk1 = jnp.full((n_v - 1,), bin_id, jnp.int32)   # reaches n_v - 1
-    chunk2 = jnp.asarray([bin_id, bin_id], jnp.int32)  # crosses, then above
+    s1 = jnp.full((n_v - 1,), 1, jnp.int32)            # reaches n_v - 1
+    p1 = jnp.full((n_v - 1,), 7, jnp.int32)
+    s2 = jnp.asarray([1, 1], jnp.int32)                # crosses, then above
+    p2 = jnp.asarray([7, 7], jnp.int32)
     for backend in ("xla", "pallas"):
         counts = jnp.zeros((n_slots * n_pins,), jnp.int32)
         high = jnp.zeros((n_slots,), jnp.int32)
         counts, high = counter_lib.accumulate_packed_events_with_high(
-            counts, high, chunk1, n_slots, n_pins, n_v, backend
+            counts, high, s1, p1, n_slots, n_pins, n_v, backend
         )
         assert high.tolist() == [0, 0], backend
         counts, high = counter_lib.accumulate_packed_events_with_high(
-            counts, high, chunk2, n_slots, n_pins, n_v, backend
+            counts, high, s2, p2, n_slots, n_pins, n_v, backend
         )
         assert high.tolist() == [0, 1], backend
         assert int(counts[bin_id]) == n_v + 1
@@ -178,12 +182,13 @@ def test_crossing_split_across_chunk_boundary():
 def test_crossing_within_one_chunk_counts_once():
     """Many duplicates of one bin inside a single chunk: one crossing."""
     n_slots, n_pins, n_v = 1, 64, 3
-    events = jnp.full((16,), 5, jnp.int32)  # 16 visits to pin 5 at once
+    slot_ev = jnp.zeros((16,), jnp.int32)   # 16 visits to pin 5 at once
+    pin_ev = jnp.full((16,), 5, jnp.int32)
     for backend in ("xla", "pallas"):
         counts, high = counter_lib.accumulate_packed_events_with_high(
             jnp.zeros((n_pins,), jnp.int32),
             jnp.zeros((1,), jnp.int32),
-            events, n_slots, n_pins, n_v, backend,
+            slot_ev, pin_ev, n_slots, n_pins, n_v, backend,
         )
         assert high.tolist() == [1], backend
         assert int(counts[5]) == 16
@@ -207,37 +212,47 @@ def test_walk_parity_when_slot_crosses_n_p_mid_walk():
 
 
 # ---------------------------------------------------------------------------
-# int64 / production-scale fallback (shape-level, nothing giant materialized)
+# production-scale shape contract (shape-level, nothing giant materialized)
 # ---------------------------------------------------------------------------
 
 
 def test_count_engine_selection_shape_level():
+    """No fallback branch: the chooser returns the requested backend at
+    every dense-materializable scale, and rejects un-materializable dense
+    bin spaces loudly (event mode is the production path there)."""
     assert walk_lib.select_count_engine("pallas", 4, 1000) == "pallas"
     assert walk_lib.select_count_engine("xla", 4, 1000) == "xla"
-    # 4 slots * 2^29 pins = 2^31 packed ids: int64 territory
-    assert walk_lib.select_count_engine("pallas", 4, 2**29) == "xla"
-    # board id space can also force the fallback
-    assert walk_lib.select_count_engine("pallas", 4, 1000, 2**29) == "xla"
-    assert walk_lib.packed_event_dtype(4, 2**29) == jnp.int64
+    # close to the dense ceiling: still the requested backend, no fallback
+    assert walk_lib.select_count_engine("pallas", 4, 2**28) == "pallas"
+    # 4 slots * 2^29 pins = 2^31 bins: dense counting cannot materialize
+    # that buffer on ANY backend — loud error pointing at event mode
+    with pytest.raises(ValueError, match="event-mode"):
+        walk_lib.select_count_engine("pallas", 4, 2**29)
+    with pytest.raises(ValueError, match="event-mode"):
+        walk_lib.select_count_engine("xla", 4, 1000, 2**29)
+    with pytest.raises(ValueError, match="backend"):
+        walk_lib.select_count_engine("tpu??", 4, 1000)
+    # wide lanes: the per-lane dtype is int32 at EVERY id-space scale
+    assert walk_lib.packed_event_dtype(4, 2**29) == jnp.int32
     assert walk_lib.packed_event_dtype(4, 1000) == jnp.int32
 
 
 def test_pixie_random_walk_routes_through_engine_selection(monkeypatch):
     """pixie_random_walk consults select_count_engine and hands its verdict
-    to the counting API — checked by forcing the int64-scale answer on a
-    small graph and recording what the counter receives."""
+    to the counting API — checked by forcing an answer on a small graph and
+    recording what the counter receives."""
     g = _random_graph(0, n_pins=60, n_boards=10, n_edges=200)
     seen = {}
 
     def fake_select(backend, n_slots, n_pins, n_boards=0):
         seen["dims"] = (backend, n_slots, n_pins, n_boards)
-        return "xla"  # what a >= 2^31 id space would return
+        return "xla"  # forced verdict, must reach the counting API
 
     real_acc = counter_lib.accumulate_packed_events_with_high
 
-    def recording_acc(counts, high, events, n_slots, n_pins, n_v, backend):
+    def recording_acc(counts, high, sev, pev, n_slots, n_pins, n_v, backend):
         seen["count_backend"] = backend
-        return real_acc(counts, high, events, n_slots, n_pins, n_v, backend)
+        return real_acc(counts, high, sev, pev, n_slots, n_pins, n_v, backend)
 
     monkeypatch.setattr(walk_lib, "select_count_engine", fake_select)
     monkeypatch.setattr(
@@ -251,8 +266,8 @@ def test_pixie_random_walk_routes_through_engine_selection(monkeypatch):
         g, jnp.asarray([1], jnp.int32), jnp.ones((1,), jnp.float32),
         jnp.asarray(0, jnp.int32), jax.random.key(0), cfg,
     )
-    # count_boards=False: board ids are not packed, so they must not enter
-    # the engine choice (a huge board space must not evict the fast path)
+    # count_boards=False: board ids are not counted, so they must not enter
+    # the shape validation (a huge board space must not reject a pin walk)
     assert seen["dims"] == ("pallas", 1, g.n_pins, 0)
     assert seen["count_backend"] == "xla"
 
@@ -305,23 +320,24 @@ def test_one_sided_feat_bounds_rejected_for_biased_walks():
     assert int(res.counts.sum()) >= 0
 
 
-def test_fused_high_api_falls_back_without_kernel(monkeypatch):
-    """backend="pallas" with an id space the kernel can't pack must take
-    the xla path — the kernel op is never invoked."""
-
-    def boom(*a, **kw):  # pragma: no cover - fails the test if reached
-        raise AssertionError("kernel path must not run for int64-scale ids")
-
-    monkeypatch.setattr(ops, "visit_counts_update_high", boom)
-    # packed id space >= 2^31: shape-level fallback, arrays stay tiny
+def test_counter_api_rejects_unmaterializable_dense_bins():
+    """Dense counting with a >= 2^31 bin space must raise on BOTH backends
+    (there is no buffer to scatter into), pointing at event mode — the
+    wide-lane replacement for the old silent int64 fallback."""
     n_slots, n_pins = 4, 2**29
-    counts = jnp.zeros((64,), jnp.int32)  # stand-in slice; only dtypes matter
+    counts = jnp.zeros((64,), jnp.int32)  # stand-in slice; never reached
     high = jnp.zeros((n_slots,), jnp.int32)
-    events = jnp.asarray([1, 2, 2], jnp.int32)
-    got_c, got_h = counter_lib.accumulate_packed_events_with_high(
-        counts, high, events, n_slots, n_pins, 2, "pallas"
-    )
-    assert int(got_c[2]) == 2 and int(got_h[0]) == 1
+    sev = jnp.asarray([0, 0, 0], jnp.int32)
+    pev = jnp.asarray([1, 2, 2], jnp.int32)
+    for backend in ("xla", "pallas"):
+        with pytest.raises(ValueError, match="event-mode"):
+            counter_lib.accumulate_packed_events_with_high(
+                counts, high, sev, pev, n_slots, n_pins, 2, backend
+            )
+        with pytest.raises(ValueError, match="event-mode"):
+            counter_lib.accumulate_packed_events(
+                counts, sev, pev, n_slots, n_pins, backend
+            )
 
 
 def test_counter_api_empty_events_both_backends():
@@ -333,17 +349,23 @@ def test_counter_api_empty_events_both_backends():
     empty = jnp.zeros((0,), jnp.int32)
     for backend in ("xla", "pallas"):
         got_c, got_h = counter_lib.accumulate_packed_events_with_high(
-            counts, high, empty, n_slots, n_pins, 3, backend
+            counts, high, empty, empty, n_slots, n_pins, 3, backend
         )
         np.testing.assert_array_equal(np.asarray(got_c), np.asarray(counts))
         np.testing.assert_array_equal(np.asarray(got_h), np.asarray(high))
+        # the plain histogram API must tolerate empty lanes the same way
+        got_p = counter_lib.accumulate_packed_events(
+            counts, empty, empty, n_slots, n_pins, backend
+        )
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(counts))
 
 
 def test_counter_api_rejects_nonpositive_n_v():
     with pytest.raises(ValueError, match="n_v"):
         counter_lib.accumulate_packed_events_with_high(
             jnp.zeros((8,), jnp.int32), jnp.zeros((1,), jnp.int32),
-            jnp.zeros((4,), jnp.int32), 1, 8, 0, "xla",
+            jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.int32),
+            1, 8, 0, "xla",
         )
     bad_cfg = walk_lib.WalkConfig(n_steps=64, n_walkers=32, n_v=0)
     g = _random_graph(0, 30, 8, 60)
@@ -450,15 +472,32 @@ def test_update_high_kernel_matches_ref(tile, chunk, n_slots, n_pins):
     from repro.kernels.visit_counter import visit_counter_update_high
 
     n_bins = n_slots * n_pins
-    kp, ke = jax.random.split(jax.random.key(n_bins + tile))
+    kp, ks, ke = jax.random.split(jax.random.key(n_bins + tile), 3)
     prior = jax.random.randint(kp, (n_bins,), 0, 4, dtype=jnp.int32)
-    events = jax.random.randint(ke, (3000,), -2, n_bins + 4, dtype=jnp.int32)
+    slot_ev = jax.random.randint(ks, (3000,), -1, n_slots + 2, dtype=jnp.int32)
+    pin_ev = jax.random.randint(ke, (3000,), -2, n_pins + 4, dtype=jnp.int32)
     got_c, got_d = visit_counter_update_high(
-        prior, events, n_slots=n_slots, n_pins=n_pins, n_v=3,
+        prior, slot_ev, pin_ev, n_slots=n_slots, n_pins=n_pins, n_v=3,
         tile=tile, chunk=chunk, interpret=True,
     )
     want_c, want_d = ref.visit_counter_update_high_ref(
-        prior, events, n_slots, n_pins, 3
+        prior, slot_ev, pin_ev, n_slots, n_pins, 3
     )
     np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
     np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+@pytest.mark.parametrize("tile,chunk", [(128, 256), (512, 2048)])
+def test_wide_histogram_kernel_matches_ref(tile, chunk):
+    from repro.kernels.visit_counter import visit_counter_wide
+
+    n_slots, n_dim = 3, 700
+    ks, ke = jax.random.split(jax.random.key(tile + chunk))
+    slot_ev = jax.random.randint(ks, (3000,), -1, n_slots + 2, dtype=jnp.int32)
+    id_ev = jax.random.randint(ke, (3000,), -2, n_dim + 4, dtype=jnp.int32)
+    got = visit_counter_wide(
+        slot_ev, id_ev, n_slots=n_slots, n_dim=n_dim,
+        tile=tile, chunk=chunk, interpret=True,
+    )
+    want = ref.visit_counter_wide_ref(slot_ev, id_ev, n_slots, n_dim)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

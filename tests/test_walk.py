@@ -113,12 +113,12 @@ def test_event_mode_matches_dense_mode(sg):
         g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg,
         check_every=10**9,
     )
-    # aggregate events -> per-slot counts
-    events = np.asarray(ev.events)
-    sentinel = 2 * g.n_pins
-    valid = events < sentinel
-    slot = events[valid] // g.n_pins
-    pin = events[valid] % g.n_pins
+    # aggregate wide event lanes -> per-slot counts
+    slot_ev = np.asarray(ev.slot_events)
+    pin_ev = np.asarray(ev.pin_events)
+    valid = slot_ev < 2  # slot lane sentinel = n_slots marks invalid steps
+    slot = slot_ev[valid]
+    pin = pin_ev[valid]
     counts = np.zeros((2, g.n_pins), np.int64)
     np.add.at(counts, (slot, pin), 1)
     dense_counts = np.asarray(dense.counts)

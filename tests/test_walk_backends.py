@@ -77,7 +77,12 @@ def test_event_buffers_bit_identical(sg):
     ep = walk_lib.pixie_walk_events(
         g, qp, qw, jnp.asarray(0, jnp.int32), key, cfg_p, check_every=10**9
     )
-    np.testing.assert_array_equal(np.asarray(ex.events), np.asarray(ep.events))
+    np.testing.assert_array_equal(
+        np.asarray(ex.slot_events), np.asarray(ep.slot_events)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ex.pin_events), np.asarray(ep.pin_events)
+    )
     assert int(ex.chunks_run) == int(ep.chunks_run)
 
 
@@ -205,13 +210,15 @@ def test_one_pallas_call_covers_all_chunk_steps():
     jaxpr = jax.make_jaxpr(chunk)(a["curr"], a["rbits"])
     n_calls = str(jaxpr).count("pallas_call")
     assert n_calls == 1, f"expected 1 fused pallas_call, found {n_calls}"
-    # and that single call really emits chunk_steps steps of events
-    _, events, _ = chunk(a["curr"], a["rbits"])
-    assert events.shape == (chunk_steps, a["curr"].shape[0])
-    sentinel = a["n_slots"] * a["n_pins"]
-    ev = np.asarray(events)
-    assert (ev[ev < sentinel] >= 0).all()
-    assert (ev <= sentinel).all()
+    # and that single call really emits chunk_steps steps of wide events
+    _, slot_ev, pin_ev, _ = chunk(a["curr"], a["rbits"])
+    assert slot_ev.shape == (chunk_steps, a["curr"].shape[0])
+    assert pin_ev.shape == (chunk_steps, a["curr"].shape[0])
+    sev, pev = np.asarray(slot_ev), np.asarray(pin_ev)
+    # slot lane: valid slots or the n_slots sentinel; pin lane in range
+    assert ((sev >= 0) & (sev <= a["n_slots"])).all()
+    assert ((pev >= 0) & (pev < a["n_pins"])).all()
+    assert (pev[sev == a["n_slots"]] == 0).all()  # sentinel zeroes the lane
 
 
 def test_chunk_ref_unroll_matches_loop():

@@ -1,0 +1,120 @@
+"""DMA-gather sweep: double-buffered async-copy CSR prefetch vs scalar loads.
+
+Quantifies the gather-mode tentpole on the serving path: the fused Pallas
+walk engine with ``gather_mode="scalar"`` (blocking per-walker scalar CSR
+gathers) vs ``gather_mode="dma"`` (phase-split double-buffered
+``make_async_copy`` prefetch), with the XLA engine as the reference, across
+walker block sizes and bias on/off.
+
+The agreement verdict is the regression signal: ``dma_backends_agree``
+asserts dma == scalar == xla bit-identically on recommendations AND the
+early-stop observables (steps_taken, n_high) for the same key.  On CPU
+hosts the kernels run in interpret mode — the interpreter executes the
+async copies synchronously, so dma-mode *timings* there measure plumbing,
+not the latency hiding (only meaningful on TPU hosts); regress on
+``dma_backends_agree``, not the CPU ratio.
+
+Results are returned for ``results/bench.json`` AND merged into
+``BENCH_serving.json`` as the ``dma`` section, next to the other
+backend-agreement verdicts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import merge_serving_section, timed
+from repro.core import service, walk as walk_lib
+from repro.graphs.synthetic import SyntheticGraphConfig, generate
+
+
+def _batch(g, seed, batch=4, n_slots=2):
+    rng = np.random.default_rng(seed)
+    degs = np.asarray(g.p2b.degrees()).astype(np.float64)
+    qs = rng.choice(g.n_pins, size=batch * n_slots, replace=False,
+                    p=degs / degs.sum())
+    pins = qs.reshape(batch, n_slots).astype(np.int32)
+    weights = np.tile(np.asarray([1.0, 0.6], np.float32), (batch, 1))
+    return jnp.asarray(pins), jnp.asarray(weights)
+
+
+def _gather_sweep(seed: int) -> Dict:
+    sg = generate(SyntheticGraphConfig(
+        n_pins=2_000, n_boards=200, n_topics=8, n_langs=2, seed=seed
+    ))
+    g = sg.graph
+    pins, weights = _batch(g, seed)
+    feats = jnp.zeros((pins.shape[0],), jnp.int32)
+    key = jax.random.key(seed)
+
+    sweep = []
+    agree = True
+    for block_w, bias_beta in ((128, 0.0), (128, 0.9), (256, 0.9)):
+        cfg = walk_lib.WalkConfig(
+            n_steps=2_000, n_walkers=256, chunk_steps=8, top_k=20,
+            n_p=60, n_v=3, bias_beta=bias_beta, pallas_block_w=block_w,
+        )
+        row: Dict = {"block_w": block_w, "bias_beta": bias_beta,
+                     "engines": {}}
+        outs = {}
+        for label, ecfg in (
+            ("xla", dataclasses.replace(cfg, backend="xla")),
+            ("scalar", dataclasses.replace(cfg, backend="pallas",
+                                           gather_mode="scalar")),
+            ("dma", dataclasses.replace(cfg, backend="pallas",
+                                        gather_mode="dma")),
+        ):
+            fn = jax.jit(lambda k, c=ecfg: service.serve_batch(
+                g, pins, weights, feats, k, c, with_stats=True
+            ))
+            t = timed(fn, key, warmup=1, iters=3)
+            _, ids, steps, n_high = fn(key)
+            outs[label] = (np.asarray(ids), np.asarray(steps),
+                           np.asarray(n_high))
+            row["engines"][label] = {"batch_ms": round(t["mean_ms"], 2)}
+        row["agree"] = bool(all(
+            np.array_equal(a, b)
+            for other in ("scalar", "dma")
+            for a, b in zip(outs["xla"], outs[other])
+        ))
+        agree &= row["agree"]
+        row["dma_vs_scalar_x"] = round(
+            row["engines"]["scalar"]["batch_ms"]
+            / max(row["engines"]["dma"]["batch_ms"], 1e-9), 3
+        )
+        sweep.append(row)
+    # verdict key lives only at the suite top level (run.py counts every
+    # occurrence of a verdict key, at any nesting)
+    return {"graph": {"n_pins": g.n_pins, "n_boards": g.n_boards},
+            "sweep": sweep, "agree_all": agree}
+
+
+def run(seed: int = 0) -> Dict:
+    out: Dict = {
+        "host_backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "gather": _gather_sweep(seed),
+    }
+    out["dma_backends_agree"] = out["gather"]["agree_all"]
+    # merge into the serving trajectory file, next to the other agreement
+    # verdicts (bench_smoke writes the base file and preserves this section)
+    out["wrote"] = merge_serving_section("dma", {
+        "dma_backends_agree": out["dma_backends_agree"],
+        "pallas_interpret": out["pallas_interpret"],
+        "sweep": [
+            {k: row[k] for k in
+             ("block_w", "bias_beta", "agree", "dma_vs_scalar_x")}
+            for row in out["gather"]["sweep"]
+        ],
+    })
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

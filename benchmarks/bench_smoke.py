@@ -30,12 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import BENCH_SERVING_PATH, MERGED_SECTIONS, timed
 from repro.core import service, walk as walk_lib
 from repro.graphs.synthetic import SyntheticGraphConfig, generate
 
-OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
-                        "BENCH_serving.json")
+OUT_PATH = BENCH_SERVING_PATH
 
 
 def run(seed: int = 0) -> Dict:
@@ -126,14 +125,16 @@ def run(seed: int = 0) -> Dict:
     )
     out["earlystop"] = es
     out["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
-    # bench_widepack merges its section into this file; a smoke-only rerun
-    # must not silently erase it (check_verdicts asserts it exists)
+    # other suites merge their sections into this file; a smoke-only rerun
+    # must not silently erase them (check_verdicts asserts they exist) —
+    # benchmarks/common.MERGED_SECTIONS is the registry
     if os.path.exists(OUT_PATH):
         try:
             with open(OUT_PATH) as f:
                 prev = json.load(f)
-            if "widepack" in prev:
-                out["widepack"] = prev["widepack"]
+            for section in MERGED_SECTIONS:
+                if section in prev:
+                    out[section] = prev[section]
         except Exception:
             pass
     with open(OUT_PATH, "w") as f:

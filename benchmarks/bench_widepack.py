@@ -25,20 +25,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import merge_serving_section, timed
 from repro.core import walk as walk_lib
 from repro.graphs.synthetic import sparse_wide_graph as _sparse_wide_graph
-
-BENCH_SERVING_PATH = os.path.join(
-    os.path.dirname(os.path.dirname(__file__)), "BENCH_serving.json"
-)
 
 
 def _query(n_slots):
@@ -158,14 +153,7 @@ def run(seed: int = 0) -> Dict:
     out["incremental_matches_full"] = out["check_mode"]["matches"]
     # merge into the serving trajectory file so the scale verdicts live
     # next to the backend-agreement ones (bench_smoke writes the base file)
-    serving = {}
-    if os.path.exists(BENCH_SERVING_PATH):
-        try:
-            with open(BENCH_SERVING_PATH) as f:
-                serving = json.load(f)
-        except Exception:
-            serving = {}
-    serving["widepack"] = {
+    out["wrote"] = merge_serving_section("widepack", {
         "widepack_backends_agree": out["widepack_backends_agree"],
         "incremental_matches_full": out["incremental_matches_full"],
         "incremental_speedup_x": out["check_mode"]["incremental_speedup_x"],
@@ -174,10 +162,7 @@ def run(seed: int = 0) -> Dict:
              ("n_slots", "n_pins", "packed_ids", "past_int32", "agree")}
             for row in out["scale"]["sweep"]
         ],
-    }
-    with open(BENCH_SERVING_PATH, "w") as f:
-        json.dump(serving, f, indent=2)
-    out["wrote"] = BENCH_SERVING_PATH
+    })
     return out
 
 

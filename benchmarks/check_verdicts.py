@@ -8,7 +8,8 @@ a line HERE, not editing a YAML heredoc.
 
 Run locally after the smokes:
 
-    PYTHONPATH=src python -m benchmarks.run --only smoke earlystop_fused widepack
+    PYTHONPATH=src python -m benchmarks.run \
+        --only smoke earlystop_fused widepack dma_gather
     PYTHONPATH=src python -m benchmarks.check_verdicts
 
 Exit code 0 iff every verdict is present and truthy.
@@ -31,6 +32,8 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     # (slot, pin) lanes past 2**31 packed ids + incremental event checks
     ("BENCH_serving.json", ("widepack", "widepack_backends_agree")),
     ("BENCH_serving.json", ("widepack", "incremental_matches_full")),
+    # bench_dma_gather (merged): async-DMA CSR prefetch == scalar == xla
+    ("BENCH_serving.json", ("dma", "dma_backends_agree")),
     # bench_earlystop_fused: fused in-VMEM tally == naive recount
     ("results/bench.json", ("earlystop_fused", "counting",
                             "fused_matches_naive")),
@@ -39,6 +42,8 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     # widepack suite verdicts as recorded by the driver
     ("results/bench.json", ("widepack", "widepack_backends_agree")),
     ("results/bench.json", ("widepack", "incremental_matches_full")),
+    # dma_gather suite verdict as recorded by the driver
+    ("results/bench.json", ("dma_gather", "dma_backends_agree")),
 )
 
 

@@ -4,6 +4,8 @@ paper-table benchmarks so the suite builds the graph once."""
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
 from typing import Dict
 
@@ -13,6 +15,34 @@ import numpy as np
 
 from repro.core import walk as walk_lib
 from repro.graphs.synthetic import SyntheticGraph, SyntheticGraphConfig, generate
+
+BENCH_SERVING_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(__file__)), "BENCH_serving.json"
+)
+
+# sections other suites merge into BENCH_serving.json; bench_smoke (which
+# rewrites the base file) preserves exactly this list, so registering a new
+# merged suite means adding its section name HERE, nowhere else
+MERGED_SECTIONS = ("widepack", "dma")
+
+
+def merge_serving_section(name: str, payload: Dict) -> str:
+    """Merge one suite's section into BENCH_serving.json; returns the path.
+
+    The file may not exist yet (suite run before bench_smoke) or may be
+    unreadable — either way the section still lands.
+    """
+    data: Dict = {}
+    if os.path.exists(BENCH_SERVING_PATH):
+        try:
+            with open(BENCH_SERVING_PATH) as f:
+                data = json.load(f)
+        except Exception:
+            data = {}
+    data[name] = payload
+    with open(BENCH_SERVING_PATH, "w") as f:
+        json.dump(data, f, indent=2)
+    return BENCH_SERVING_PATH
 
 
 @functools.lru_cache(maxsize=2)

@@ -15,6 +15,7 @@ import os
 import time
 
 from benchmarks import (
+    bench_dma_gather,
     bench_earlystop_fused,
     bench_fig1_runtime,
     bench_fig2_stability,
@@ -44,6 +45,8 @@ SUITES = {
                         bench_earlystop_fused.run),
     "widepack": ("Wide (slot, pin) lanes: id spaces past 2**31 + "
                  "incremental event checks", bench_widepack.run),
+    "dma_gather": ("Double-buffered async-DMA CSR prefetch vs scalar "
+                   "gathers", bench_dma_gather.run),
 }
 
 VERDICT_KEYS = (
@@ -53,6 +56,7 @@ VERDICT_KEYS = (
     "pruning_improves_f1", "memory_decreases", "batching_overhead_bounded",
     "both_backends_agree", "fused_matches_naive", "earlystop_backends_agree",
     "widepack_backends_agree", "incremental_matches_full",
+    "dma_backends_agree",
 )
 
 

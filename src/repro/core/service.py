@@ -39,19 +39,36 @@ def build_query(
     actions: Sequence[UserAction],
     n_slots: int,
     half_life_hours: float = 24.0,
+    default_weight: float | None = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Collapse a user's action history into (query_pins, weights).
 
     Weight = action weight * 0.5 ** (age / half_life); repeated pins sum.
     The top-``n_slots`` pins by weight are kept, rest padded with (-1, 0).
+    Weight ties break by pin id, so for a given set of per-pin weights the
+    truncation never depends on Python dict ordering.  (A pin's weight is
+    a float sum over its actions, so *reordering one pin's actions* can
+    still move it by an ulp — the tie-break fixes the data-structure
+    nondeterminism, not float associativity.)
+
+    Unrecognized action types raise — a typo'd action silently weighted
+    0.1 skews every downstream walk budget; pass ``default_weight`` to
+    opt into a catch-all weight instead.
     """
     acc: Dict[int, float] = {}
     for a in actions:
-        w = ACTION_WEIGHTS.get(a.action, 0.1) * 0.5 ** (
-            a.age_hours / half_life_hours
-        )
+        base = ACTION_WEIGHTS.get(a.action, default_weight)
+        if base is None:
+            raise ValueError(
+                f"unknown action type {a.action!r}; known: "
+                f"{sorted(ACTION_WEIGHTS)} (pass default_weight to accept "
+                "unrecognized actions)"
+            )
+        w = base * 0.5 ** (a.age_hours / half_life_hours)
         acc[a.pin] = acc.get(a.pin, 0.0) + w
-    items = sorted(acc.items(), key=lambda kv: -kv[1])[:n_slots]
+    # weight descending, pin id ascending on ties: the truncation below is
+    # deterministic across Python dict insertion orders
+    items = sorted(acc.items(), key=lambda kv: (-kv[1], kv[0]))[:n_slots]
     pins = np.full((n_slots,), -1, dtype=np.int32)
     weights = np.zeros((n_slots,), dtype=np.float32)
     for i, (p, w) in enumerate(items):

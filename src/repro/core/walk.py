@@ -19,8 +19,13 @@ Two interchangeable step engines (``WalkConfig.backend``):
                    per ``chunk_steps`` steps with walker state resident in
                    VMEM across the whole chunk, wide (slot, pin) visit
                    events emitted in-kernel, and counts recovered with the
-                   scatter-free tile-scan ``visit_counter`` kernels.  On CPU
-                   hosts the kernel runs in interpret mode.
+                   scatter-free tile-scan ``visit_counter`` kernels.  Its
+                   CSR gathers come in two bit-identical flavours
+                   (``WalkConfig.gather_mode``): blocking per-walker
+                   scalar loads ("scalar") or the phase-split
+                   double-buffered async-DMA prefetch ("dma") that hides
+                   each walker's HBM latency behind its neighbour's.  On
+                   CPU hosts the kernel runs in interpret mode.
 
 Events are WIDE — two int32 lanes, (slot, pin), slot lane ``n_slots`` as
 the invalid-step sentinel — never the packed ``slot * n_pins + pin``
@@ -69,6 +74,7 @@ from repro.core import counter as counter_lib
 from repro.core import sampling
 from repro.core.graph import PinBoardGraph
 from repro.kernels import ops
+from repro.kernels.walk_step import GATHER_MODES
 
 Array = jax.Array
 
@@ -148,6 +154,13 @@ class WalkConfig:
                   or "pallas" (fused multi-superstep kernel + tile-scan
                   histogram counts).  Both produce bit-identical visits.
     pallas_block_w: walkers per Pallas grid cell (None = auto).
+    gather_mode:  how the pallas engine issues its per-walker CSR gathers:
+                  "scalar" (blocking scalar loads) or "dma" (phase-split
+                  double-buffered async-copy prefetch — hides the HBM
+                  latency of walker i's rows behind walker i+1's).  Bit-
+                  identical to "scalar" and to the xla engine; a pure
+                  memory-latency knob on TPU hosts (interpret-mode CPU
+                  timings don't show it).  Ignored by backend="xla".
     """
 
     n_steps: int = 100_000
@@ -161,6 +174,7 @@ class WalkConfig:
     count_boards: bool = False
     backend: str = "xla"
     pallas_block_w: Optional[int] = None
+    gather_mode: str = "scalar"
 
     def max_chunks(self) -> int:
         per_chunk = self.n_walkers * self.chunk_steps
@@ -242,6 +256,10 @@ def _walk_chunk(
     """
     if cfg.backend not in BACKENDS:
         raise ValueError(f"unknown walk backend {cfg.backend!r}; use {BACKENDS}")
+    if cfg.gather_mode not in GATHER_MODES:
+        raise ValueError(
+            f"unknown gather_mode {cfg.gather_mode!r}; use {GATHER_MODES}"
+        )
     w = curr.shape[0]
     rbits = _chunk_rbits(key, step_base, cfg.chunk_steps, w)
     feat = jnp.broadcast_to(jnp.asarray(user_feat, jnp.int32), (w,))
@@ -275,6 +293,7 @@ def _walk_chunk(
         count_boards=cfg.count_boards,
         unroll=unroll,
         block_w=cfg.pallas_block_w,
+        gather_mode=cfg.gather_mode,
         use_kernel=(cfg.backend == "pallas"),
     )
 

@@ -147,6 +147,7 @@ def walk_chunk_fused(
     count_boards: bool = False,
     unroll: bool = False,
     block_w: Optional[int] = None,
+    gather_mode: str = "scalar",
     use_kernel: Optional[bool] = None,
 ) -> Tuple[Array, Array, Array, Optional[Array]]:
     """chunk_steps fused walk supersteps.
@@ -160,6 +161,11 @@ def walk_chunk_fused(
     XLA gathers (this is the walk's "xla" backend).  Both consume the same
     (chunk_steps, w, 4) uint32 counter-RNG bits, so their emitted events
     agree bit-for-bit.
+
+    ``gather_mode`` ("scalar" | "dma") selects how the kernel path issues
+    its CSR gathers — blocking scalar loads or the double-buffered
+    async-copy pipeline; both are bit-identical to the oracle.  The oracle
+    path has no gather modes (XLA vector gathers) and ignores it.
     """
     if use_kernel is None:
         use_kernel = _default_use_kernel()
@@ -176,6 +182,7 @@ def walk_chunk_fused(
             n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
             alpha_u32=alpha_u32, beta_u32=beta_u32,
             count_boards=count_boards, block_w=block_w,
+            gather_mode=gather_mode,
         )
     return ref.walk_chunk_ref(
         curr, query, feat, slot, rbits,

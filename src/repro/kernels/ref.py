@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+_RMASK = 0x7FFFFFFF  # keep modulo operands non-negative int32
+
 
 # ---------------------------------------------------------------------------
 # visit_counter: bounded-event histogram (the paper's open-addressing table)
@@ -101,16 +103,22 @@ def walk_step_ref(
     restart = rbits[:, 0] < jnp.uint32(alpha_u32)
     pos = jnp.where(restart, query, curr)
 
+    # mask BEFORE the int32 cast — a high-bit draw cast raw would become a
+    # negative modulo operand whose result depends on the lowering (same
+    # contract as walk_chunk_ref below and both Pallas kernels)
+    r_board = (rbits[:, 1] & jnp.uint32(_RMASK)).astype(jnp.int32)
+    r_pin = (rbits[:, 2] & jnp.uint32(_RMASK)).astype(jnp.int32)
+
     start = jnp.take(p2b_offsets, pos)
     deg = jnp.take(p2b_offsets, pos + 1) - start
-    idx = start + (rbits[:, 1].astype(jnp.int32) % jnp.maximum(deg, 1))
+    idx = start + (r_board % jnp.maximum(deg, 1))
     board = jnp.take(p2b_targets, idx)
     board_ok = deg > 0
 
     b_local = jnp.where(board_ok, board - n_pins, 0)
     bstart = jnp.take(b2p_offsets, b_local)
     bdeg = jnp.take(b2p_offsets, b_local + 1) - bstart
-    bidx = bstart + (rbits[:, 2].astype(jnp.int32) % jnp.maximum(bdeg, 1))
+    bidx = bstart + (r_pin % jnp.maximum(bdeg, 1))
     nxt = jnp.take(b2p_targets, bidx)
     ok = board_ok & (bdeg > 0)
 
@@ -124,8 +132,6 @@ def walk_step_ref(
 # (the XLA twin of kernels/walk_step.walk_steps_fused — same random bits,
 # same arithmetic, so the two backends agree bit-for-bit)
 # ---------------------------------------------------------------------------
-
-_RMASK = 0x7FFFFFFF  # keep modulo operands non-negative int32
 
 
 def walk_chunk_ref(

@@ -30,10 +30,31 @@ offsets[board] -> targets[...] (pin).  On TPU the CSR arrays live in HBM
 keeps everything *else* out of HBM: random bits are blocked into VMEM with
 the walker state, all decision logic (restart select, bias select, modulo,
 event packing) is vectorized across the walker block, and only the
-per-walker two-level CSR gathers are issued scalar-by-scalar (they are
-data-dependent random access — there is no vector shape for them).  The
-paper's "walk never leaves the machine" becomes "walker state never leaves
-VMEM between supersteps; one kernel launch per *chunk*, not per step".
+per-walker two-level CSR gathers touch HBM (they are data-dependent random
+access — there is no vector shape for them).  The paper's "walk never
+leaves the machine" becomes "walker state never leaves VMEM between
+supersteps; one kernel launch per *chunk*, not per step".
+
+Those unavoidable CSR gathers come in two flavours (``gather_mode``):
+
+* ``"scalar"`` — each walker's rows are loaded with blocking scalar reads
+  inside the per-walker loop (the original formulation; every load eats a
+  full HBM round trip back to back).
+* ``"dma"``    — each superstep is split into hop *phases* (offset rows,
+  then target rows; bias-bound rows ride the offset phase).  Within a
+  phase the per-walker rows are staged into VMEM scratch by a
+  double-buffered ``pltpu.make_async_copy`` pipeline: walker *i+1*'s row
+  copy is started before walker *i*'s is waited on, so one HBM latency
+  hides behind the neighbouring walker's and the phase's decision
+  arithmetic runs vectorized over the whole block once the rows are
+  resident.  Scratch rows + DMA semaphores are allocated with
+  ``pl.run_scoped``; the same code path runs under interpret mode on CPU
+  hosts (the interpreter executes the copies synchronously), so CI
+  exercises the dma kernel bit-for-bit.
+
+Both gather modes do identical integer arithmetic on identical random bits
+and are bit-for-bit interchangeable (tests/test_dma_gather.py); the mode is
+purely a memory-latency knob for real TPU hosts.
 
 Random bits are generated *outside* (counter-based threefry, one uint32
 quadruple per walker-step) so the kernel is a pure function and byte-for-byte
@@ -51,8 +72,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_W = 256  # walkers per grid cell
+
+GATHER_MODES = ("scalar", "dma")
 
 _RMASK = 0x7FFFFFFF  # keep modulo operands non-negative int32
 
@@ -73,8 +97,11 @@ def _walk_step_kernel(
     query = query_ref[...]
     restart = rbits_ref[:, 0] < jnp.uint32(alpha_u32)
     pos = jnp.where(restart, query, curr)
-    r_board = rbits_ref[:, 1].astype(jnp.int32)
-    r_pin = rbits_ref[:, 2].astype(jnp.int32)
+    # mask BEFORE the int32 cast: a high-bit draw would otherwise become a
+    # negative modulo operand whose result depends on the lowering (same
+    # contract as the fused kernel; pinned in tests/test_dma_gather.py)
+    r_board = (rbits_ref[:, 1] & jnp.uint32(_RMASK)).astype(jnp.int32)
+    r_pin = (rbits_ref[:, 2] & jnp.uint32(_RMASK)).astype(jnp.int32)
 
     def body(i, carry):
         nxt, vis, ok_acc = carry
@@ -174,6 +201,67 @@ def walk_step(
 # ---------------------------------------------------------------------------
 
 
+def _pick_edge(start, deg, r, use_b, fb, gate):
+    """Sampled CSR edge index for one hop: uniform over [start, start+deg),
+    or the personalized feat subrange when the bias draw fires and the
+    subrange is non-empty; 0 where ``gate`` is off.  Elementwise jnp — the
+    scalar gather path calls it with per-walker scalars, the dma path with
+    block vectors, so both modes share the ONE copy of the decision
+    arithmetic the bit-identity contract rests on.  ``fb`` is a (lo, hi)
+    bound pair, or None when biasing is off.
+    """
+    base, span = start, jnp.maximum(deg, 1)
+    if fb is not None:
+        lo, hi = fb
+        sub_ok = use_b & (hi > lo)
+        base = jnp.where(sub_ok, start + lo, base)
+        span = jnp.where(sub_ok, hi - lo, span)
+    return jnp.where(gate, base + r % span, 0)
+
+
+def _dma_row_gather(src_row, dst_ref, sem, n: int, extra=None):
+    """``dst_ref[i] <- src_row(i)`` for i < n, double-buffered async DMA.
+
+    The copy for row i+1 is started before row i's is waited on, so two
+    copies are always in flight and each walker's HBM latency hides behind
+    its neighbour's.  Semaphore slots alternate (i % 2): waiting on row i
+    frees its slot just before row i+2 reuses it, and every start is
+    matched by a wait, so the pair leaves the phase balanced.
+
+    ``extra`` is an optional second (src_row, dst_ref, sem) triple gathered
+    in the SAME pipeline — its copies ride each iteration concurrently on
+    their own semaphore pair (how the bias-bound rows ride the offset
+    phase instead of paying a second drained pipeline).
+    """
+
+    def dma(i):
+        return pltpu.make_async_copy(src_row(i), dst_ref.at[i], sem.at[i % 2])
+
+    def dma2(i):
+        src_row2, dst_ref2, sem2 = extra
+        return pltpu.make_async_copy(
+            src_row2(i), dst_ref2.at[i], sem2.at[i % 2]
+        )
+
+    dma(0).start()
+    if extra is not None:
+        dma2(0).start()
+
+    def body(i, carry):
+        @pl.when(i + 1 < n)
+        def _prefetch():
+            dma(i + 1).start()
+            if extra is not None:
+                dma2(i + 1).start()
+
+        dma(i).wait()
+        if extra is not None:
+            dma2(i).wait()
+        return carry
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
 def _walk_steps_fused_kernel(
     *refs,
     n_pins: int,
@@ -185,6 +273,7 @@ def _walk_steps_fused_kernel(
     block_w: int,
     use_bias: bool,
     count_boards: bool,
+    gather_mode: str,
 ):
     """chunk_steps supersteps for one walker block, state resident in VMEM.
 
@@ -192,6 +281,12 @@ def _walk_steps_fused_kernel(
       curr, query, feat, slot, rbits,
       p2b_off, p2b_tgt, b2p_off, b2p_tgt, [p2b_fb, b2p_fb],
       -> next, slot_events, pin_events, [board_events]
+
+    ``gather_mode`` picks how the per-walker CSR rows reach the compute:
+    blocking scalar loads ("scalar") or the phase-split double-buffered
+    async-copy pipeline ("dma").  Both modes share the random-bit decode
+    and event emission below, and do identical integer arithmetic on the
+    gathered rows — they are bit-for-bit interchangeable.
     """
     (curr_ref, query_ref, feat_ref, slot_ref, rbits_ref,
      p2b_off_ref, p2b_tgt_ref, b2p_off_ref, b2p_tgt_ref) = refs[:9]
@@ -211,13 +306,27 @@ def _walk_steps_fused_kernel(
     # wide-event invalid sentinel: slot lane carries n_slots, value lanes 0
     slot_sentinel = jnp.int32(n_slots)
 
-    def one_step(s, carry):
-        curr, sev, pev, bev = carry
-        # vectorized decision logic across the walker block
+    def draws(s):
+        """Decode step s's random bits — shared by both gather modes."""
         restart = rbits[s, :, 0] < jnp.uint32(alpha_u32)
         use_b = rbits[s, :, 1] < jnp.uint32(beta_u32)
         r_board = (rbits[s, :, 2] & jnp.uint32(_RMASK)).astype(jnp.int32)
         r_pin = (rbits[s, :, 3] & jnp.uint32(_RMASK)).astype(jnp.int32)
+        return restart, use_b, r_board, r_pin
+
+    def emit(s, carry, nxt, vis, bvis, okv):
+        """Wide (slot, pin) lane emission — the pin and board lanes share
+        the slot lane (same validity mask)."""
+        _, sev, pev, bev = carry
+        sev = sev.at[s].set(jnp.where(okv, slot, slot_sentinel))
+        pev = pev.at[s].set(jnp.where(okv, vis, 0))
+        if count_boards:
+            bev = bev.at[s].set(jnp.where(okv, bvis, 0))
+        return nxt, sev, pev, bev
+
+    def one_step_scalar(s, carry):
+        curr = carry[0]
+        restart, use_b, r_board, r_pin = draws(s)
         pos = jnp.where(restart, query, curr)
 
         # per-walker two-level CSR gather (data-dependent random access)
@@ -226,27 +335,23 @@ def _walk_steps_fused_kernel(
             p = pos[i]
             off = p2b_off_ref[pl.ds(p, 2)]
             start, deg = off[0], off[1] - off[0]
-            base, span = start, jnp.maximum(deg, 1)
+            fb = None
             if use_bias:
-                fb = p2b_fb_ref[pl.ds(p, 1), pl.ds(feat[i], 2)][0]
-                sub_ok = use_b[i] & (fb[1] > fb[0])
-                base = jnp.where(sub_ok, start + fb[0], base)
-                span = jnp.where(sub_ok, fb[1] - fb[0], span)
+                fbr = p2b_fb_ref[pl.ds(p, 1), pl.ds(feat[i], 2)][0]
+                fb = (fbr[0], fbr[1])
             board_ok = deg > 0
-            eidx = jnp.where(board_ok, base + r_board[i] % span, 0)
+            eidx = _pick_edge(start, deg, r_board[i], use_b[i], fb, board_ok)
             board = p2b_tgt_ref[pl.ds(eidx, 1)][0]
             b_local = jnp.where(board_ok, board - n_pins, 0)
 
             boff = b2p_off_ref[pl.ds(b_local, 2)]
             bstart, bdeg = boff[0], boff[1] - boff[0]
-            bbase, bspan = bstart, jnp.maximum(bdeg, 1)
+            bfb = None
             if use_bias:
-                bfb = b2p_fb_ref[pl.ds(b_local, 1), pl.ds(feat[i], 2)][0]
-                bsub_ok = use_b[i] & (bfb[1] > bfb[0])
-                bbase = jnp.where(bsub_ok, bstart + bfb[0], bbase)
-                bspan = jnp.where(bsub_ok, bfb[1] - bfb[0], bspan)
+                bfbr = b2p_fb_ref[pl.ds(b_local, 1), pl.ds(feat[i], 2)][0]
+                bfb = (bfbr[0], bfbr[1])
             ok = board_ok & (bdeg > 0)
-            bidx = jnp.where(ok, bbase + r_pin[i] % bspan, 0)
+            bidx = _pick_edge(bstart, bdeg, r_pin[i], use_b[i], bfb, ok)
             pin = b2p_tgt_ref[pl.ds(bidx, 1)][0]
 
             nxt = nxt.at[i].set(jnp.where(ok, pin, query[i]))
@@ -262,14 +367,70 @@ def _walk_steps_fused_kernel(
             jnp.zeros((block_w,), jnp.bool_),
         )
         nxt, vis, bvis, okv = jax.lax.fori_loop(0, block_w, walker, init)
+        return emit(s, carry, nxt, vis, bvis, okv)
 
-        # vectorized in-kernel event emission: wide (slot, pin) lanes — the
-        # pin and board lanes share the slot lane (same validity mask)
-        sev = sev.at[s].set(jnp.where(okv, slot, slot_sentinel))
-        pev = pev.at[s].set(jnp.where(okv, vis, 0))
-        if count_boards:
-            bev = bev.at[s].set(jnp.where(okv, bvis, 0))
-        return nxt, sev, pev, bev
+    def one_step_dma(s, carry, off_scr, tgt_scr, sem, fb_scr, fb_sem):
+        """Phase-split superstep: gather a whole hop's rows into VMEM
+        scratch via the double-buffered DMA pipeline, then run the hop's
+        decision arithmetic vectorized over the block.  Same arithmetic as
+        the scalar walker loop, phase by phase."""
+        curr = carry[0]
+        restart, use_b, r_board, r_pin = draws(s)
+        pos = jnp.where(restart, query, curr)
+
+        # hop 1, offset phase: (start, end) rows; bias-bound rows ride the
+        # same pipeline on their own semaphore pair
+        _dma_row_gather(
+            lambda i: p2b_off_ref.at[pl.ds(pos[i], 2)], off_scr, sem, block_w,
+            extra=(
+                lambda i: p2b_fb_ref.at[pl.ds(pos[i], 1), pl.ds(feat[i], 2)],
+                fb_scr, fb_sem,
+            ) if use_bias else None,
+        )
+        off = off_scr[...]                            # (block_w, 2)
+        start, deg = off[:, 0], off[:, 1] - off[:, 0]
+        fb = None
+        if use_bias:
+            fbr = fb_scr[...]                         # (block_w, 1, 2)
+            fb = (fbr[:, 0, 0], fbr[:, 0, 1])
+        board_ok = deg > 0
+        eidx = _pick_edge(start, deg, r_board, use_b, fb, board_ok)
+
+        # hop 1, target phase: the sampled board ids
+        _dma_row_gather(
+            lambda i: p2b_tgt_ref.at[pl.ds(eidx[i], 1)], tgt_scr, sem, block_w
+        )
+        board = tgt_scr[...][:, 0]
+        b_local = jnp.where(board_ok, board - n_pins, 0)
+
+        # hop 2, offset phase
+        _dma_row_gather(
+            lambda i: b2p_off_ref.at[pl.ds(b_local[i], 2)],
+            off_scr, sem, block_w,
+            extra=(
+                lambda i: b2p_fb_ref.at[
+                    pl.ds(b_local[i], 1), pl.ds(feat[i], 2)
+                ],
+                fb_scr, fb_sem,
+            ) if use_bias else None,
+        )
+        boff = off_scr[...]
+        bstart, bdeg = boff[:, 0], boff[:, 1] - boff[:, 0]
+        bfb = None
+        if use_bias:
+            bfbr = fb_scr[...]
+            bfb = (bfbr[:, 0, 0], bfbr[:, 0, 1])
+        ok = board_ok & (bdeg > 0)
+        bidx = _pick_edge(bstart, bdeg, r_pin, use_b, bfb, ok)
+
+        # hop 2, target phase: the sampled pin ids
+        _dma_row_gather(
+            lambda i: b2p_tgt_ref.at[pl.ds(bidx[i], 1)], tgt_scr, sem, block_w
+        )
+        pin = tgt_scr[...][:, 0]
+
+        nxt = jnp.where(ok, pin, query)
+        return emit(s, carry, nxt, pin, b_local, ok)
 
     carry0 = (
         curr_ref[...],
@@ -279,21 +440,47 @@ def _walk_steps_fused_kernel(
             (chunk_steps, block_w) if count_boards else (1, 1), jnp.int32
         ),
     )
-    curr, sev, pev, bev = jax.lax.fori_loop(
-        0, chunk_steps, one_step, carry0
-    )
-    next_ref[...] = curr
-    sev_ref[...] = sev
-    pev_ref[...] = pev
-    if count_boards:
-        bev_ref[...] = bev
+
+    def finish(carry):
+        curr, sev, pev, bev = carry
+        next_ref[...] = curr
+        sev_ref[...] = sev
+        pev_ref[...] = pev
+        if count_boards:
+            bev_ref[...] = bev
+
+    if gather_mode == "dma":
+
+        def scoped(off_scr, tgt_scr, sem, *fb_refs):
+            fb_scr, fb_sem = fb_refs if use_bias else (None, None)
+
+            def step(s, carry):
+                return one_step_dma(
+                    s, carry, off_scr, tgt_scr, sem, fb_scr, fb_sem
+                )
+
+            finish(jax.lax.fori_loop(0, chunk_steps, step, carry0))
+
+        scope = [
+            pltpu.VMEM((block_w, 2), jnp.int32),    # offset (start, end) rows
+            pltpu.VMEM((block_w, 1), jnp.int32),    # gathered target ids
+            pltpu.SemaphoreType.DMA((2,)),          # double-buffer pair
+        ]
+        if use_bias:
+            scope += [
+                pltpu.VMEM((block_w, 1, 2), jnp.int32),  # feat-bound rows
+                pltpu.SemaphoreType.DMA((2,)),
+            ]
+        pl.run_scoped(scoped, *scope)
+    else:
+        finish(jax.lax.fori_loop(0, chunk_steps, one_step_scalar, carry0))
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "n_pins", "n_slots", "n_boards", "alpha_u32", "beta_u32",
-        "count_boards", "block_w", "interpret",
+        "count_boards", "block_w", "gather_mode", "interpret",
     ),
 )
 def walk_steps_fused(
@@ -316,6 +503,7 @@ def walk_steps_fused(
     beta_u32: int,
     count_boards: bool = False,
     block_w: int = DEFAULT_BLOCK_W,
+    gather_mode: str = "scalar",
     interpret: bool | None = None,
 ):
     """``chunk_steps`` fused walk supersteps in ONE ``pallas_call``.
@@ -332,7 +520,16 @@ def walk_steps_fused(
     The board lane shares the slot lane (identical validity mask).
     Aggregate with the tile-scan ``visit_counter`` kernels — no scatters
     anywhere on the hot path.
+
+    ``gather_mode="dma"`` replaces the blocking per-walker scalar CSR
+    gathers with the phase-split double-buffered ``make_async_copy``
+    pipeline (module docstring); bit-identical to ``"scalar"`` and to the
+    XLA reference, and interpret-safe on CPU hosts.
     """
+    if gather_mode not in GATHER_MODES:
+        raise ValueError(
+            f"unknown gather_mode {gather_mode!r}; use {GATHER_MODES}"
+        )
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     chunk_steps, w = rbits.shape[0], rbits.shape[1]
@@ -393,6 +590,7 @@ def walk_steps_fused(
             block_w=block_w,
             use_bias=use_bias,
             count_boards=count_boards,
+            gather_mode=gather_mode,
         ),
         grid=grid,
         in_specs=in_specs,

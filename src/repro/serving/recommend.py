@@ -47,7 +47,13 @@ def pixie_then_rank(
     # candidates with zero walk score are padding — mask them out
     rank_scores = jnp.where(walk_scores > 0, rank_scores, -jnp.inf)
     vals, idx = jax.lax.top_k(rank_scores, cfg.final_k)
-    return vals, jnp.take(cand, idx)
+    # when fewer than final_k candidates carry positive walk score, top_k
+    # still fills the tail with entries whose idx points at arbitrary
+    # padding candidates — report those as id -1, never a real pin id.
+    # Keyed on the padding condition itself (zero walk score), not the
+    # ranker's -inf, so a real candidate a ranker scores -inf keeps its id.
+    ids = jnp.where(jnp.take(walk_scores, idx) > 0, jnp.take(cand, idx), -1)
+    return vals, ids
 
 
 def sasrec_ranker(

@@ -71,6 +71,33 @@ def test_build_query_weights_decay_and_rank():
     assert pins[3] == -1 and weights[3] == 0.0  # padding
 
 
+def test_build_query_unknown_action_raises_unless_default_given():
+    """A typo'd action type must fail loudly, not silently weigh 0.1."""
+    actions = [service.UserAction(pin=1, action="sav", age_hours=0.0)]
+    with pytest.raises(ValueError, match="unknown action"):
+        service.build_query(actions, n_slots=2)
+    # explicit opt-in keeps the old catch-all behavior
+    pins, weights = service.build_query(actions, n_slots=2,
+                                        default_weight=0.1)
+    assert pins[0] == 1
+    assert weights[0] == pytest.approx(0.1)
+
+
+def test_build_query_truncation_tie_break_is_deterministic():
+    """Equal-weight pins at the top-n_slots cut must truncate identically
+    regardless of action (and hence dict-insertion) order."""
+    def acts(order):
+        return [service.UserAction(pin=p, action="save", age_hours=0.0)
+                for p in order]
+
+    pins_a, w_a = service.build_query(acts([7, 3, 5]), n_slots=2)
+    pins_b, w_b = service.build_query(acts([5, 7, 3]), n_slots=2)
+    np.testing.assert_array_equal(pins_a, pins_b)
+    np.testing.assert_array_equal(w_a, w_b)
+    # ties break by pin id ascending: the kept pair is {3, 5}, ordered
+    np.testing.assert_array_equal(pins_a, [3, 5])
+
+
 @pytest.mark.parametrize(
     "shape_cfg",
     [service.homefeed_config, service.related_pins_config,
@@ -141,3 +168,37 @@ def test_two_stage_recommendation_returns_walk_candidates():
     assert valid.any()
     # ranked items must come from the graph (and not be the query pin)
     assert q not in items[valid]
+
+
+def test_two_stage_underfull_candidates_return_minus1():
+    """Fewer positive-walk-score candidates than final_k: the -inf tail
+    must report id -1, never an arbitrary padding candidate's pin id."""
+    from repro.core.graph import CSR, PinBoardGraph
+
+    # pins {0, 1} share board 0; pins {2..7} share board 1, UNREACHABLE
+    # from pin 1 — so a walk from pin 1 only ever visits {0, 1}, and the
+    # query pin itself is masked -> exactly 1 positive-score candidate
+    p2b = CSR(
+        offsets=jnp.asarray(list(range(9)), jnp.int32),
+        targets=jnp.asarray([8, 8] + [9] * 6, jnp.int32),
+    )
+    b2p = CSR(
+        offsets=jnp.asarray([0, 2, 8], jnp.int32),
+        targets=jnp.asarray(list(range(8)), jnp.int32),
+    )
+    g = PinBoardGraph(p2b=p2b, b2p=b2p, n_pins=8, n_boards=2,
+                      max_pin_degree=1)
+    qp = jnp.asarray([1, -1], jnp.int32)
+    qw = jnp.asarray([1.0, 0.0], jnp.float32)
+    wcfg = walk_lib.WalkConfig(
+        n_steps=512, n_walkers=64, bias_beta=0.0, n_p=10**9, n_v=10**9
+    )
+    ranker = lambda cand: jnp.ones(cand.shape, jnp.float32)
+    scores, items = pixie_then_rank(
+        g, qp, qw, jnp.asarray(0, jnp.int32), jax.random.key(4),
+        wcfg, ranker, TwoStageConfig(n_candidates=8, final_k=5),
+    )
+    scores, items = np.asarray(scores), np.asarray(items)
+    finite = np.isfinite(scores)
+    assert finite.sum() == 1 and items[finite][0] == 0
+    np.testing.assert_array_equal(items[~finite], -1)

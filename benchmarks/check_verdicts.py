@@ -9,7 +9,7 @@ a line HERE, not editing a YAML heredoc.
 Run locally after the smokes:
 
     PYTHONPATH=src python -m benchmarks.run \
-        --only smoke earlystop_fused widepack dma_gather
+        --only smoke earlystop_fused widepack dma_gather batchfuse
     PYTHONPATH=src python -m benchmarks.check_verdicts
 
 Exit code 0 iff every verdict is present and truthy.
@@ -34,6 +34,10 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     ("BENCH_serving.json", ("widepack", "incremental_matches_full")),
     # bench_dma_gather (merged): async-DMA CSR prefetch == scalar == xla
     ("BENCH_serving.json", ("dma", "dma_backends_agree")),
+    # bench_batchfuse (merged): batch-native engine == vmapped per-query
+    # path bit-identically (ids, scores, steps_taken, n_high) AND one
+    # pallas program per chunk independent of batch size
+    ("BENCH_serving.json", ("batchfuse", "batch_engine_agrees")),
     # bench_earlystop_fused: fused in-VMEM tally == naive recount
     ("results/bench.json", ("earlystop_fused", "counting",
                             "fused_matches_naive")),

@@ -15,6 +15,7 @@ import os
 import time
 
 from benchmarks import (
+    bench_batchfuse,
     bench_dma_gather,
     bench_earlystop_fused,
     bench_fig1_runtime,
@@ -47,6 +48,8 @@ SUITES = {
                  "incremental event checks", bench_widepack.run),
     "dma_gather": ("Double-buffered async-DMA CSR prefetch vs scalar "
                    "gathers", bench_dma_gather.run),
+    "batchfuse": ("Batch-native fused walk engine: one Pallas program per "
+                  "chunk for the whole query batch", bench_batchfuse.run),
 }
 
 VERDICT_KEYS = (
@@ -56,7 +59,7 @@ VERDICT_KEYS = (
     "pruning_improves_f1", "memory_decreases", "batching_overhead_bounded",
     "both_backends_agree", "fused_matches_naive", "earlystop_backends_agree",
     "widepack_backends_agree", "incremental_matches_full",
-    "dma_backends_agree",
+    "dma_backends_agree", "batch_engine_agrees",
 )
 
 

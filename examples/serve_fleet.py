@@ -13,25 +13,36 @@ from repro.core import pruning, service, walk
 from repro.graphs.synthetic import SyntheticGraphConfig, generate
 from repro.serving.server import PixieServer
 
-def main():
-    sg = generate(SyntheticGraphConfig(n_pins=20_000, n_boards=2_000, seed=1))
+def main(
+    n_pins: int = 20_000,
+    n_boards: int = 2_000,
+    n_requests: int = 48,
+    n_steps: int = 10_000,
+    n_walkers: int = 256,
+    top_k: int = 50,
+    batch_size: int = 8,
+):
+    """Run the serving driver; parameters shrink it to a smoke test
+    (tests/test_examples.py runs a tiny graph through this same path).
+    Returns the server's ServerStats."""
+    sg = generate(SyntheticGraphConfig(n_pins=n_pins, n_boards=n_boards,
+                                       seed=1))
     pruned, _ = pruning.prune_graph(
         sg.graph, sg.pin_topics, None,
         pruning.PruneConfig(entropy_board_frac=0.1, delta=0.9),
         board_lang=sg.board_lang, pin_lang=sg.pin_lang, n_langs=4,
     )
 
-    cfg = walk.WalkConfig(n_steps=10_000, n_walkers=256, top_k=50,
+    cfg = walk.WalkConfig(n_steps=n_steps, n_walkers=n_walkers, top_k=top_k,
                           n_p=1000, n_v=4)
-    server = PixieServer(pruned, cfg, batch_size=8, n_slots=4)
+    server = PixieServer(pruned, cfg, batch_size=batch_size, n_slots=4)
 
     # simulate a stream of user action -> query traffic (Homefeed, §5.1)
     rng = np.random.default_rng(0)
     degs = np.asarray(pruned.p2b.degrees())
-    hot = np.argsort(-degs)[:500]
+    hot = np.argsort(-degs)[:min(500, n_pins // 4)]
     actions = ["save", "click", "view"]
     t0 = time.perf_counter()
-    n_requests = 48
     for i in range(n_requests):
         history = [
             service.UserAction(
@@ -48,7 +59,7 @@ def main():
         if i == n_requests // 2:
             # daily graph swap: serving continues on the new generation
             server.swap_graph(pruned)
-        if (i + 1) % 8 == 0:
+        if (i + 1) % batch_size == 0:
             server.flush()
     server.flush()
     wall = time.perf_counter() - t0
@@ -60,6 +71,7 @@ def main():
           f"p99 {s.percentile(99):.1f} ms "
           f"(paper: 1,200 QPS / 60 ms p99 per 64-core server)")
     print(f"graph generation: {s.graph_generation}")
+    return s
 
 if __name__ == "__main__":
     main()

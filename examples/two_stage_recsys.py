@@ -18,18 +18,31 @@ from repro.models import sequential_rec as sr
 from repro.serving.recommend import TwoStageConfig, pixie_then_rank, sasrec_ranker
 from repro.training import optim
 
-def main():
+def main(
+    n_pins: int = 5_000,
+    n_boards: int = 600,
+    train_steps: int = 60,
+    walk_steps: int = 20_000,
+    n_walkers: int = 256,
+    final_k: int = 10,
+):
+    """Run the two-stage pipeline; parameters shrink it to a smoke test
+    (tests/test_examples.py runs a tiny graph + 2 train steps through this
+    same path).  Returns (ranker scores, ranked item ids)."""
     # interaction graph for retrieval (pins double as items)
-    sg = generate(SyntheticGraphConfig(n_pins=5_000, n_boards=600, seed=2))
+    sg = generate(SyntheticGraphConfig(n_pins=n_pins, n_boards=n_boards,
+                                       seed=2))
 
     # train a small SASRec ranker on synthetic sequences over the same items
-    cfg = sr.SeqRecConfig(name="ranker", kind="sasrec", n_items=5_000,
+    cfg = sr.SeqRecConfig(name="ranker", kind="sasrec", n_items=n_pins,
                           embed_dim=32, seq_len=12, n_blocks=2, n_heads=1,
                           n_negatives=16)
     params = sr.init_params(jax.random.key(0), cfg)
     opt = optim.init(params)
-    pipe = SeqRecPipeline(n_items=5_000, batch=32, seq_len=12, n_negatives=16)
-    adamw = optim.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    pipe = SeqRecPipeline(n_items=n_pins, batch=32, seq_len=12,
+                          n_negatives=16)
+    adamw = optim.AdamWConfig(lr=3e-3, warmup_steps=5,
+                              total_steps=max(train_steps, 1))
 
     @jax.jit
     def step(params, opt, batch):
@@ -39,7 +52,7 @@ def main():
         params, opt, _ = optim.apply_updates(params, grads, opt, adamw)
         return params, opt, loss
 
-    for i in range(60):
+    for i in range(train_steps):
         b = jax.tree.map(jnp.asarray, pipe(i))
         params, opt, loss = step(params, opt, b)
         if i % 20 == 0:
@@ -52,16 +65,18 @@ def main():
     query_weights = jnp.asarray([1.0, 0, 0, 0], jnp.float32)
     history = jnp.asarray([q] * 12, jnp.int32)
 
-    wcfg = walk.WalkConfig(n_steps=20_000, n_walkers=256, n_p=2000, n_v=4)
+    wcfg = walk.WalkConfig(n_steps=walk_steps, n_walkers=n_walkers,
+                           n_p=2000, n_v=4)
     ranker = sasrec_ranker(params, history, cfg)
     scores, items = pixie_then_rank(
         sg.graph, query_pins, query_weights, jnp.asarray(0, jnp.int32),
-        jax.random.key(1), wcfg, ranker, TwoStageConfig(final_k=10),
+        jax.random.key(1), wcfg, ranker, TwoStageConfig(final_k=final_k),
     )
     print("\ntwo-stage recommendations (walk-retrieved, ranker-ordered):")
     for s, it in zip(np.asarray(scores), np.asarray(items)):
         if np.isfinite(s):
             print(f"  item {it:5d}  ranker score {s:7.3f}")
+    return scores, items
 
 if __name__ == "__main__":
     main()

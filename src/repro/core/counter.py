@@ -96,6 +96,8 @@ def accumulate_packed_events(
     n_slots: int,
     n_dim: int,
     backend: str,
+    query_events: Array | None = None,
+    n_queries: int = 0,
 ) -> Array:
     """Accumulate wide (slot, id) event lanes into flat dense counts.
 
@@ -110,19 +112,33 @@ def accumulate_packed_events(
                    (kernels/visit_counter): each count tile scans the event
                    chunk with vectorized compares in VMEM, the flat bin id
                    formed in-register; no scatters anywhere.
+
+    Batch-native mode: pass ``query_events`` (the third wide lane, query
+    sentinel ``n_queries``) and ``n_queries > 0`` — ``counts`` is then the
+    ``n_queries * n_slots * n_dim`` query-major triple space and one call
+    accumulates a whole serving batch's chunk; validity additionally
+    requires ``0 <= query < n_queries``.
     """
-    _require_dense_bins(n_slots * n_dim)
+    with_query = query_events is not None
+    n_rows = n_queries * n_slots if with_query else n_slots
+    _require_dense_bins(n_rows * n_dim)
     sev = slot_events.reshape(-1).astype(jnp.int32)
     iev = id_events.reshape(-1).astype(jnp.int32)
+    qev = query_events.reshape(-1).astype(jnp.int32) if with_query else None
     if backend == "pallas":
         from repro.kernels import ops  # local import: kernels layer on top
 
         return counts + ops.visit_counts_wide(
-            sev, iev, n_slots=n_slots, n_dim=n_dim, use_kernel=True
+            sev, iev, n_slots=n_slots, n_dim=n_dim,
+            query_events=qev, n_queries=n_queries, use_kernel=True,
         )
     valid = _valid_lanes(sev, iev, n_slots, n_dim)
+    row = sev
+    if with_query:
+        valid &= (qev >= 0) & (qev < n_queries)
+        row = qev * n_slots + sev
     # pack on masked values only: garbage lanes must not overflow int32
-    flat = jnp.where(valid, sev, 0) * n_dim + jnp.where(valid, iev, 0)
+    flat = jnp.where(valid, row, 0) * n_dim + jnp.where(valid, iev, 0)
     return counts.at[flat].add(valid.astype(counts.dtype), mode="drop")
 
 
@@ -135,6 +151,8 @@ def accumulate_packed_events_with_high(
     n_pins: int,
     n_v: int,
     backend: str,
+    query_events: Array | None = None,
+    n_queries: int = 0,
 ) -> Tuple[Array, Array]:
     """Accumulate wide events AND maintain the early-stop tally (Alg. 3).
 
@@ -164,28 +182,46 @@ def accumulate_packed_events_with_high(
     such limit.  Requires ``n_v >= 1``: counts start at zero, so a
     non-positive threshold could never *cross* and the tally would
     disagree with a full recount.
+
+    Batch-native mode: pass ``query_events`` (query sentinel
+    ``n_queries``) and ``n_queries > 0`` — counts/high then cover the
+    whole serving batch (``n_queries * n_slots * n_pins`` query-major bins
+    / ``n_queries * n_slots`` rows) and ONE call per chunk maintains every
+    query's tally.  The xla twin's chunk sort is over the query-major flat
+    bin ids, which *is* the lexicographic (query, slot, pin) triple sort
+    (the flat id is a monotone encoding of the triple); the pallas twin is
+    the same ``visit_counter_update_high`` kernel with the query lane
+    packed in VMEM.
     """
     if n_v < 1:
         raise ValueError(f"n_v must be >= 1 for crossing tallies, got {n_v}")
-    n_bins = n_slots * n_pins
+    with_query = query_events is not None
+    n_rows = n_queries * n_slots if with_query else n_slots
+    n_bins = n_rows * n_pins
     _require_dense_bins(n_bins)
     sev = slot_events.reshape(-1).astype(jnp.int32)
     pev = pin_events.reshape(-1).astype(jnp.int32)
+    qev = query_events.reshape(-1).astype(jnp.int32) if with_query else None
     if backend == "pallas":
         from repro.kernels import ops  # local import: kernels layer on top
 
         new_counts, delta = ops.visit_counts_update_high(
             counts, sev, pev, n_slots=n_slots, n_pins=n_pins, n_v=n_v,
-            use_kernel=True,
+            query_events=qev, n_queries=n_queries, use_kernel=True,
         )
         return new_counts, high + delta
 
     valid = _valid_lanes(sev, pev, n_slots, n_pins)
-    flat = jnp.where(valid, sev, 0) * n_pins + jnp.where(valid, pev, 0)
+    row = sev
+    if with_query:
+        valid &= (qev >= 0) & (qev < n_queries)
+        row = qev * n_slots + sev
+    flat = jnp.where(valid, row, 0) * n_pins + jnp.where(valid, pev, 0)
     flat = jnp.where(valid, flat, n_bins)
     idx = jnp.where(valid, flat, 0)
     new_counts = counts.at[idx].add(valid.astype(counts.dtype), mode="drop")
     # crossings from the touched bins only: sort the chunk, dedup runs
+    # (the flat-id sort is the lexicographic (query, slot, pin) sort)
     sorted_e = jnp.sort(flat)
     first = jnp.concatenate(
         [jnp.ones((1,), jnp.bool_), sorted_e[1:] != sorted_e[:-1]]
@@ -195,10 +231,10 @@ def accumulate_packed_events_with_high(
     old_c = jnp.take(counts, safe)
     new_c = jnp.take(new_counts, safe)
     crossed = first & in_range & (old_c < n_v) & (new_c >= n_v)
-    slot = jnp.where(in_range, safe // n_pins, n_slots).astype(jnp.int32)
+    slot = jnp.where(in_range, safe // n_pins, n_rows).astype(jnp.int32)
     delta = jax.ops.segment_sum(
-        crossed.astype(jnp.int32), slot, num_segments=n_slots + 1
-    )[:n_slots]
+        crossed.astype(jnp.int32), slot, num_segments=n_rows + 1
+    )[:n_rows]
     return new_counts, high + delta
 
 

@@ -95,9 +95,37 @@ def batch_queries(
     queries: List[Tuple[np.ndarray, np.ndarray]],
     user_feats: Sequence[int],
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Stack padded queries for vmapped serving."""
-    pins = jnp.asarray(np.stack([q[0] for q in queries]))
-    weights = jnp.asarray(np.stack([q[1] for q in queries]))
+    """Stack padded queries for batched serving.
+
+    Validates the batch BEFORE stacking so a ragged or mistyped request
+    fails with a message naming the offending query, not an opaque
+    ``np.stack`` shape error three layers down: every query must have the
+    same ``n_slots`` (pins and weights alike) and float weights.
+    """
+    if not queries:
+        raise ValueError("batch_queries needs at least one query")
+    if len(user_feats) != len(queries):
+        raise ValueError(
+            f"{len(queries)} queries but {len(user_feats)} user_feats; "
+            "one personalization feature per query required"
+        )
+    n_slots = np.asarray(queries[0][0]).shape
+    for i, (q_pins, q_weights) in enumerate(queries):
+        p = np.asarray(q_pins)
+        w = np.asarray(q_weights)
+        if p.shape != n_slots or w.shape != n_slots:
+            raise ValueError(
+                f"query {i} is ragged: pins shape {p.shape}, weights shape "
+                f"{w.shape}, but the batch's slot shape is {n_slots}; pad "
+                "every query to the same n_slots (service.build_query does)"
+            )
+        if not np.issubdtype(w.dtype, np.floating):
+            raise ValueError(
+                f"query {i} weights have dtype {w.dtype}; weights must be "
+                "float (integer weights silently skew Eq. 2 step budgets)"
+            )
+    pins = jnp.asarray(np.stack([np.asarray(q[0]) for q in queries]))
+    weights = jnp.asarray(np.stack([np.asarray(q[1]) for q in queries]))
     feats = jnp.asarray(np.asarray(user_feats, dtype=np.int32))
     return pins, weights, feats
 
@@ -112,7 +140,7 @@ def serve_batch(
     backend: str | None = None,
     with_stats: bool = False,
 ) -> Tuple[jnp.ndarray, ...]:
-    """One SPMD serving step: vmapped Pixie over a query batch.
+    """One SPMD serving step: Pixie over a whole query batch.
 
     This is the TPU replacement for the paper's worker-thread-per-query
     model: a batch of queries is one program.  ``backend`` overrides
@@ -123,6 +151,19 @@ def serve_batch(
     early-stop observables, since both maintain the same incremental
     ``n_high`` tally.
 
+    ``backend="pallas"`` routes through the BATCH-NATIVE engine
+    (``walk_lib.recommend_with_stats_batched``): the whole batch's walkers
+    run in one fused ``pallas_call`` per superstep chunk and counting is
+    one query-major call per chunk, instead of a batch-sized grid
+    replication per query under vmap.  ``backend="xla"`` keeps the vmapped
+    per-query path — the oracle twin the batched engine is verified
+    bit-identical against (tests/test_batchfuse.py).  The batched engine's
+    query-major bins must fit int32 indexing
+    (``walk_lib.batched_engine_fits``); a (graph, batch) shape past that
+    envelope falls back to the vmapped formulation — same results, the
+    per-query bins may still fit — rather than erroring where the old
+    path served.
+
     Returns ``(scores, ids)``; with ``with_stats=True`` returns
     ``(scores, ids, steps_taken, n_high)`` (each leading with the batch
     axis) so the fleet can monitor how much step budget Algorithm 3's
@@ -132,10 +173,21 @@ def serve_batch(
         cfg = dataclasses.replace(cfg, backend=backend)
     keys = jax.random.split(key, pins.shape[0])
 
-    def one(qp, qw, uf, k):
-        return walk_lib.recommend_with_stats(graph, qp, qw, uf, k, cfg)
+    if cfg.backend == "pallas" and walk_lib.batched_engine_fits(
+        int(pins.shape[0]), int(pins.shape[1]), graph.n_pins,
+        graph.n_boards, cfg.count_boards,
+    ):
+        scores, ids, steps, n_high = walk_lib.recommend_with_stats_batched(
+            graph, pins, weights, user_feats, keys, cfg
+        )
+    else:
 
-    scores, ids, steps, n_high = jax.vmap(one)(pins, weights, user_feats, keys)
+        def one(qp, qw, uf, k):
+            return walk_lib.recommend_with_stats(graph, qp, qw, uf, k, cfg)
+
+        scores, ids, steps, n_high = jax.vmap(one)(
+            pins, weights, user_feats, keys
+        )
     if with_stats:
         return scores, ids, steps, n_high
     return scores, ids

@@ -48,6 +48,15 @@ Two counting backends (see core/counter.py):
              scale-free, memory O(N) like the paper's hash table, id space
              unlimited.  Both engines emit the lane buffers directly.
 
+Serving batches are BATCH-NATIVE (``pixie_random_walk_batched``): the
+whole batch's walkers run on one walker axis with a per-walker query lane,
+each chunk is one fused call (one ``pallas_call`` on the pallas engine)
+plus one query-major counting call over (query, slot, pin) triple bins,
+and a single shared while loop carries a per-(query, slot) early-stop
+mask — bit-identical to vmapping the per-query engine over
+``jax.random.split`` keys, which remains the oracle twin
+(tests/test_batchfuse.py).
+
 Early stopping (Algorithm 2 lines 10-13) is evaluated every chunk: a query
 slot stops once >= n_p pins reached n_v visits or its step budget N_q is
 spent; the whole walk stops when every slot stopped.  The statistic is
@@ -119,6 +128,31 @@ def select_count_engine(
             "(pixie_walk_events) for production-scale id spaces"
         )
     return backend
+
+
+def batched_engine_fits(
+    n_queries: int,
+    n_slots: int,
+    n_pins: int,
+    n_boards: int = 0,
+    count_boards: bool = False,
+) -> bool:
+    """Whether the batch-native dense engine can materialize its bins.
+
+    The batched engine's query-major count buffer has
+    ``n_queries * n_slots * n_pins`` int32-indexed bins (boards too when
+    counted) — a STRICTER envelope than the vmapped per-query path, whose
+    flat indexing only spans ``n_slots * n_pins`` per query even though
+    its total memory is the same.  ``serve_batch`` consults this to fall
+    back to the vmapped formulation instead of turning a
+    previously-serving (graph, batch) shape into a trace-time error.
+    Pure-int predicate so callers (and tests) can probe production shapes
+    without materializing anything.
+    """
+    n_bins = n_queries * n_slots * max(
+        n_pins, n_boards if count_boards else 0
+    )
+    return n_bins + 1 < 2**31
 
 
 # disables Algorithm 2's early stopping: no pin can ever reach this many
@@ -232,6 +266,36 @@ def _chunk_rbits(key: Array, step_base: Array, chunk_steps: int, w: int) -> Arra
     return jax.vmap(lambda k: jax.random.bits(k, (w, 4)))(keys)
 
 
+def _validated_bias_bounds(
+    graph: PinBoardGraph, cfg: WalkConfig
+) -> Tuple[Optional[Array], Optional[Array]]:
+    """(p2b, b2p) feat bounds for a biased walk, or (None, None).
+
+    Shared by the per-query and batched chunk drivers so both refuse a
+    one-sided graph identically: a graph with feat_bounds on only one CSR
+    side can't answer a biased walk, and refusing loudly beats silently
+    dropping personalization.
+    """
+    if cfg.backend not in BACKENDS:
+        raise ValueError(f"unknown walk backend {cfg.backend!r}; use {BACKENDS}")
+    if cfg.gather_mode not in GATHER_MODES:
+        raise ValueError(
+            f"unknown gather_mode {cfg.gather_mode!r}; use {GATHER_MODES}"
+        )
+    has_p2b = graph.p2b.feat_bounds is not None
+    has_b2p = graph.b2p.feat_bounds is not None
+    if has_p2b != has_b2p and cfg.bias_beta > 0.0:
+        raise ValueError(
+            "graph has feat_bounds on only one CSR side; build both sides "
+            "for biased walks or set bias_beta=0"
+        )
+    use_bias = has_p2b and has_b2p and cfg.bias_beta > 0.0
+    return (
+        graph.p2b.feat_bounds if use_bias else None,
+        graph.b2p.feat_bounds if use_bias else None,
+    )
+
+
 def _walk_chunk(
     graph: PinBoardGraph,
     curr: Array,             # (W,) int32 current pin per walker
@@ -254,25 +318,10 @@ def _walk_chunk(
     same random bits and agree bit-for-bit at every id-space scale — wide
     lanes have no int32 packing cliff, so there is no fallback.
     """
-    if cfg.backend not in BACKENDS:
-        raise ValueError(f"unknown walk backend {cfg.backend!r}; use {BACKENDS}")
-    if cfg.gather_mode not in GATHER_MODES:
-        raise ValueError(
-            f"unknown gather_mode {cfg.gather_mode!r}; use {GATHER_MODES}"
-        )
+    p2b_fb, b2p_fb = _validated_bias_bounds(graph, cfg)
     w = curr.shape[0]
     rbits = _chunk_rbits(key, step_base, cfg.chunk_steps, w)
     feat = jnp.broadcast_to(jnp.asarray(user_feat, jnp.int32), (w,))
-    has_p2b = graph.p2b.feat_bounds is not None
-    has_b2p = graph.b2p.feat_bounds is not None
-    if has_p2b != has_b2p and cfg.bias_beta > 0.0:
-        # a one-sided graph can't answer a biased walk; refusing loudly
-        # beats silently dropping personalization
-        raise ValueError(
-            "graph has feat_bounds on only one CSR side; build both sides "
-            "for biased walks or set bias_beta=0"
-        )
-    use_bias = has_p2b and has_b2p and cfg.bias_beta > 0.0
     return ops.walk_chunk_fused(
         curr,
         query_of_walker,
@@ -283,8 +332,8 @@ def _walk_chunk(
         graph.p2b.targets,
         graph.b2p.offsets,
         graph.b2p.targets,
-        graph.p2b.feat_bounds if use_bias else None,
-        graph.b2p.feat_bounds if use_bias else None,
+        p2b_fb,
+        b2p_fb,
         n_pins=graph.n_pins,
         n_slots=n_slots,
         n_boards=graph.n_boards,
@@ -292,6 +341,64 @@ def _walk_chunk(
         beta_u32=_prob_u32(cfg.bias_beta),
         count_boards=cfg.count_boards,
         unroll=unroll,
+        block_w=cfg.pallas_block_w,
+        gather_mode=cfg.gather_mode,
+        use_kernel=(cfg.backend == "pallas"),
+    )
+
+
+def _walk_chunk_batched(
+    graph: PinBoardGraph,
+    curr: Array,             # (n_queries * w,) int32 current pin per walker
+    query_of_walker: Array,  # (n_queries * w,) int32 restart target
+    feat_of_walker: Array,   # (n_queries * w,) int32 personalization feature
+    slot_of_walker: Array,   # (n_queries * w,) int32 query slot per walker
+    qid_of_walker: Array,    # (n_queries * w,) int32 query id per walker
+    keys: Array,             # (n_queries,) per-query PRNG keys
+    step_base: Array,        # () int32 global step counter (for counter RNG)
+    cfg: WalkConfig,
+    n_slots: int,
+    n_queries: int,
+) -> Tuple[Array, Array, Array, Array, Optional[Array]]:
+    """Batch-native chunk: every query's walkers in ONE fused call.
+
+    Returns ``(new_curr, query_events, slot_events, pin_events,
+    board_events)`` — the wide (query, slot, pin) int32 event triple, each
+    lane (chunk_steps, n_queries * w).  The random bits are the EXACT
+    per-query streams of the vmapped path: each query's
+    ``jax.random.split``-derived key generates its own
+    ``(chunk_steps, w, 4)`` block (``_chunk_rbits``), and the blocks are
+    laid out query-major along the walker axis — so walker ``q * w + i``
+    consumes bit-for-bit the same draws it would inside
+    ``pixie_random_walk`` for query ``q`` alone.
+    """
+    p2b_fb, b2p_fb = _validated_bias_bounds(graph, cfg)
+    w_total = curr.shape[0]
+    w = w_total // n_queries
+    rbits_q = jax.vmap(
+        lambda k: _chunk_rbits(k, step_base, cfg.chunk_steps, w)
+    )(keys)                                     # (n_queries, chunk_steps, w, 4)
+    rbits = jnp.moveaxis(rbits_q, 0, 1).reshape(cfg.chunk_steps, w_total, 4)
+    return ops.walk_chunk_fused_batched(
+        curr,
+        query_of_walker,
+        feat_of_walker,
+        slot_of_walker,
+        qid_of_walker,
+        rbits,
+        graph.p2b.offsets,
+        graph.p2b.targets,
+        graph.b2p.offsets,
+        graph.b2p.targets,
+        p2b_fb,
+        b2p_fb,
+        n_pins=graph.n_pins,
+        n_slots=n_slots,
+        n_queries=n_queries,
+        n_boards=graph.n_boards,
+        alpha_u32=_prob_u32(cfg.alpha),
+        beta_u32=_prob_u32(cfg.bias_beta),
+        count_boards=cfg.count_boards,
         block_w=cfg.pallas_block_w,
         gather_mode=cfg.gather_mode,
         use_kernel=(cfg.backend == "pallas"),
@@ -479,6 +586,203 @@ def recommend(
         graph, query_pins, query_weights, user_feat, key, cfg
     )
     return scores, ids
+
+
+# ---------------------------------------------------------------------------
+# Batch-native multi-query walk: ONE fused engine for the whole serving batch
+# ---------------------------------------------------------------------------
+
+
+def pixie_random_walk_batched(
+    graph: PinBoardGraph,
+    query_pins: Array,     # (n_queries, n_slots) int32, padded with -1
+    query_weights: Array,  # (n_queries, n_slots) float32, 0 for padding
+    user_feats: Array,     # (n_queries,) int32 personalization features
+    keys: Array,           # (n_queries,) per-query PRNG keys (random.split)
+    cfg: WalkConfig,
+) -> WalkResult:
+    """PIXIERANDOMWALKMULTIPLE over a whole serving batch, batch-natively.
+
+    The bit-identical twin of ``jax.vmap(pixie_random_walk)`` over the same
+    per-query keys — same counts, board counts, ``steps_taken`` and
+    ``n_high`` for every batch size — but the batch is a first-class axis
+    of the engine instead of a vmap wrapper:
+
+      * every query's walkers are packed query-major along ONE walker axis,
+        so each superstep chunk is a single fused call for the whole batch
+        (with ``backend="pallas"``: one ``pallas_call`` per chunk, its DMA
+        pipeline hiding latency behind ``n_queries * n_walkers`` rows,
+        instead of a batch-sized leading grid dimension per query);
+      * counting runs once per chunk over query-major ``(query, slot,
+        pin)`` triple bins (``accumulate_packed_events_with_high`` with the
+        query lane), not once per query over replicated dense buffers;
+      * ONE shared ``while_loop`` carries a per-(query, slot) early-stop
+        mask: a query that hits Algorithm 3's threshold stops emitting
+        events and stops counting steps (its walker lanes are masked to
+        the sentinel triple) while its batch neighbours keep walking —
+        exactly the frozen-state semantics vmap gives the per-query loop.
+
+    Per-query RNG streams are preserved exactly: walker ``q * w + i`` at
+    global step ``s`` consumes the same ``_chunk_rbits(keys[q], ...)``
+    draws as in the per-query engine.  Returns a ``WalkResult`` whose
+    fields lead with the batch axis: counts ``(n_queries, n_slots,
+    n_pins)``, board_counts ``(n_queries, n_slots, n_boards) | None``,
+    steps_taken / n_high ``(n_queries, n_slots)``.
+    """
+    if cfg.n_v < 1:
+        raise ValueError(
+            f"n_v must be >= 1, got {cfg.n_v}; use "
+            "cfg.without_early_stop() to disable early stopping"
+        )
+    if query_pins.ndim != 2:
+        raise ValueError(
+            f"query_pins must be (n_queries, n_slots), got {query_pins.shape}"
+        )
+    n_queries, n_slots = query_pins.shape
+    n_pins = graph.n_pins
+    w = cfg.n_walkers
+    n_rows = n_queries * n_slots
+    n_boards_packed = graph.n_boards if cfg.count_boards else 0
+    slot_sentinel = jnp.int32(n_slots)
+    query_sentinel = jnp.int32(n_queries)
+    # the dense buffers materialize n_queries * n_slots * n_pins bins
+    count_engine = select_count_engine(
+        cfg.backend, n_rows, n_pins, n_boards_packed
+    )
+
+    valid_q = (query_pins >= 0) & (query_weights > 0)          # (B, S)
+    safe_q = jnp.where(valid_q, query_pins, 0)
+    degs = graph.pin_degree(safe_q) * valid_q.astype(graph.p2b.offsets.dtype)
+
+    # Eq. 1-2 per query — the same traced program the vmapped path runs
+    n_q = jax.vmap(
+        lambda v, qw, dg: sampling.allocate_steps(
+            jnp.where(v, qw, 0.0), dg,
+            jnp.asarray(graph.max_pin_degree), cfg.n_steps,
+        )
+    )(valid_q, query_weights, degs)                            # (B, S)
+    slot_of_walker_q, _ = jax.vmap(
+        lambda nq: sampling.allocate_walkers(nq, w)
+    )(n_q)                                                     # (B, w)
+    query_of_walker_q = jax.vmap(jnp.take)(safe_q, slot_of_walker_q)
+    walkers_per_slot = jax.vmap(
+        lambda so: jax.ops.segment_sum(
+            jnp.ones((w,), jnp.int32), so, num_segments=n_slots
+        )
+    )(slot_of_walker_q).reshape(-1)                            # (B*S,)
+
+    # query-major walker packing: walkers of query q occupy [q*w, (q+1)*w)
+    qid_of_walker = jnp.repeat(jnp.arange(n_queries, dtype=jnp.int32), w)
+    slot_of_walker = slot_of_walker_q.reshape(-1).astype(jnp.int32)
+    query_of_walker = query_of_walker_q.reshape(-1).astype(jnp.int32)
+    feat_of_walker = jnp.repeat(jnp.asarray(user_feats, jnp.int32), w)
+    row_of_walker = qid_of_walker * n_slots + slot_of_walker
+
+    counts0 = jnp.zeros((n_rows * n_pins,), dtype=jnp.int32)
+    bcounts0 = (
+        jnp.zeros((n_rows * graph.n_boards,), dtype=jnp.int32)
+        if cfg.count_boards
+        else None
+    )
+    valid_row = valid_q.reshape(-1)
+    n_q_row = n_q.reshape(-1)
+
+    def cond(state):
+        _, _, _, _, _, row_active, it = state
+        return jnp.any(row_active) & (it < cfg.max_chunks())
+
+    def body(state):
+        curr, counts, bcounts, high, steps_taken, row_active, it = state
+        step_base = it * cfg.chunk_steps
+        walker_active = jnp.take(row_active, row_of_walker)
+
+        curr2, qev, sev, pev, bev = _walk_chunk_batched(
+            graph, curr, query_of_walker, feat_of_walker, slot_of_walker,
+            qid_of_walker, keys, step_base, cfg, n_slots, n_queries,
+        )
+        curr = jnp.where(walker_active, curr2, curr)
+        # masking the shared lanes to the sentinel triple invalidates pin
+        # AND board events of stopped queries/slots
+        qev = jnp.where(walker_active[None, :], qev, query_sentinel)
+        sev = jnp.where(walker_active[None, :], sev, slot_sentinel)
+        # fused: ONE call accumulates the whole batch's chunk AND updates
+        # every (query, slot) running n_high tally — no per-query loop, no
+        # n_rows * n_pins reduction anywhere in this body
+        counts, high = counter_lib.accumulate_packed_events_with_high(
+            counts, high, sev, pev, n_slots, n_pins, cfg.n_v, count_engine,
+            query_events=qev, n_queries=n_queries,
+        )
+        if cfg.count_boards:
+            bcounts = counter_lib.accumulate_packed_events(
+                bcounts, sev, bev, n_slots, graph.n_boards, count_engine,
+                query_events=qev, n_queries=n_queries,
+            )
+
+        steps_taken = steps_taken + walkers_per_slot * row_active.astype(
+            jnp.int32
+        ) * cfg.chunk_steps
+
+        # per-(query, slot) early stopping, exactly the per-query rule
+        row_active = (
+            valid_row
+            & (steps_taken < n_q_row)
+            & (high <= cfg.n_p)
+        )
+        return curr, counts, bcounts, high, steps_taken, row_active, it + 1
+
+    state0 = (
+        query_of_walker,
+        counts0,
+        bcounts0,
+        jnp.zeros((n_rows,), jnp.int32),
+        jnp.zeros((n_rows,), jnp.int32),
+        valid_row,
+        jnp.asarray(0, jnp.int32),
+    )
+    curr, counts, bcounts, high, steps_taken, _, _ = jax.lax.while_loop(
+        cond, body, state0
+    )
+    per_slot = counts.reshape(n_queries, n_slots, n_pins)
+    # never recommend the query pins themselves; debit the tally like the
+    # per-query engine does
+    b_idx = jnp.arange(n_queries)[:, None]
+    s_idx = jnp.arange(n_slots)[None, :]
+    q_reached = (per_slot[b_idx, s_idx, safe_q] >= cfg.n_v).astype(jnp.int32)
+    per_slot = per_slot.at[b_idx, s_idx, safe_q].set(0)
+    return WalkResult(
+        counts=per_slot,
+        board_counts=None
+        if bcounts is None
+        else bcounts.reshape(n_queries, n_slots, graph.n_boards),
+        steps_taken=steps_taken.reshape(n_queries, n_slots),
+        n_high=(high - q_reached.reshape(-1)).reshape(n_queries, n_slots),
+    )
+
+
+def recommend_with_stats_batched(
+    graph: PinBoardGraph,
+    query_pins: Array,     # (n_queries, n_slots)
+    query_weights: Array,  # (n_queries, n_slots)
+    user_feats: Array,     # (n_queries,)
+    keys: Array,           # (n_queries,) per-query PRNG keys
+    cfg: WalkConfig,
+) -> Tuple[Array, Array, Array, Array]:
+    """Batch-native ``recommend_with_stats``: one fused engine, whole batch.
+
+    Returns ``(scores (B, top_k), ids (B, top_k), steps_taken (B, n_slots),
+    n_high (B, n_slots))`` — bit-identical to vmapping
+    ``recommend_with_stats`` over the same per-query keys; the walk runs on
+    the batch-native engine and only the cheap Eq. 3 booster / top-k run
+    under vmap.
+    """
+    res = pixie_random_walk_batched(
+        graph, query_pins, query_weights, user_feats, keys, cfg
+    )
+    boosted = jax.vmap(counter_lib.boost_combine)(res.counts)
+    scores, ids = jax.vmap(lambda b: counter_lib.topk_dense(b, cfg.top_k))(
+        boosted
+    )
+    return scores, ids, res.steps_taken, res.n_high
 
 
 # ---------------------------------------------------------------------------

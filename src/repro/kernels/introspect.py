@@ -1,0 +1,39 @@
+"""Jaxpr introspection helpers for lowering pins.
+
+The batch-native engine's structural claim — a constant number of
+``pallas_call`` eqns per serve step with no batch-sized grid dimension —
+is asserted both by tests (tests/test_batchfuse.py) and by the CI-gated
+``batchfuse`` benchmark verdict.  ONE copy of the jaxpr walker lives here
+so a future JAX upgrade that moves ``grid_mapping`` breaks both consumers
+the same way instead of letting them disagree about the same lowering.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+
+def pallas_grids(jaxpr) -> List[Tuple[int, ...]]:
+    """Every ``pallas_call`` grid in a ClosedJaxpr, nested jaxprs included.
+
+    Returns the grids in eqn order (while/cond/scan bodies walked
+    recursively), each as a tuple of ints.
+    """
+    grids: List[Tuple[int, ...]] = []
+
+    def rec(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                grids.append(
+                    tuple(int(d) for d in eqn.params["grid_mapping"].grid)
+                )
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    rec(v.jaxpr)
+                elif isinstance(v, (list, tuple)):
+                    for x in v:
+                        if hasattr(x, "jaxpr"):
+                            rec(x.jaxpr)
+
+    rec(jaxpr.jaxpr)
+    return grids

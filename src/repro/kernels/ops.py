@@ -56,16 +56,26 @@ def visit_counts_wide(
     *,
     n_slots: int,
     n_dim: int,
+    query_events: Optional[Array] = None,
+    n_queries: int = 0,
     use_kernel: Optional[bool] = None,
 ) -> Array:
-    """Histogram of wide (slot, id) event lanes over n_slots * n_dim bins."""
+    """Histogram of wide (slot, id) event lanes over n_slots * n_dim bins.
+
+    With a ``query_events`` lane (batch-native mode, ``n_queries > 0``)
+    the bins are the ``n_queries * n_slots * n_dim`` query-major triple
+    space and one call covers a whole serving batch.
+    """
     if use_kernel is None:
         use_kernel = _default_use_kernel()
     if use_kernel:
         return _counter_wide_kernel(
-            slot_events, id_events, n_slots=n_slots, n_dim=n_dim
+            slot_events, id_events, query_events,
+            n_slots=n_slots, n_dim=n_dim, n_queries=n_queries,
         )
-    return ref.visit_counter_wide_ref(slot_events, id_events, n_slots, n_dim)
+    return ref.visit_counter_wide_ref(
+        slot_events, id_events, n_slots, n_dim, query_events, n_queries
+    )
 
 
 def visit_counts_update_high(
@@ -76,6 +86,8 @@ def visit_counts_update_high(
     n_slots: int,
     n_pins: int,
     n_v: int,
+    query_events: Optional[Array] = None,
+    n_queries: int = 0,
     use_kernel: Optional[bool] = None,
 ) -> Tuple[Array, Array]:
     """Fused running-count update + per-slot n_v-crossing tally (wide events).
@@ -83,17 +95,21 @@ def visit_counts_update_high(
     Returns ``(new_counts (n_slots * n_pins,), delta_high (n_slots,))`` —
     the incremental early-stop statistic of the dense walk engine
     (Algorithm 3): the while-loop carries a running ``n_high`` tally instead
-    of re-reducing the whole count buffer each chunk.
+    of re-reducing the whole count buffer each chunk.  With a
+    ``query_events`` lane (batch-native mode, ``n_queries > 0``) the bins
+    are query-major over the whole batch and ``delta_high`` has one entry
+    per (query, slot) row.
     """
     if use_kernel is None:
         use_kernel = _default_use_kernel()
     if use_kernel:
         return _counter_high_kernel(
-            prior_counts, slot_events, pin_events,
-            n_slots=n_slots, n_pins=n_pins, n_v=n_v,
+            prior_counts, slot_events, pin_events, query_events,
+            n_slots=n_slots, n_pins=n_pins, n_v=n_v, n_queries=n_queries,
         )
     return ref.visit_counter_update_high_ref(
-        prior_counts, slot_events, pin_events, n_slots, n_pins, n_v
+        prior_counts, slot_events, pin_events, n_slots, n_pins, n_v,
+        query_events, n_queries,
     )
 
 
@@ -189,6 +205,72 @@ def walk_chunk_fused(
         p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
         p2b_feat_bounds, b2p_feat_bounds,
         n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
+        alpha_u32=alpha_u32, beta_u32=beta_u32,
+        count_boards=count_boards, unroll=unroll,
+    )
+
+
+def walk_chunk_fused_batched(
+    curr: Array,
+    query: Array,
+    feat: Array,
+    slot: Array,
+    qid: Array,
+    rbits: Array,
+    p2b_offsets: Array,
+    p2b_targets: Array,
+    b2p_offsets: Array,
+    b2p_targets: Array,
+    p2b_feat_bounds: Optional[Array] = None,
+    b2p_feat_bounds: Optional[Array] = None,
+    *,
+    n_pins: int,
+    n_slots: int,
+    n_queries: int,
+    n_boards: int,
+    alpha_u32: int,
+    beta_u32: int,
+    count_boards: bool = False,
+    unroll: bool = False,
+    block_w: Optional[int] = None,
+    gather_mode: str = "scalar",
+    use_kernel: Optional[bool] = None,
+) -> Tuple[Array, Array, Array, Array, Optional[Array]]:
+    """Batch-native chunk: a whole serving batch's walkers in ONE call.
+
+    Identical contract to :func:`walk_chunk_fused` except the walker axis
+    packs every query's pool back to back (``qid`` says which query each
+    walker serves) and the return grows the query event lane:
+    ``(next, query_events, slot_events, pin_events, board_events | None)``
+    — the wide (query, slot, pin) int32 triple, query lane sentinel
+    ``n_queries`` sharing the slot lane's validity.  The kernel path is
+    ONE ``pallas_call`` per chunk for the whole batch (vs a batch-sized
+    leading grid dim when the per-query op is vmapped); the oracle path is
+    ``ref.walk_chunk_batched_ref`` — the same single-copy walk arithmetic
+    as the per-query oracle, so parity is structural.
+    """
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        w = curr.shape[0]
+        if block_w is None:
+            block_w = _DEFAULT_BLOCK_W if w % _DEFAULT_BLOCK_W == 0 else w
+        return _fused_kernel(
+            curr, query, feat, slot, rbits,
+            p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
+            p2b_feat_bounds, b2p_feat_bounds, qid,
+            n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
+            n_queries=n_queries,
+            alpha_u32=alpha_u32, beta_u32=beta_u32,
+            count_boards=count_boards, block_w=block_w,
+            gather_mode=gather_mode,
+        )
+    return ref.walk_chunk_batched_ref(
+        curr, query, feat, slot, qid, rbits,
+        p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
+        p2b_feat_bounds, b2p_feat_bounds,
+        n_pins=n_pins, n_slots=n_slots, n_queries=n_queries,
+        n_boards=n_boards,
         alpha_u32=alpha_u32, beta_u32=beta_u32,
         count_boards=count_boards, unroll=unroll,
     )

@@ -34,7 +34,12 @@ def visit_counter_ref(events: Array, n_bins: int) -> Array:
 
 
 def visit_counter_wide_ref(
-    slot_events: Array, id_events: Array, n_slots: int, n_dim: int
+    slot_events: Array,
+    id_events: Array,
+    n_slots: int,
+    n_dim: int,
+    query_events: Optional[Array] = None,
+    n_queries: int = 0,
 ) -> Array:
     """Histogram of wide (slot, id) event lanes over n_slots * n_dim bins.
 
@@ -43,17 +48,25 @@ def visit_counter_wide_ref(
     sentinel is slot = n_slots).  Returns (n_slots * n_dim,) int32.  Only
     meaningful when the flat bin space fits a dense buffer — the wrapper
     layer enforces ``n_slots * n_dim < 2**31``.
+
+    With a ``query_events`` lane (batch-native mode, ``n_queries > 0``) an
+    event is additionally required to have ``0 <= query < n_queries``
+    (query sentinel ``n_queries``) and the flat bins become query-major:
+    ``(query * n_slots + slot) * n_dim + id`` over
+    ``n_queries * n_slots * n_dim`` bins.
     """
     valid = (
         (slot_events >= 0) & (slot_events < n_slots)
         & (id_events >= 0) & (id_events < n_dim)
     )
-    flat = jnp.where(
-        valid,
-        slot_events.astype(jnp.int32) * n_dim + id_events.astype(jnp.int32),
-        0,
-    )
-    counts = jnp.zeros((n_slots * n_dim,), jnp.int32)
+    row = slot_events.astype(jnp.int32)
+    n_rows = n_slots
+    if query_events is not None:
+        valid &= (query_events >= 0) & (query_events < n_queries)
+        row = query_events.astype(jnp.int32) * n_slots + row
+        n_rows = n_queries * n_slots
+    flat = jnp.where(valid, row * n_dim + id_events.astype(jnp.int32), 0)
+    counts = jnp.zeros((n_rows * n_dim,), jnp.int32)
     return counts.at[flat].add(valid.astype(jnp.int32))
 
 
@@ -64,6 +77,8 @@ def visit_counter_update_high_ref(
     n_slots: int,
     n_pins: int,
     n_v: int,
+    query_events: Optional[Array] = None,
+    n_queries: int = 0,
 ) -> Tuple[Array, Array]:
     """Oracle for the fused count-update + early-stop tally kernel.
 
@@ -72,13 +87,17 @@ def visit_counter_update_high_ref(
     during this update.  Deliberately does the full O(n_slots * n_pins)
     reduction — this is the obviously-correct ground truth the fused kernel
     (and the chunk-local XLA twin in core/counter.py) must match exactly.
+    In batch-native mode (``query_events`` lane, ``n_queries > 0``) the
+    rows are the ``n_queries * n_slots`` (query, slot) pairs and
+    ``delta_high`` has one entry per row.
     """
+    n_rows = n_queries * n_slots if query_events is not None else n_slots
     new = prior_counts + visit_counter_wide_ref(
-        slot_events, id_events, n_slots, n_pins
+        slot_events, id_events, n_slots, n_pins, query_events, n_queries
     )
     crossed = (prior_counts < n_v) & (new >= n_v)
     delta = jnp.sum(
-        crossed.reshape(n_slots, n_pins).astype(jnp.int32), axis=1
+        crossed.reshape(n_rows, n_pins).astype(jnp.int32), axis=1
     )
     return new, delta
 
@@ -234,6 +253,52 @@ def walk_chunk_ref(
         carry = jax.lax.fori_loop(0, chunk_steps, one_step, carry)
     new_curr, sev, pev, bev = carry
     return new_curr, sev, pev, bev if count_boards else None
+
+
+def walk_chunk_batched_ref(
+    curr: Array,          # (n_queries * w,) int32 current pin per walker
+    query: Array,         # (n_queries * w,) int32 restart pin per walker
+    feat: Array,          # (n_queries * w,) int32 personalization feature
+    slot: Array,          # (n_queries * w,) int32 query-slot id per walker
+    qid: Array,           # (n_queries * w,) int32 query id per walker
+    rbits: Array,         # (chunk_steps, n_queries * w, 4) uint32
+    p2b_offsets: Array,
+    p2b_targets: Array,
+    b2p_offsets: Array,
+    b2p_targets: Array,
+    p2b_feat_bounds: Optional[Array] = None,
+    b2p_feat_bounds: Optional[Array] = None,
+    *,
+    n_pins: int,
+    n_slots: int,
+    n_queries: int,
+    n_boards: int,
+    alpha_u32: int,
+    beta_u32: int,
+    count_boards: bool = False,
+    unroll: bool = False,
+) -> Tuple[Array, Array, Array, Array, Optional[Array]]:
+    """Batch-native oracle: the whole serving batch's walkers in one chunk.
+
+    Returns ``(next_curr, query_events, slot_events, pin_events,
+    board_events | None)`` — the (query, slot, pin) wide event triple.  The
+    walk arithmetic is EXACTLY ``walk_chunk_ref`` (one copy — structural
+    parity with the fused kernel's batch mode rests on this); the query
+    lane is derived from the slot lane's validity, mirroring the kernel's
+    shared-validity emission: query sentinel ``n_queries`` wherever the
+    slot lane carries its ``n_slots`` sentinel.
+    """
+    nxt, sev, pev, bev = walk_chunk_ref(
+        curr, query, feat, slot, rbits,
+        p2b_offsets, p2b_targets, b2p_offsets, b2p_targets,
+        p2b_feat_bounds, b2p_feat_bounds,
+        n_pins=n_pins, n_slots=n_slots, n_boards=n_boards,
+        alpha_u32=alpha_u32, beta_u32=beta_u32,
+        count_boards=count_boards, unroll=unroll,
+    )
+    ok = sev != jnp.int32(n_slots)
+    qev = jnp.where(ok, qid.astype(jnp.int32)[None, :], jnp.int32(n_queries))
+    return nxt, qev, sev, pev, bev
 
 
 # ---------------------------------------------------------------------------

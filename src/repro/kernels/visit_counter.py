@@ -129,51 +129,78 @@ def _require_dense_bins(n_bins: int) -> None:
         )
 
 
-def _flat_ids_from_lanes(slot_ev, id_ev, n_slots: int, n_dim: int):
+def _flat_ids_from_lanes(
+    slot_ev, id_ev, n_slots: int, n_dim: int, q_ev=None, n_queries: int = 0
+):
     """Pack wide lanes to flat bin ids in-register; invalid events -> -1.
 
-    The product is int32-safe because the wide wrappers only accept bin
-    spaces that fit a dense buffer (``n_slots * n_dim < 2**31``).
+    With a query lane (``q_ev``, batch-native mode) the bins are
+    query-major — ``(query * n_slots + slot) * n_dim + id`` — formed right
+    here in VMEM, so no lane ever carries a packed product outside the
+    kernel; validity then additionally requires ``0 <= query < n_queries``
+    (the walk's query sentinel is ``n_queries``).  The products are
+    int32-safe because the wide wrappers only accept bin spaces that fit a
+    dense buffer (``n_rows * n_dim < 2**31``).
     """
     valid = (
         (slot_ev >= 0) & (slot_ev < n_slots)
         & (id_ev >= 0) & (id_ev < n_dim)
     )
+    row = slot_ev
+    if q_ev is not None:
+        valid &= (q_ev >= 0) & (q_ev < n_queries)
+        row = q_ev * jnp.int32(n_slots) + slot_ev
     flat = (
-        jnp.where(valid, slot_ev, 0) * jnp.int32(n_dim)
+        jnp.where(valid, row, 0) * jnp.int32(n_dim)
         + jnp.where(valid, id_ev, 0)
     )
     return jnp.where(valid, flat, jnp.int32(-1))
 
 
 def _visit_counter_wide_kernel(
-    slot_ref, id_ref, counts_ref, *, tile: int, chunk: int,
-    n_slots: int, n_dim: int,
+    *refs, tile: int, chunk: int, n_slots: int, n_dim: int,
+    n_queries: int = 0,
 ):
+    """Tile-scan histogram over wide lanes; with ``n_queries > 0`` the
+    event refs lead with a query lane and bins are query-major."""
     j = pl.program_id(1)
+    counts_ref = refs[-1]
 
     @pl.when(j == 0)
     def _init():
         counts_ref[...] = jnp.zeros_like(counts_ref)
 
     tile_base = pl.program_id(0) * tile
-    ev = _flat_ids_from_lanes(
-        slot_ref[...], id_ref[...], n_slots, n_dim
-    )                                                      # (chunk,)
+    if n_queries:
+        q_ref, slot_ref, id_ref = refs[:3]
+        ev = _flat_ids_from_lanes(
+            slot_ref[...], id_ref[...], n_slots, n_dim,
+            q_ev=q_ref[...], n_queries=n_queries,
+        )                                                  # (chunk,)
+    else:
+        slot_ref, id_ref = refs[:2]
+        ev = _flat_ids_from_lanes(
+            slot_ref[...], id_ref[...], n_slots, n_dim
+        )                                                  # (chunk,)
     ids = tile_base + jax.lax.broadcasted_iota(jnp.int32, (chunk, tile), 1)
     hit = (ev[:, None] == ids).astype(jnp.int32)
     counts_ref[...] += jnp.sum(hit, axis=0)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_slots", "n_dim", "tile", "chunk", "interpret")
+    jax.jit,
+    static_argnames=(
+        "n_slots", "n_dim", "n_queries", "tile", "chunk", "interpret"
+    ),
 )
 def visit_counter_wide(
     slot_events: jax.Array,
     id_events: jax.Array,
+    query_events: jax.Array | None = None,
     *,
     n_slots: int,
     n_dim: int,
+    n_queries: int = 0,
     tile: int = DEFAULT_TILE,
     chunk: int = DEFAULT_CHUNK,
     interpret: bool | None = None,
@@ -184,19 +211,30 @@ def visit_counter_wide(
     ``0 <= slot < n_slots`` and ``0 <= id < n_dim`` (the walk's invalid
     sentinel, slot = ``n_slots``, is dropped for free).  Returns
     ``(n_slots * n_dim,)`` int32.
+
+    Batch-native mode: pass ``query_events`` (the third wide lane, query
+    sentinel ``n_queries``) and ``n_queries > 0`` to histogram a whole
+    serving batch's events in one call over
+    ``n_queries * n_slots * n_dim`` query-major bins — the triple is
+    packed to flat bin ids inside the kernel, in VMEM.
     """
-    n_bins = n_slots * n_dim
+    with_query = query_events is not None
+    if with_query and n_queries <= 0:
+        raise ValueError("query_events given but n_queries not set (> 0)")
+    n_rows = n_queries * n_slots if with_query else n_slots
+    n_bins = n_rows * n_dim
     _require_dense_bins(n_bins)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     m = slot_events.shape[0]
     if m == 0:  # zero-size grid is illegal; nothing to count either way
         return jnp.zeros((n_bins,), jnp.int32)
+    lanes = ([query_events] if with_query else []) + [slot_events, id_events]
+    lanes = [l.astype(jnp.int32) for l in lanes]
     m_pad = -(-m // chunk) * chunk
     if m_pad != m:
         pad = jnp.full((m_pad - m,), -1, jnp.int32)
-        slot_events = jnp.concatenate([slot_events.astype(jnp.int32), pad])
-        id_events = jnp.concatenate([id_events.astype(jnp.int32), pad])
+        lanes = [jnp.concatenate([l, pad]) for l in lanes]
     n_pad = -(-n_bins // tile) * tile
     grid = (n_pad // tile, m_pad // chunk)
     ev_spec = pl.BlockSpec((chunk,), lambda i, j: (j,))
@@ -204,13 +242,14 @@ def visit_counter_wide(
         functools.partial(
             _visit_counter_wide_kernel, tile=tile, chunk=chunk,
             n_slots=n_slots, n_dim=n_dim,
+            n_queries=n_queries if with_query else 0,
         ),
         grid=grid,
-        in_specs=[ev_spec, ev_spec],
+        in_specs=[ev_spec] * len(lanes),
         out_specs=pl.BlockSpec((tile,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
         interpret=interpret,
-    )(slot_events.astype(jnp.int32), id_events.astype(jnp.int32))
+    )(*lanes)
     return out[:n_bins]
 
 
@@ -220,21 +259,30 @@ def visit_counter_wide(
 
 
 def _visit_counter_high_kernel(
-    slot_ref, pin_ref, prior_ref, counts_ref, high_ref,
-    *, tile: int, chunk: int, n_chunks: int, n_slots: int, n_pins: int,
-    n_v: int, slot_pad: int,
+    *refs,
+    tile: int, chunk: int, n_chunks: int, n_slots: int, n_pins: int,
+    n_v: int, slot_pad: int, n_queries: int = 0,
 ):
     """Tile-scan histogram on top of PRIOR counts, plus threshold crossings.
 
-    Events arrive as wide (slot, pin) int32 lanes and are packed to flat
-    bin ids in-register (int32-safe: the wrapper enforces the dense-bin
-    precondition).  The count tile is initialised from the prior running
-    counts, stays in VMEM while every event chunk streams past (inner grid
-    axis), and after the last chunk the tile is compared against its prior
-    values: entries that crossed ``count >= n_v`` during this update are
-    summed per query slot (``bin // n_pins``) with a one-hot compare — no
-    scatter, no full-buffer reduction outside the kernel.
+    Events arrive as wide (slot, pin) int32 lanes — led by a query lane in
+    batch-native mode (``n_queries > 0``) — and are packed to flat bin ids
+    in-register (int32-safe: the wrapper enforces the dense-bin
+    precondition; query-major ``(query * n_slots + slot) * n_pins + pin``
+    when the query lane is present).  The count tile is initialised from
+    the prior running counts, stays in VMEM while every event chunk
+    streams past (inner grid axis), and after the last chunk the tile is
+    compared against its prior values: entries that crossed
+    ``count >= n_v`` during this update are summed per count row
+    (``bin // n_pins`` — the query slot, or the (query, slot) pair in
+    batch mode) with a one-hot compare — no scatter, no full-buffer
+    reduction outside the kernel.
     """
+    if n_queries:
+        q_ref, slot_ref, pin_ref, prior_ref, counts_ref, high_ref = refs
+    else:
+        slot_ref, pin_ref, prior_ref, counts_ref, high_ref = refs
+        q_ref = None
     j = pl.program_id(1)
     tile_base = pl.program_id(0) * tile
 
@@ -244,7 +292,9 @@ def _visit_counter_high_kernel(
         high_ref[...] = jnp.zeros_like(high_ref)
 
     ev = _flat_ids_from_lanes(
-        slot_ref[...], pin_ref[...], n_slots, n_pins
+        slot_ref[...], pin_ref[...], n_slots, n_pins,
+        q_ev=None if q_ref is None else q_ref[...],
+        n_queries=n_queries,
     )                                                      # (chunk,)
     ids = tile_base + jax.lax.broadcasted_iota(jnp.int32, (chunk, tile), 1)
     hit = (ev[:, None] == ids).astype(jnp.int32)
@@ -273,17 +323,19 @@ def _visit_counter_high_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "n_slots", "n_pins", "n_v", "tile", "chunk", "interpret"
+        "n_slots", "n_pins", "n_v", "n_queries", "tile", "chunk", "interpret"
     ),
 )
 def visit_counter_update_high(
     prior_counts: jax.Array,
     slot_events: jax.Array,
     pin_events: jax.Array,
+    query_events: jax.Array | None = None,
     *,
     n_slots: int,
     n_pins: int,
     n_v: int,
+    n_queries: int = 0,
     tile: int = DEFAULT_TILE,
     chunk: int = DEFAULT_CHUNK,
     interpret: bool | None = None,
@@ -300,10 +352,20 @@ def visit_counter_update_high(
     from below ``n_v`` to ``>= n_v`` during this update.  Requires
     ``n_v >= 1`` (counts start at zero, so a non-positive threshold would
     be "already crossed" and never increment the tally).
+
+    Batch-native mode: pass ``query_events`` (query sentinel
+    ``n_queries``) and ``n_queries > 0`` to update a whole serving batch's
+    running counts in one call — ``prior_counts`` then has
+    ``n_queries * n_slots * n_pins`` query-major bins and ``delta_high``
+    one entry per (query, slot) row, query-major.
     """
     if n_v < 1:
         raise ValueError(f"n_v must be >= 1 for crossing tallies, got {n_v}")
-    n_bins = n_slots * n_pins
+    with_query = query_events is not None
+    if with_query and n_queries <= 0:
+        raise ValueError("query_events given but n_queries not set (> 0)")
+    n_rows = n_queries * n_slots if with_query else n_slots
+    n_bins = n_rows * n_pins
     _require_dense_bins(n_bins)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -311,20 +373,21 @@ def visit_counter_update_high(
     if m == 0:  # zero-size grid is illegal; nothing to count either way
         return (
             prior_counts.astype(jnp.int32),
-            jnp.zeros((n_slots,), jnp.int32),
+            jnp.zeros((n_rows,), jnp.int32),
         )
+    lanes = ([query_events] if with_query else []) + [slot_events, pin_events]
+    lanes = [l.astype(jnp.int32) for l in lanes]
     m_pad = -(-m // chunk) * chunk
     if m_pad != m:
         pad = jnp.full((m_pad - m,), -1, jnp.int32)
-        slot_events = jnp.concatenate([slot_events.astype(jnp.int32), pad])
-        pin_events = jnp.concatenate([pin_events.astype(jnp.int32), pad])
+        lanes = [jnp.concatenate([l, pad]) for l in lanes]
     n_pad = -(-n_bins // tile) * tile
     prior = prior_counts.astype(jnp.int32)
     if n_pad != n_bins:
         prior = jnp.concatenate(
             [prior, jnp.zeros((n_pad - n_bins,), jnp.int32)]
         )
-    slot_pad = -(-n_slots // SLOT_PAD) * SLOT_PAD
+    slot_pad = -(-n_rows // SLOT_PAD) * SLOT_PAD
     n_tiles, n_chunks = n_pad // tile, m_pad // chunk
     ev_spec = pl.BlockSpec((chunk,), lambda i, j: (j,))
     counts, high_parts = pl.pallas_call(
@@ -332,11 +395,10 @@ def visit_counter_update_high(
             _visit_counter_high_kernel,
             tile=tile, chunk=chunk, n_chunks=n_chunks,
             n_slots=n_slots, n_pins=n_pins, n_v=n_v, slot_pad=slot_pad,
+            n_queries=n_queries if with_query else 0,
         ),
         grid=(n_tiles, n_chunks),
-        in_specs=[
-            ev_spec,
-            ev_spec,
+        in_specs=[ev_spec] * len(lanes) + [
             pl.BlockSpec((tile,), lambda i, j: (i,)),
         ],
         out_specs=[
@@ -348,10 +410,6 @@ def visit_counter_update_high(
             jax.ShapeDtypeStruct((n_tiles, slot_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(
-        slot_events.astype(jnp.int32),
-        pin_events.astype(jnp.int32),
-        prior,
-    )
-    # (n_tiles, slot_pad) partials: a tiny reduction, NOT O(n_slots*n_pins)
-    return counts[:n_bins], jnp.sum(high_parts, axis=0)[:n_slots]
+    )(*lanes, prior)
+    # (n_tiles, slot_pad) partials: a tiny reduction, NOT O(n_rows*n_pins)
+    return counts[:n_bins], jnp.sum(high_parts, axis=0)[:n_rows]

@@ -267,6 +267,7 @@ def _walk_steps_fused_kernel(
     n_pins: int,
     n_slots: int,
     n_boards: int,
+    n_queries: int,
     alpha_u32: int,
     beta_u32: int,
     chunk_steps: int,
@@ -277,10 +278,19 @@ def _walk_steps_fused_kernel(
 ):
     """chunk_steps supersteps for one walker block, state resident in VMEM.
 
-    Ref layout (inputs then outputs, bias bounds present only if use_bias):
-      curr, query, feat, slot, rbits,
+    Ref layout (inputs then outputs; qid / query_events present only when
+    ``n_queries > 0``, bias bounds only if use_bias):
+      curr, query, feat, slot, [qid], rbits,
       p2b_off, p2b_tgt, b2p_off, b2p_tgt, [p2b_fb, b2p_fb],
-      -> next, slot_events, pin_events, [board_events]
+      -> next, [query_events], slot_events, pin_events, [board_events]
+
+    ``n_queries > 0`` is the batch-native mode: the walker block carries a
+    per-walker query id (which serving request of the batch the walker
+    belongs to) and each step additionally emits a query event lane — the
+    third wide lane of the (query, slot, pin) triple, sentinel
+    ``n_queries`` for invalid steps, sharing the slot lane's validity mask
+    exactly like the board lane does.  This is what lets ONE ``pallas_call``
+    execute a chunk for a whole serving batch instead of one call per query.
 
     ``gather_mode`` picks how the per-walker CSR rows reach the compute:
     blocking scalar loads ("scalar") or the phase-split double-buffered
@@ -288,23 +298,38 @@ def _walk_steps_fused_kernel(
     and event emission below, and do identical integer arithmetic on the
     gathered rows — they are bit-for-bit interchangeable.
     """
-    (curr_ref, query_ref, feat_ref, slot_ref, rbits_ref,
-     p2b_off_ref, p2b_tgt_ref, b2p_off_ref, b2p_tgt_ref) = refs[:9]
-    i = 9
+    with_query = n_queries > 0
+    curr_ref, query_ref, feat_ref, slot_ref = refs[:4]
+    i = 4
+    qid_ref = None
+    if with_query:
+        qid_ref = refs[i]
+        i += 1
+    (rbits_ref, p2b_off_ref, p2b_tgt_ref,
+     b2p_off_ref, b2p_tgt_ref) = refs[i:i + 5]
+    i += 5
     if use_bias:
-        p2b_fb_ref, b2p_fb_ref = refs[9:11]
-        i = 11
-    next_ref, sev_ref, pev_ref = refs[i:i + 3]
-    bev_ref = refs[i + 3] if count_boards else None
+        p2b_fb_ref, b2p_fb_ref = refs[i:i + 2]
+        i += 2
+    next_ref = refs[i]
+    i += 1
+    qev_ref = None
+    if with_query:
+        qev_ref = refs[i]
+        i += 1
+    sev_ref, pev_ref = refs[i:i + 2]
+    bev_ref = refs[i + 2] if count_boards else None
 
     # Walker state + the whole chunk's random bits: loaded into
     # VREGs/VMEM once, resident for all chunk_steps supersteps.
     query = query_ref[...]
     slot = slot_ref[...]
     feat = feat_ref[...]
+    qid = qid_ref[...] if with_query else None
     rbits = rbits_ref[...]                       # (chunk_steps, block_w, 4)
     # wide-event invalid sentinel: slot lane carries n_slots, value lanes 0
     slot_sentinel = jnp.int32(n_slots)
+    query_sentinel = jnp.int32(n_queries)
 
     def draws(s):
         """Decode step s's random bits — shared by both gather modes."""
@@ -315,14 +340,16 @@ def _walk_steps_fused_kernel(
         return restart, use_b, r_board, r_pin
 
     def emit(s, carry, nxt, vis, bvis, okv):
-        """Wide (slot, pin) lane emission — the pin and board lanes share
-        the slot lane (same validity mask)."""
-        _, sev, pev, bev = carry
+        """Wide (slot, pin) lane emission — the pin, board, and query lanes
+        share the slot lane (same validity mask)."""
+        _, qev, sev, pev, bev = carry
         sev = sev.at[s].set(jnp.where(okv, slot, slot_sentinel))
         pev = pev.at[s].set(jnp.where(okv, vis, 0))
+        if with_query:
+            qev = qev.at[s].set(jnp.where(okv, qid, query_sentinel))
         if count_boards:
             bev = bev.at[s].set(jnp.where(okv, bvis, 0))
-        return nxt, sev, pev, bev
+        return nxt, qev, sev, pev, bev
 
     def one_step_scalar(s, carry):
         curr = carry[0]
@@ -434,6 +461,10 @@ def _walk_steps_fused_kernel(
 
     carry0 = (
         curr_ref[...],
+        jnp.full(
+            (chunk_steps, block_w) if with_query else (1, 1),
+            query_sentinel, jnp.int32,
+        ),
         jnp.full((chunk_steps, block_w), slot_sentinel, jnp.int32),
         jnp.zeros((chunk_steps, block_w), jnp.int32),
         jnp.zeros(
@@ -442,8 +473,10 @@ def _walk_steps_fused_kernel(
     )
 
     def finish(carry):
-        curr, sev, pev, bev = carry
+        curr, qev, sev, pev, bev = carry
         next_ref[...] = curr
+        if with_query:
+            qev_ref[...] = qev
         sev_ref[...] = sev
         pev_ref[...] = pev
         if count_boards:
@@ -479,8 +512,8 @@ def _walk_steps_fused_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "n_pins", "n_slots", "n_boards", "alpha_u32", "beta_u32",
-        "count_boards", "block_w", "gather_mode", "interpret",
+        "n_pins", "n_slots", "n_boards", "n_queries", "alpha_u32",
+        "beta_u32", "count_boards", "block_w", "gather_mode", "interpret",
     ),
 )
 def walk_steps_fused(
@@ -495,10 +528,12 @@ def walk_steps_fused(
     b2p_targets: jax.Array,   # (e,)
     p2b_feat_bounds: Optional[jax.Array] = None,  # (n_pins, n_feats + 1)
     b2p_feat_bounds: Optional[jax.Array] = None,  # (n_boards, n_feats + 1)
+    qid: Optional[jax.Array] = None,  # (w,) int32 query id per walker
     *,
     n_pins: int,
     n_slots: int,
     n_boards: int,
+    n_queries: int = 0,
     alpha_u32: int,
     beta_u32: int,
     count_boards: bool = False,
@@ -521,6 +556,17 @@ def walk_steps_fused(
     Aggregate with the tile-scan ``visit_counter`` kernels — no scatters
     anywhere on the hot path.
 
+    BATCH-NATIVE MODE: pass ``qid`` (per-walker query id) and
+    ``n_queries > 0`` to run a whole serving batch's walkers in this one
+    call.  The walker axis then packs all queries' pools back to back and
+    the return grows a query event lane: ``(next_curr, query_events,
+    slot_events, pin_events, board_events | None)`` — query lane sentinel
+    ``n_queries``, sharing the slot lane's validity mask.  The per-query
+    vmapped formulation lowers to one kernel per query (a batch-sized
+    leading grid dim under vmap); this mode is ONE ``pallas_call`` per
+    chunk with ``n_queries * w`` walker rows for the DMA pipeline to hide
+    latency behind.
+
     ``gather_mode="dma"`` replaces the blocking per-walker scalar CSR
     gathers with the phase-split double-buffered ``make_async_copy``
     pipeline (module docstring); bit-identical to ``"scalar"`` and to the
@@ -530,6 +576,11 @@ def walk_steps_fused(
         raise ValueError(
             f"unknown gather_mode {gather_mode!r}; use {GATHER_MODES}"
         )
+    with_query = qid is not None
+    if with_query and n_queries <= 0:
+        raise ValueError("qid given but n_queries not set (> 0 required)")
+    if not with_query:
+        n_queries = 0  # one kernel variant per (qid, n_queries) pairing
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     chunk_steps, w = rbits.shape[0], rbits.shape[1]
@@ -549,14 +600,21 @@ def walk_steps_fused(
         pl.BlockSpec((block_w,), blk),                       # query
         pl.BlockSpec((block_w,), blk),                       # feat
         pl.BlockSpec((block_w,), blk),                       # slot
-        pl.BlockSpec((chunk_steps, block_w, 4), lambda i: (0, i, 0)),
-        any_spec, any_spec, any_spec, any_spec,              # CSR arrays
     ]
     args = [
         curr.astype(jnp.int32),
         query.astype(jnp.int32),
         feat.astype(jnp.int32),
         slot.astype(jnp.int32),
+    ]
+    if with_query:
+        in_specs.append(pl.BlockSpec((block_w,), blk))       # qid
+        args.append(qid.astype(jnp.int32))
+    in_specs += [
+        pl.BlockSpec((chunk_steps, block_w, 4), lambda i: (0, i, 0)),
+        any_spec, any_spec, any_spec, any_spec,              # CSR arrays
+    ]
+    args += [
         rbits.astype(jnp.uint32),
         p2b_offsets.astype(jnp.int32),
         p2b_targets.astype(jnp.int32),
@@ -572,8 +630,13 @@ def walk_steps_fused(
 
     ev_spec = pl.BlockSpec((chunk_steps, block_w), lambda i: (0, i))
     ev_sds = jax.ShapeDtypeStruct((chunk_steps, w), jnp.int32)
-    out_specs = [pl.BlockSpec((block_w,), blk), ev_spec, ev_spec]
-    out_shape = [jax.ShapeDtypeStruct((w,), jnp.int32), ev_sds, ev_sds]
+    out_specs = [pl.BlockSpec((block_w,), blk)]
+    out_shape = [jax.ShapeDtypeStruct((w,), jnp.int32)]
+    if with_query:
+        out_specs.append(ev_spec)
+        out_shape.append(ev_sds)
+    out_specs += [ev_spec, ev_spec]
+    out_shape += [ev_sds, ev_sds]
     if count_boards:
         out_specs.append(ev_spec)
         out_shape.append(ev_sds)
@@ -584,6 +647,7 @@ def walk_steps_fused(
             n_pins=n_pins,
             n_slots=n_slots,
             n_boards=n_boards,
+            n_queries=n_queries,
             alpha_u32=alpha_u32,
             beta_u32=beta_u32,
             chunk_steps=chunk_steps,
@@ -598,6 +662,13 @@ def walk_steps_fused(
         out_shape=out_shape,
         interpret=interpret,
     )(*args)
-    if count_boards:
-        return out[0], out[1], out[2], out[3]
-    return out[0], out[1], out[2], None
+    i = 1
+    qev = None
+    if with_query:
+        qev = out[i]
+        i += 1
+    sev, pev = out[i], out[i + 1]
+    bev = out[i + 2] if count_boards else None
+    if with_query:
+        return out[0], qev, sev, pev, bev
+    return out[0], sev, pev, bev

@@ -1,0 +1,53 @@
+"""Smoke coverage for the runnable examples (previously zero test
+coverage on ``examples/``): each example's ``main`` runs end to end on a
+tiny graph with shrunk budgets — the same code path as the documented
+``PYTHONPATH=src python examples/<name>.py`` invocation, parameterized
+down so the whole file stays in CI's tier-1 budget."""
+
+import importlib.util
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+EXAMPLES_DIR = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+def _load(name: str):
+    spec = importlib.util.spec_from_file_location(
+        f"examples_{name}", EXAMPLES_DIR / f"{name}.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    # register before exec so dataclasses/typing introspection inside the
+    # example can resolve its own module
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_serve_fleet_example_smoke():
+    mod = _load("serve_fleet")
+    stats = mod.main(
+        n_pins=600, n_boards=80, n_requests=6, n_steps=512, n_walkers=64,
+        top_k=10, batch_size=2,
+    )
+    assert stats.queries == 6
+    # the mid-stream graph swap really happened and serving continued
+    assert stats.graph_generation == 1
+    assert stats.batches >= 3
+    assert stats.percentile(50) > 0
+
+
+def test_two_stage_recsys_example_smoke():
+    mod = _load("two_stage_recsys")
+    scores, items = mod.main(
+        n_pins=400, n_boards=60, train_steps=2, walk_steps=512,
+        n_walkers=64, final_k=5,
+    )
+    scores, items = np.asarray(scores), np.asarray(items)
+    assert items.shape == (5,)
+    finite = np.isfinite(scores)
+    assert finite.any()
+    # ranked items are real graph items, never the -inf padding id
+    assert ((items[finite] >= 0) & (items[finite] < 400)).all()

@@ -98,6 +98,42 @@ def test_build_query_truncation_tie_break_is_deterministic():
     np.testing.assert_array_equal(pins_a, [3, 5])
 
 
+def test_batch_queries_stacks_well_formed_batch():
+    q0 = (np.asarray([1, 2, -1], np.int32), np.asarray([1.0, 0.5, 0], np.float32))
+    q1 = (np.asarray([3, -1, -1], np.int32), np.asarray([1.0, 0, 0], np.float32))
+    pins, weights, feats = service.batch_queries([q0, q1], [0, 3])
+    assert pins.shape == (2, 3) and weights.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(feats), [0, 3])
+
+
+def test_batch_queries_ragged_slots_raise():
+    """Mismatched n_slots must fail naming the query, not as an opaque
+    np.stack shape error."""
+    q0 = (np.asarray([1, 2], np.int32), np.asarray([1.0, 0.5], np.float32))
+    q1 = (np.asarray([3, 4, 5], np.int32),
+          np.asarray([1.0, 0.5, 0.2], np.float32))
+    with pytest.raises(ValueError, match="query 1 is ragged"):
+        service.batch_queries([q0, q1], [0, 0])
+    # pins/weights length mismatch WITHIN a query is ragged too
+    q2 = (np.asarray([1, 2], np.int32), np.asarray([1.0], np.float32))
+    with pytest.raises(ValueError, match="query 1 is ragged"):
+        service.batch_queries([q0, q2], [0, 0])
+
+
+def test_batch_queries_nonfloat_weights_raise():
+    q0 = (np.asarray([1, 2], np.int32), np.asarray([1, 0], np.int32))
+    with pytest.raises(ValueError, match="query 0 weights.*float"):
+        service.batch_queries([q0], [0])
+
+
+def test_batch_queries_feat_count_mismatch_raises():
+    q0 = (np.asarray([1, 2], np.int32), np.asarray([1.0, 0.5], np.float32))
+    with pytest.raises(ValueError, match="user_feats"):
+        service.batch_queries([q0, q0], [0])
+    with pytest.raises(ValueError, match="at least one query"):
+        service.batch_queries([], [])
+
+
 @pytest.mark.parametrize(
     "shape_cfg",
     [service.homefeed_config, service.related_pins_config,

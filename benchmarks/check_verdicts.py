@@ -38,6 +38,11 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     # path bit-identically (ids, scores, steps_taken, n_high) AND one
     # pallas program per chunk independent of batch size
     ("BENCH_serving.json", ("batchfuse", "batch_engine_agrees")),
+    # bench_sharded (merged): pod-sharded batched fused engine == xla
+    # sharded twin == unsharded batched engine bit-identically (counts,
+    # board counts, steps_taken, n_high) across n_shards x batch, zero
+    # drops at parity slack, and starved-fabric drops are counted
+    ("BENCH_serving.json", ("sharded", "sharded_engine_agrees")),
     # bench_earlystop_fused: fused in-VMEM tally == naive recount
     ("results/bench.json", ("earlystop_fused", "counting",
                             "fused_matches_naive")),

@@ -24,6 +24,7 @@ from benchmarks import (
     bench_fig4_pruning,
     bench_fig5_memory,
     bench_serving,
+    bench_sharded,
     bench_smoke,
     bench_table1_hitrate,
     bench_table3_bias,
@@ -50,6 +51,9 @@ SUITES = {
                    "gathers", bench_dma_gather.run),
     "batchfuse": ("Batch-native fused walk engine: one Pallas program per "
                   "chunk for the whole query batch", bench_batchfuse.run),
+    "sharded": ("Pod-sharded batched fused walk engine: per-shard "
+                "supersteps on the bounded routing fabric",
+                bench_sharded.run),
 }
 
 VERDICT_KEYS = (
@@ -59,7 +63,7 @@ VERDICT_KEYS = (
     "pruning_improves_f1", "memory_decreases", "batching_overhead_bounded",
     "both_backends_agree", "fused_matches_naive", "earlystop_backends_agree",
     "widepack_backends_agree", "incremental_matches_full",
-    "dma_backends_agree", "batch_engine_agrees",
+    "dma_backends_agree", "batch_engine_agrees", "sharded_engine_agrees",
 )
 
 

@@ -238,6 +238,31 @@ def accumulate_packed_events_with_high(
     return new_counts, high + delta
 
 
+def fold_sharded_counts(
+    shard_counts: Array,
+    n_queries: int,
+    n_slots: int,
+    per_shard_dim: int,
+) -> Array:
+    """Fold per-shard dense counts into the unsharded batched layout.
+
+    shard_counts: (n_shards, n_queries * n_slots * per_shard_dim) int32 —
+    each shard's query-major counts over its OWNED id subrange (shard s
+    owns global ids ``[s * per_shard_dim, (s + 1) * per_shard_dim)``).
+    Because ownership partitions the id space, folding is a pure layout
+    move (no adds): returns ``(n_queries, n_slots,
+    n_shards * per_shard_dim)`` with the global id axis reassembled in
+    shard order, directly comparable to the unsharded batched engine's
+    counts (padded ids past the real ``n_pins`` stay zero — no walker can
+    emit them).
+    """
+    n_shards = shard_counts.shape[0]
+    blocks = shard_counts.reshape(n_shards, n_queries, n_slots, per_shard_dim)
+    return jnp.moveaxis(blocks, 0, 2).reshape(
+        n_queries, n_slots, n_shards * per_shard_dim
+    )
+
+
 def boost_combine(counts_q: Array, weights: Array | None = None) -> Array:
     """Multi-hit booster, Eq. 3:  V[p] = (sum_q w_q * sqrt(V_q[p]))**2.
 

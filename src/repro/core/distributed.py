@@ -9,30 +9,53 @@ pod**, and walkers migrate between shards over ICI (~50 GB/s/link) — the
 walk never leaves the pod (multi-pod = query parallelism on the 'pod'
 axis, zero cross-pod traffic in the walk itself).
 
-Mechanics (all inside one shard_map, shapes fully static):
+The sharded engine is a first-class consumer of the batched fused walk
+machinery (core/walk.py, kernels/walk_step.py), not a separate walk
+implementation:
 
   * shard s owns pins  [s, s+1) * pins_per_shard  and boards
     [s, s+1) * boards_per_shard, with local CSR slices (padded to the max
     shard size — host-side `shard_graph` compiler does this);
-  * walker state = (slot, curr) int32 pairs; a walker always resides on the
-    shard that owns its current pin;
-  * one superstep = restart-mask -> local pin->board gather -> **all_to_all
-    route to board owner** -> local board->pin gather -> **all_to_all route
-    to pin owner** -> append visit event to the shard-local event buffer;
-  * routing uses fixed per-destination capacity C = slack * W_local / S;
-    walkers that overflow a bucket are dropped and respawn at a resident
-    query pin (Pixie is a Monte Carlo estimator — bounded drops are the
-    same kind of slack as the paper's early stopping, and the drop count is
-    returned as a metric);
-  * counts: shard-local bounded event buffers (the paper's N-bounded hash
-    table, one per shard), aggregated at the end; final recommendation =
-    per-shard boosted top-k -> all_gather(k) -> global re-top-k (k << N).
+  * a walker's identity is its GLOBAL walker id (query-major, walker
+    ``q * n_walkers + i`` — the PR 5 batch packing), so its random stream
+    is position-independent: every shard derives the whole batch's
+    counter-RNG bits per chunk (``walk_lib._chunk_rbits`` — replicated
+    arithmetic, bit-identical to the unsharded engines) and a walker
+    consumes its own lane wherever it happens to reside;
+  * one superstep = restart kill/rebirth -> per-shard fused hop kernel
+    (pin->board, ``kernels/ops.walk_hop`` — ONE ``pallas_call`` for the
+    whole routed walker buffer, both ``gather_mode="scalar"`` and
+    ``"dma"``) -> **all_to_all route to the board owner** -> fused hop
+    (board->pin) + shard-local board counting -> **all_to_all route to
+    the pin owner** -> wide (query, slot, local_pin) event accumulation
+    into the shard's owned dense bins with the incremental ``n_high``
+    crossing tally (``counter.accumulate_packed_events_with_high``);
+  * restarts are kill + rebirth-at-home: a restarting walker's resident
+    copy dies wherever it is and the walker re-enters at the shard owning
+    its query pin — restart teleports ride the ordinary hop routes, no
+    third collective;
+  * early stop is GLOBAL per (query, slot): each shard carries its owned
+    subrange's incremental crossing tally and a chunk-boundary ``psum``
+    folds them into the Algorithm 3 statistic — never a reduction over
+    the count buffers.  Stopped rows' walkers are killed (excluded from
+    routing capacity) exactly like the PR 5 freeze semantics;
+  * routing uses fixed per-(shard, shard) capacity
+    ``route_capacity(S, W, slack)``; walkers that overflow are dropped
+    and respawn at their query pin on their next restart draw (Pixie is
+    a Monte Carlo estimator — bounded drops are the same kind of slack
+    as the paper's early stopping, and the drop count is surfaced as a
+    serving metric, never silent).
+
+With zero drops the engine is BIT-IDENTICAL to the unsharded batched
+engine on the same graph (counts, board counts, steps_taken, n_high):
+``backend="xla"`` is the plain-XLA oracle twin (structural parity via
+``kernels/ref.walk_hop_ref``), ``backend="pallas"`` the fused kernels —
+tests/test_sharded_engine.py pins all three against each other.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -43,7 +66,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import counter as counter_lib
 from repro.core import sampling
+from repro.core import walk as walk_lib
 from repro.core.graph import PinBoardGraph
+from repro.kernels import ops
+from repro.kernels.walk_step import GATHER_MODES
 
 Array = jax.Array
 
@@ -57,12 +83,15 @@ class ShardedGraph(NamedTuple):
     """Node-range sharded CSR; every array has leading dim n_shards."""
 
     p2b_offsets: Array   # (S, pins_per_shard + 1) int
-    p2b_targets: Array   # (S, max_p2b_edges) int32  (global board ids)
+    p2b_targets: Array   # (S, max_p2b_edges) int32  (board *indices*)
     b2p_offsets: Array   # (S, boards_per_shard + 1)
     b2p_targets: Array   # (S, max_b2p_edges) int32  (global pin ids)
     n_pins: int
     n_boards: int
     n_shards: int
+    # static degree cap for Eq. 2 scaling (graph.max_pin_degree); trailing
+    # default keeps older positional constructions compiling
+    max_pin_degree: int = 4096
 
     @property
     def pins_per_shard(self) -> int:
@@ -112,6 +141,7 @@ def shard_graph(graph: PinBoardGraph, n_shards: int) -> ShardedGraph:
         n_pins=n_pins,
         n_boards=n_boards,
         n_shards=n_shards,
+        max_pin_degree=graph.max_pin_degree,
     )
 
 
@@ -144,30 +174,19 @@ def sharded_graph_specs(axis: str = "model") -> ShardedGraph:
 
 
 # ---------------------------------------------------------------------------
-# The sharded walk
+# Routing fabric
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
-class ShardedWalkConfig:
-    n_supersteps: int = 64
-    walkers_per_shard: int = 1024
-    alpha: float = 0.5
-    route_slack: float = 2.0
-    top_k: int = 100
-    unroll: bool = False     # cost-model mode (see launch/dryrun.py)
+def route_capacity(n_shards: int, n_walkers_total: int, slack: float) -> int:
+    """Per-(shard, shard) route capacity for a pool of W walkers.
 
-    def capacity(self, n_shards: int) -> int:
-        c = int(self.route_slack * self.walkers_per_shard / n_shards)
-        return max(8, -(-c // 8) * 8)
-
-
-class ShardedWalkResult(NamedTuple):
-    top_scores: Array    # (top_k,) f32 boosted scores
-    top_pins: Array      # (top_k,) int32 global pin ids
-    dropped: Array       # () int32 walkers dropped by routing overflow
-    slot_events: Array   # (S, max_events) per-shard wide event slot lanes
-    pin_events: Array    # (S, max_events) per-shard local-pin lanes
+    Balanced hops put ``W / n_shards**2`` walkers on each (source, dest)
+    pair; ``slack`` is the skew headroom before drops start.  Rounded up
+    to a multiple of 8 (lane-friendly buffers), floor 8.
+    """
+    c = int(slack * n_walkers_total / (n_shards * n_shards))
+    return max(8, -(-c // 8) * 8)
 
 
 def _route(
@@ -176,10 +195,13 @@ def _route(
     capacity: int,
     dest: Array,      # (L,) destination shard per walker (>= n_shards = dead)
     payload: Tuple[Array, ...],   # each (L,) int32
-) -> Tuple[Array, Tuple[Array, ...], Array]:
+) -> Tuple[Array, Tuple[Array, ...], Array, Array]:
     """all_to_all walker exchange with fixed per-pair capacity.
 
-    Returns (valid_mask (S*C,), routed payload tuple (S*C,), n_dropped ()).
+    Returns ``(valid_mask (S*C,), routed payload tuple (S*C,),
+    n_dropped (), max_occupancy ())`` — the last being the fullest
+    outbound bucket before the capacity clamp, the serving-telemetry
+    signal for tuning ``slack``.
     """
     l = dest.shape[0]
     order = jnp.argsort(dest)
@@ -193,6 +215,7 @@ def _route(
     keep = live & (pos < capacity)
     slot = jnp.where(keep, dsort * capacity + pos, n_shards * capacity)
     dropped = jnp.sum(live & ~keep)
+    max_occ = jnp.max(counts[:n_shards]).astype(jnp.int32)
 
     out_payload = []
     for arr in payload:
@@ -206,7 +229,496 @@ def _route(
     valid = jax.lax.all_to_all(
         vbuf[:-1].reshape(n_shards, capacity), axis, 0, 0, tiled=False
     ).reshape(-1)
-    return valid, tuple(out_payload), dropped
+    return valid, tuple(out_payload), dropped, max_occ
+
+
+# ---------------------------------------------------------------------------
+# The pod-sharded batched fused walk engine
+# ---------------------------------------------------------------------------
+
+
+class ShardedBatchedWalkResult(NamedTuple):
+    """Sharded twin of ``walk.WalkResult`` with routing telemetry.
+
+    ``counts`` / ``board_counts`` stay SHARD-STACKED (each shard's
+    query-major owned-subrange bins) — ``counter.fold_sharded_counts``
+    reassembles the unsharded batched layout when a consumer needs the
+    global id axis; serving keeps them sharded and runs the hierarchical
+    top-k instead.
+    """
+
+    counts: Array                   # (S, B * n_slots * pins_per_shard) int32
+    board_counts: Optional[Array]   # (S, B * n_slots * boards_per_shard)
+    steps_taken: Array              # (B, n_slots) int32
+    n_high: Array                   # (B, n_slots) int32, query pins debited
+    dropped: Array                  # () int32 routing-overflow drops (total)
+    max_occupancy: Array            # () int32 fullest route bucket seen
+
+
+def pixie_walk_sharded_batched(
+    graph: ShardedGraph,
+    query_pins: Array,      # (B, n_slots) int32 global pin ids, -1 pad
+    query_weights: Array,   # (B, n_slots) f32, 0 for padding
+    keys: Array,            # (B,) per-query PRNG keys (random.split)
+    cfg: walk_lib.WalkConfig,
+    mesh: Mesh,
+    axis: str = "model",
+    *,
+    slack: float = 2.0,
+    unroll: bool = False,
+) -> ShardedBatchedWalkResult:
+    """The batched fused walk engine on a node-range-sharded graph.
+
+    The bit-parity twin of ``walk.pixie_random_walk_batched`` on the same
+    (replicated) graph — identical counts, board counts, ``steps_taken``
+    and ``n_high`` whenever no walker is dropped (raise ``slack`` until
+    ``dropped == 0``; parity tests do).  Each per-shard superstep runs the
+    fused hop kernel (``cfg.backend == "pallas"``, both gather modes) or
+    its XLA oracle twin on the shard-local CSR slices; ONE bounded
+    ``_route`` fabric per hop carries the whole query batch.
+
+    ``cfg`` is the ordinary walk config; ``cfg.bias_beta`` must be 0 (the
+    sharded CSR carries no feat_bounds).  ``unroll=True`` is cost-model
+    mode (launch/dryrun.py): python loops instead of ``while``/``fori``,
+    every chunk runs — mathematically identical (stopped rows are frozen
+    by masking either way), just loop-free for XLA cost analysis.
+    """
+    if query_pins.ndim != 2:
+        raise ValueError(
+            f"query_pins must be (n_queries, n_slots), got {query_pins.shape}"
+        )
+    if cfg.n_v < 1:
+        raise ValueError(
+            f"n_v must be >= 1, got {cfg.n_v}; use "
+            "cfg.without_early_stop() to disable early stopping"
+        )
+    if cfg.bias_beta > 0.0:
+        raise ValueError(
+            "the sharded graph carries no feat_bounds; set bias_beta=0 "
+            "for sharded walks"
+        )
+    if cfg.gather_mode not in GATHER_MODES:
+        raise ValueError(
+            f"unknown gather_mode {cfg.gather_mode!r}; use {GATHER_MODES}"
+        )
+    n_queries, n_slots = query_pins.shape
+    s_axis = mesh.shape[axis]
+    if graph.n_shards not in (0, s_axis):
+        raise ValueError(
+            f"graph sharded {graph.n_shards} ways but mesh axis {axis!r} "
+            f"has {s_axis} devices"
+        )
+    n_shards = s_axis
+    w = cfg.n_walkers
+    w_total = n_queries * w
+    pps = graph.pins_per_shard
+    bps = graph.boards_per_shard
+    cap = route_capacity(n_shards, w_total, slack)
+    recv = n_shards * cap               # walker buffer after a route
+    n_rows = n_queries * n_slots
+    # per-shard dense bins must fit int32 indexing (the whole point of
+    # sharding the count space: bins divide by n_shards)
+    count_engine = walk_lib.select_count_engine(
+        cfg.backend, n_rows, pps, bps if cfg.count_boards else 0
+    )
+    use_kernel = cfg.backend == "pallas"
+    alpha_u32 = walk_lib._prob_u32(cfg.alpha)
+    slot_sentinel = jnp.int32(n_slots)
+    query_sentinel = jnp.int32(n_queries)
+
+    valid_q = (query_pins >= 0) & (query_weights > 0)
+    safe_q = jnp.where(valid_q, query_pins, 0)
+    qid_of_walker = jnp.repeat(jnp.arange(n_queries, dtype=jnp.int32), w)
+
+    def local_walk(p2b_off, p2b_tgt, b2p_off, b2p_tgt, qp, qw, vq, ks):
+        p2b_off, p2b_tgt = p2b_off[0], p2b_tgt[0]
+        b2p_off, b2p_tgt = b2p_off[0], b2p_tgt[0]
+        sid = jax.lax.axis_index(axis)
+        pin_lo = sid * pps
+        board_lo = sid * bps
+
+        # ---- replicated Eq. 1-2 setup: the same traced arithmetic as the
+        # unsharded engine; query-pin degrees come from each shard's owned
+        # rows, psum-replicated (ownership partitions the id space, so the
+        # sum IS the lookup)
+        owned_q = vq & (qp >= pin_lo) & (qp < pin_lo + pps)
+        lq0 = jnp.where(owned_q, qp - pin_lo, 0)
+        deg_own = (
+            jnp.take(p2b_off, lq0 + 1) - jnp.take(p2b_off, lq0)
+        ) * owned_q.astype(p2b_off.dtype)
+        degs = jax.lax.psum(deg_own, axis)
+
+        n_q = jax.vmap(
+            lambda v, qwr, dg: sampling.allocate_steps(
+                jnp.where(v, qwr, 0.0), dg,
+                jnp.asarray(graph.max_pin_degree), cfg.n_steps,
+            )
+        )(vq, qw, degs)                                        # (B, S)
+        slot_of_walker_q, _ = jax.vmap(
+            lambda nq: sampling.allocate_walkers(nq, w)
+        )(n_q)                                                 # (B, w)
+        query_of_walker_q = jax.vmap(jnp.take)(qp, slot_of_walker_q)
+        walkers_per_slot = jax.vmap(
+            lambda so: jax.ops.segment_sum(
+                jnp.ones((w,), jnp.int32), so, num_segments=n_slots
+            )
+        )(slot_of_walker_q).reshape(-1)                        # (B*S,)
+        slot_of_walker = slot_of_walker_q.reshape(-1).astype(jnp.int32)
+        query_of_walker = query_of_walker_q.reshape(-1).astype(jnp.int32)
+        row_of_walker = qid_of_walker * n_slots + slot_of_walker
+        home_of_walker = query_of_walker // pps
+
+        valid_row = vq.reshape(-1)
+        n_q_row = n_q.reshape(-1)
+
+        def superstep(sstate, rb, row_active, first):
+            """One global hop for every live walker resident on this shard.
+
+            ``rb`` is the whole batch's (w_total, 4) counter-RNG row for
+            this absolute step; walkers index it by GLOBAL walker id, so
+            each consumes bit-for-bit the unsharded engine's draws.
+            """
+            res_v, res_g, res_p, counts, bcounts, high, dropped, occ = sstate
+            restart = rb[:, 0] < jnp.uint32(alpha_u32)         # (w_total,)
+            active_w = jnp.take(row_active, row_of_walker)     # (w_total,)
+
+            # kill + rebirth-at-home: restarting (or frozen-row) residents
+            # leave the fabric; restarting walkers of active rows re-enter
+            # at the shard owning their query pin with pos = query — the
+            # unsharded `where(restart, query, curr)` applied BEFORE the
+            # hop, so the reborn walker hops this same superstep
+            res_live = (
+                res_v
+                & ~jnp.take(restart, res_g)
+                & jnp.take(active_w, res_g)
+            )
+            inject = (restart | first) & active_w & (home_of_walker == sid)
+            cand_v = jnp.concatenate([res_live, inject])
+            cand_g = jnp.concatenate(
+                [res_g, jnp.arange(w_total, dtype=jnp.int32)]
+            )
+            cand_p = jnp.concatenate([res_p, query_of_walker])
+            order = jnp.argsort(~cand_v)       # stable: valid lanes first
+            sel_v = jnp.take(cand_v, order)[:recv]
+            sel_g = jnp.take(cand_g, order)[:recv]
+            sel_p = jnp.take(cand_p, order)[:recv]
+            d0 = (jnp.sum(cand_v) - jnp.sum(sel_v)).astype(jnp.int32)
+
+            # ---- phase A: pin -> board, fused hop on the local p2b slice
+            # (ONE pallas_call for the whole routed buffer, per shard)
+            r1 = jnp.take(rb[:, 2], sel_g)
+            b_pick, ok1 = ops.walk_hop(
+                sel_p, sel_v, r1, p2b_off, p2b_tgt, pin_lo,
+                use_kernel=use_kernel, gather_mode=cfg.gather_mode,
+            )
+            qpin = jnp.take(query_of_walker, sel_g)
+            home = jnp.take(home_of_walker, sel_g)
+            # dead-end pins force a restart: the walker routes home
+            # carrying its query pin (flag 0 skips hop 2 and counting)
+            dest1 = jnp.where(sel_v, jnp.where(ok1, b_pick // bps, home),
+                              n_shards)
+            pay1 = jnp.where(ok1, b_pick, qpin)
+            v1, (g1, p1, f1), d1, o1 = _route(
+                axis, n_shards, cap, dest1,
+                (sel_g, pay1, ok1.astype(jnp.int32)),
+            )
+
+            # ---- phase B: board -> pin on the local b2p slice; board
+            # visits count HERE, on the board's owner, gated by the full
+            # step succeeding (the unsharded engine's bev validity)
+            live1 = v1 & (f1 == 1)
+            r2 = jnp.take(rb[:, 3], g1)
+            pin_pick, ok2 = ops.walk_hop(
+                p1, live1, r2, b2p_off, b2p_tgt, board_lo,
+                use_kernel=use_kernel, gather_mode=cfg.gather_mode,
+            )
+            qpin1 = jnp.take(query_of_walker, g1)
+            slot1 = jnp.take(slot_of_walker, g1)
+            qid1 = jnp.take(qid_of_walker, g1)
+            if cfg.count_boards:
+                sev_b = jnp.where(ok2, slot1, slot_sentinel)
+                qev_b = jnp.where(ok2, qid1, query_sentinel)
+                bev = jnp.where(ok2, p1 - board_lo, 0)
+                bcounts = counter_lib.accumulate_packed_events(
+                    bcounts, sev_b, bev, n_slots, bps, count_engine,
+                    query_events=qev_b, n_queries=n_queries,
+                )
+            # dead-end boards and in-flight restarts continue at the query
+            nxt = jnp.where(ok2, pin_pick, qpin1)
+            dest2 = jnp.where(v1, nxt // pps, n_shards)
+            v2, (g2, p2, e2), d2, o2 = _route(
+                axis, n_shards, cap, dest2,
+                (g1, nxt, ok2.astype(jnp.int32)),
+            )
+
+            # ---- arrival: wide (query, slot, local_pin) events into the
+            # owned dense bins + the incremental crossing tally — never a
+            # reduction over the count buffer
+            cnt_ok = v2 & (e2 == 1)
+            sev = jnp.where(
+                cnt_ok, jnp.take(slot_of_walker, g2), slot_sentinel
+            )
+            qev = jnp.where(
+                cnt_ok, jnp.take(qid_of_walker, g2), query_sentinel
+            )
+            pev = jnp.where(cnt_ok, p2 - pin_lo, 0)
+            counts, high = counter_lib.accumulate_packed_events_with_high(
+                counts, high, sev, pev, n_slots, pps, cfg.n_v, count_engine,
+                query_events=qev, n_queries=n_queries,
+            )
+            occ = jnp.maximum(occ, jnp.maximum(o1, o2))
+            return (
+                v2, g2, p2, counts, bcounts, high,
+                dropped + d0 + d1 + d2, occ,
+            )
+
+        def chunk_body(it, state):
+            (res_v, res_g, res_p, counts, bcounts, high,
+             steps_taken, row_active, dropped, occ) = state
+            step_base = it * cfg.chunk_steps
+            # replicated whole-batch counter RNG: identical arithmetic to
+            # _walk_chunk_batched, so walker q*w+i draws its unsharded bits
+            rbits_q = jax.vmap(
+                lambda k: walk_lib._chunk_rbits(
+                    k, step_base, cfg.chunk_steps, w
+                )
+            )(ks)
+            rbits = jnp.moveaxis(rbits_q, 0, 1).reshape(
+                cfg.chunk_steps, w_total, 4
+            )
+            first0 = it == 0
+            sstate = (res_v, res_g, res_p, counts, bcounts, high,
+                      dropped, occ)
+            if unroll:
+                for s in range(cfg.chunk_steps):
+                    sstate = superstep(
+                        sstate, rbits[s], row_active, first0 & (s == 0)
+                    )
+            else:
+                sstate = jax.lax.fori_loop(
+                    0, cfg.chunk_steps,
+                    lambda s, st: superstep(
+                        st, rbits[s], row_active, first0 & (s == 0)
+                    ),
+                    sstate,
+                )
+            (res_v, res_g, res_p, counts, bcounts, high,
+             dropped, occ) = sstate
+            steps_taken = steps_taken + walkers_per_slot * row_active.astype(
+                jnp.int32
+            ) * cfg.chunk_steps
+            # the chunk-boundary fold: psum of the carried per-shard
+            # tallies IS the global Algorithm 3 statistic (ownership
+            # partitions the bins, crossings sum)
+            g_high = jax.lax.psum(high, axis)
+            row_active = (
+                valid_row & (steps_taken < n_q_row) & (g_high <= cfg.n_p)
+            )
+            return (res_v, res_g, res_p, counts, bcounts, high,
+                    steps_taken, row_active, dropped, occ)
+
+        state = (
+            jnp.zeros((recv,), jnp.bool_),
+            jnp.zeros((recv,), jnp.int32),
+            jnp.zeros((recv,), jnp.int32),
+            jnp.zeros((n_rows * pps,), jnp.int32),
+            jnp.zeros((n_rows * bps,), jnp.int32)
+            if cfg.count_boards else None,
+            jnp.zeros((n_rows,), jnp.int32),
+            jnp.zeros((n_rows,), jnp.int32),
+            valid_row,
+            jnp.asarray(0, jnp.int32),
+            jnp.asarray(0, jnp.int32),
+        )
+        if unroll:
+            # cost-model mode: loop-free, every chunk runs (stopped rows
+            # are frozen by masking, so the math is unchanged)
+            for it in range(cfg.max_chunks()):
+                state = chunk_body(jnp.asarray(it, jnp.int32), state)
+        else:
+            def cond(st_it):
+                st, it = st_it
+                return jnp.any(st[7]) & (it < cfg.max_chunks())
+
+            state, _ = jax.lax.while_loop(
+                cond,
+                lambda st_it: (
+                    chunk_body(st_it[1], st_it[0]), st_it[1] + 1
+                ),
+                (state, jnp.asarray(0, jnp.int32)),
+            )
+        (_, _, _, counts, bcounts, high,
+         steps_taken, _, dropped, occ) = state
+
+        # ---- query-pin debit, mirroring the unsharded engine bit-for-bit
+        # (position-only ownership: invalid slots hit all-zero bins, the
+        # same no-op as the unsharded unconditional `.set(0)`)
+        c3 = counts.reshape(n_queries, n_slots, pps)
+        own_q = (qp >= pin_lo) & (qp < pin_lo + pps)
+        lq = jnp.where(own_q, qp - pin_lo, 0)
+        b_i = jnp.arange(n_queries)[:, None]
+        s_i = jnp.arange(n_slots)[None, :]
+        vals = c3[b_i, s_i, lq]
+        q_reach = (own_q & (vals >= cfg.n_v)).astype(jnp.int32)
+        c3 = c3.at[b_i, s_i, lq].set(jnp.where(own_q, 0, vals))
+        q_reached = jax.lax.psum(q_reach, axis)
+        g_high = jax.lax.psum(high, axis).reshape(n_queries, n_slots)
+        n_high = g_high - q_reached
+        dropped_total = jax.lax.psum(dropped, axis)
+        occ_max = jax.lax.pmax(occ, axis)
+        return (
+            c3.reshape(-1)[None],
+            bcounts[None] if cfg.count_boards else None,
+            steps_taken.reshape(n_queries, n_slots),
+            n_high,
+            dropped_total,
+            occ_max,
+        )
+
+    shd = P(axis, None)
+    rep = P()
+    fn = shard_map(
+        local_walk,
+        mesh=mesh,
+        in_specs=(shd, shd, shd, shd, rep, rep, rep, rep),
+        out_specs=(
+            shd, shd if cfg.count_boards else None, rep, rep, rep, rep
+        ),
+        check_rep=False,
+    )
+    counts, bcounts, steps_taken, n_high, dropped, occ = fn(
+        graph.p2b_offsets, graph.p2b_targets,
+        graph.b2p_offsets, graph.b2p_targets,
+        safe_q, jnp.where(valid_q, query_weights, 0.0),
+        valid_q, keys,
+    )
+    return ShardedBatchedWalkResult(
+        counts=counts,
+        board_counts=bcounts,
+        steps_taken=steps_taken,
+        n_high=n_high,
+        dropped=dropped,
+        max_occupancy=occ,
+    )
+
+
+def _hierarchical_topk(
+    counts: Array,      # (S, B * n_slots * pps) shard-stacked counts
+    n_shards: int,
+    n_queries: int,
+    n_slots: int,
+    pps: int,
+    k: int,
+) -> Tuple[Array, Array]:
+    """Exact global boosted top-k from shard-stacked counts.
+
+    Eq. 3's boost is per-pin, so per-shard boost + top-k followed by a
+    global re-top-k over ``S * k`` candidates is EXACT (never misses a
+    global top-k pin: each shard forwards at least its own k best).
+    """
+    c = counts.reshape(n_shards, n_queries, n_slots, pps)
+
+    def shard_topk(cs):  # (B, n_slots, pps) one shard's owned counts
+        boosted = jax.vmap(counter_lib.boost_combine)(cs)       # (B, pps)
+        return jax.vmap(lambda b: counter_lib.topk_dense(b, k))(boosted)
+
+    scores, idx = jax.vmap(shard_topk)(c)                       # (S, B, k)
+    pins = idx.astype(jnp.int32) + (
+        jnp.arange(n_shards, dtype=jnp.int32) * pps
+    )[:, None, None]
+    flat_s = jnp.moveaxis(scores, 0, 1).reshape(n_queries, n_shards * k)
+    flat_p = jnp.moveaxis(pins, 0, 1).reshape(n_queries, n_shards * k)
+    gs, gi = jax.vmap(lambda v: jax.lax.top_k(v, k))(flat_s)
+    gp = jnp.take_along_axis(flat_p, gi, axis=1)
+    return gs, gp
+
+
+def recommend_sharded_batched(
+    graph: ShardedGraph,
+    query_pins: Array,      # (B, n_slots)
+    query_weights: Array,   # (B, n_slots)
+    keys: Array,            # (B,) per-query PRNG keys
+    cfg: walk_lib.WalkConfig,
+    mesh: Mesh,
+    axis: str = "model",
+    *,
+    slack: float = 2.0,
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """Batch-native sharded serving: walk + hierarchical boosted top-k.
+
+    Returns ``(scores (B, top_k), ids (B, top_k), steps_taken (B,
+    n_slots), n_high (B, n_slots), dropped ())`` — the sharded twin of
+    ``walk.recommend_with_stats_batched`` plus the routing-drop telemetry
+    ``serve_batch(with_stats=True)`` surfaces.
+    """
+    res = pixie_walk_sharded_batched(
+        graph, query_pins, query_weights, keys, cfg, mesh, axis,
+        slack=slack,
+    )
+    n_queries, n_slots = query_pins.shape
+    scores, ids = _hierarchical_topk(
+        res.counts, mesh.shape[axis], n_queries, n_slots,
+        graph.pins_per_shard, cfg.top_k,
+    )
+    return scores, ids, res.steps_taken, res.n_high, res.dropped
+
+
+# ---------------------------------------------------------------------------
+# Single-query convenience wrapper (launch cells, examples)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedWalkConfig:
+    """Single-query sharded walk knobs (``pixie_walk_sharded``).
+
+    A thin recipe over the batched engine: ``n_supersteps`` global hops
+    with ``n_shards * walkers_per_shard`` walkers, no early stopping
+    (Algorithm 1 semantics, like the original sharded path).  ``slack``
+    scales routing capacity (``route_capacity``); ``backend`` /
+    ``gather_mode`` select the per-shard hop engine; ``unroll`` is the
+    loop-free cost-model mode (launch/dryrun.py).
+    """
+
+    n_supersteps: int = 64
+    walkers_per_shard: int = 1024
+    alpha: float = 0.5
+    slack: float = 2.0
+    top_k: int = 100
+    unroll: bool = False     # cost-model mode (see launch/dryrun.py)
+    backend: str = "xla"
+    gather_mode: str = "scalar"
+
+    def capacity(self, n_shards: int) -> int:
+        return route_capacity(
+            n_shards, n_shards * self.walkers_per_shard, self.slack
+        )
+
+
+class ShardedWalkResult(NamedTuple):
+    top_scores: Array    # (top_k,) f32 boosted scores
+    top_pins: Array      # (top_k,) int32 global pin ids
+    dropped: Array       # () int32 walkers dropped by routing overflow
+
+
+def _wrapper_walk_config(
+    cfg: ShardedWalkConfig, n_shards: int
+) -> walk_lib.WalkConfig:
+    """Map the single-query recipe onto the batched engine's config."""
+    w_total = n_shards * cfg.walkers_per_shard
+    n_ss = cfg.n_supersteps
+    chunk = 8 if n_ss % 8 == 0 else (4 if n_ss % 4 == 0 else 1)
+    return walk_lib.WalkConfig(
+        n_steps=w_total * n_ss,
+        alpha=cfg.alpha,
+        n_walkers=w_total,
+        chunk_steps=chunk,
+        bias_beta=0.0,
+        top_k=cfg.top_k,
+        count_boards=False,
+        backend=cfg.backend,
+        gather_mode=cfg.gather_mode,
+    ).without_early_stop()
 
 
 def pixie_walk_sharded(
@@ -218,161 +730,23 @@ def pixie_walk_sharded(
     mesh: Mesh,
     axis: str = "model",
 ) -> ShardedWalkResult:
-    """Multi-query Pixie walk on a node-range-sharded graph."""
-    n_shards = mesh.shape[axis]
-    s = n_shards
-    wl = cfg.walkers_per_shard
-    cap = cfg.capacity(s)
-    recv = s * cap                        # walkers resident after a route
-    n_slots = query_pins.shape[0]
-    pps = graph.pins_per_shard
-    bps = graph.boards_per_shard
-    max_events = cfg.n_supersteps * recv
-    # events are WIDE (slot, local_pin) int32 lane pairs — the per-shard
-    # id space n_slots * pins_per_shard may exceed 2^31 with no dtype
-    # change (the old packed-int64 branch is gone); the slot lane carries
-    # n_slots for uncounted steps
-    alpha_u32 = min(int(cfg.alpha * 2**32), 2**32 - 1)
+    """Multi-query Pixie walk on a node-range-sharded graph (batch of 1).
 
-    valid_q = (query_pins >= 0) & (query_weights > 0)
-    safe_q = jnp.where(valid_q, query_pins, 0)
-
-    def local_walk(p2b_off, p2b_tgt, b2p_off, b2p_tgt, qpins, qw, key):
-        p2b_off, p2b_tgt = p2b_off[0], p2b_tgt[0]
-        b2p_off, b2p_tgt = b2p_off[0], b2p_tgt[0]
-        sid = jax.lax.axis_index(axis)
-        pin_lo = sid * pps
-
-        # ---- seed: each shard spawns walkers on its RESIDENT query pins ----
-        owner = safe_q // pps
-        resident = (owner == sid) & valid_q
-        any_resident = jnp.any(resident)
-        # weight-proportional slot choice among resident queries
-        w_local = jnp.where(resident, qw, 0.0)
-        csum = jnp.cumsum(w_local)
-        total = jnp.maximum(csum[-1], 1e-9)
-        u = jax.random.uniform(jax.random.fold_in(key, sid), (recv,)) * total
-        slot0 = jnp.searchsorted(csum, u).astype(jnp.int32)
-        slot0 = jnp.clip(slot0, 0, n_slots - 1)
-        curr0 = jnp.take(safe_q, slot0)
-        # seed only walkers_per_shard walkers; the buffer keeps route_slack
-        # headroom so skewed hops don't immediately overflow capacity
-        valid0 = any_resident & (jnp.arange(recv) < wl)
-
-        sev0 = jnp.full((max_events,), n_slots, jnp.int32)
-        pev0 = jnp.zeros((max_events,), jnp.int32)
-
-        def superstep(carry, t):
-            curr, slot, valid, sev, pev, dropped = carry
-            k_t = jax.random.fold_in(jax.random.fold_in(key, sid), t)
-            rb = jax.random.bits(k_t, (recv, 3), dtype=jnp.uint32)
-
-            # restart: walker returns to its query pin (may be remote)
-            restart = rb[:, 0] < jnp.uint32(alpha_u32)
-            pos = jnp.where(restart, jnp.take(safe_q, slot), curr)
-
-            # walkers whose position is non-resident (fresh restarts) route
-            # through hop-1 on their home shard next superstep; here we
-            # treat position as local when possible.
-            local_pin = jnp.clip(pos - pin_lo, 0, pps - 1)
-            is_local = (pos >= pin_lo) & (pos < pin_lo + pps)
-
-            starts = jnp.take(p2b_off, local_pin)
-            degs = jnp.take(p2b_off, local_pin + 1) - starts
-            eidx = starts + (rb[:, 1].astype(jnp.int32) % jnp.maximum(degs, 1))
-            board = jnp.take(p2b_tgt, eidx)         # board index [0, n_boards)
-            hop1_ok = valid & is_local & (degs > 0)
-
-            # route to board owner
-            bdest = jnp.where(hop1_ok, board // bps, s)
-            # non-local restarts and dead-end walkers route home (restart)
-            home = jnp.take(safe_q, slot) // pps
-            go_home = valid & (~is_local | (is_local & (degs <= 0)))
-            dest1 = jnp.where(go_home, home, bdest)
-            pay_pos = jnp.where(go_home, jnp.take(safe_q, slot), board)
-            flag = go_home.astype(jnp.int32)  # 1 = restart-in-flight
-            v1, (pos1, slot1, flag1), d1 = _route(
-                axis, s, cap, jnp.where(valid, dest1, s),
-                (pay_pos, slot, flag),
-            )
-
-            # hop 2 (only for walkers carrying a board)
-            on_board = v1 & (flag1 == 0)
-            local_board = jnp.clip(pos1 - sid * bps, 0, bps - 1)
-            k2 = jax.random.fold_in(k_t, 1)
-            rb2 = jax.random.bits(k2, (recv,), dtype=jnp.uint32)
-            bstarts = jnp.take(b2p_off, local_board)
-            bdegs = jnp.take(b2p_off, local_board + 1) - bstarts
-            bidx = bstarts + (rb2.astype(jnp.int32) % jnp.maximum(bdegs, 1))
-            pin = jnp.take(b2p_tgt, bidx)           # global pin id
-            hop2_ok = on_board & (bdegs > 0)
-
-            # dead-ends and in-flight restarts both continue at query pin
-            tgt_pin = jnp.where(hop2_ok, pin, jnp.take(safe_q, slot1))
-            counted = hop2_ok
-            dest2 = jnp.where(v1, tgt_pin // pps, s)
-            v2, (pos2, slot2, cnt2), d2 = _route(
-                axis, s, cap, dest2,
-                (tgt_pin, slot1, counted.astype(jnp.int32)),
-            )
-
-            # record visits (walkers now resident on this shard) — wide
-            # (slot, local_pin) lanes, slot lane n_slots = uncounted
-            local2 = jnp.clip(pos2 - pin_lo, 0, pps - 1)
-            counted2 = v2 & (cnt2 == 1)
-            ev_s = jnp.where(counted2, slot2, n_slots).astype(jnp.int32)
-            ev_p = jnp.where(counted2, local2, 0).astype(jnp.int32)
-            sev = jax.lax.dynamic_update_slice(sev, ev_s, (t * recv,))
-            pev = jax.lax.dynamic_update_slice(pev, ev_p, (t * recv,))
-            return (pos2, slot2, v2, sev, pev, dropped + d1 + d2), None
-
-        carry0 = (
-            curr0, slot0, valid0, sev0, pev0, jnp.asarray(0, jnp.int32)
-        )
-        (curr, slot, valid, sev, pev, dropped), _ = jax.lax.scan(
-            superstep, carry0, jnp.arange(cfg.n_supersteps),
-            unroll=cfg.unroll or 1,
-        )
-
-        # ---- shard-local aggregation + boosted top-k ----
-        uniq_slot, uniq_pin, counts = counter_lib.events_to_counts(
-            sev, pev, n_slots, max_events
-        )
-        pin_ids, boosted = counter_lib.boosted_from_events(
-            uniq_slot, uniq_pin, counts, n_slots, pps, max_events
-        )
-        top_s, top_i = jax.lax.top_k(boosted, cfg.top_k)
-        top_pins_local = jnp.where(
-            top_i < max_events,
-            jnp.take(pin_ids, top_i).astype(jnp.int32) + pin_lo,
-            -1,
-        )
-        # hierarchical top-k: gather per-shard candidates, re-select
-        all_s = jax.lax.all_gather(top_s, axis)      # (S, k)
-        all_p = jax.lax.all_gather(top_pins_local, axis)
-        gs, gi = jax.lax.top_k(all_s.reshape(-1), cfg.top_k)
-        gp = jnp.take(all_p.reshape(-1), gi)
-        dropped_total = jax.lax.psum(dropped, axis)
-        return gs, gp, dropped_total, sev[None], pev[None]
-
-    other_axes = tuple(a for a in mesh.axis_names if a != axis)
-    rep = P()
-    fn = shard_map(
-        local_walk,
-        mesh=mesh,
-        in_specs=(
-            P(axis, None), P(axis, None), P(axis, None), P(axis, None),
-            rep, rep, rep,
-        ),
-        out_specs=(rep, rep, rep, P(axis, None), P(axis, None)),
-        check_rep=False,
+    Runs the pod-sharded batched fused engine
+    (``pixie_walk_sharded_batched``) for one query and finishes with the
+    exact hierarchical boosted top-k.
+    """
+    wcfg = _wrapper_walk_config(cfg, mesh.shape[axis])
+    keys = jax.random.split(key, 1)
+    res = pixie_walk_sharded_batched(
+        graph, query_pins[None], query_weights[None], keys, wcfg, mesh,
+        axis, slack=cfg.slack, unroll=cfg.unroll,
     )
-    gs, gp, dropped, sev, pev = fn(
-        graph.p2b_offsets, graph.p2b_targets,
-        graph.b2p_offsets, graph.b2p_targets,
-        safe_q, jnp.where(valid_q, query_weights, 0.0), key,
+    n_slots = query_pins.shape[0]
+    scores, pins = _hierarchical_topk(
+        res.counts, mesh.shape[axis], 1, n_slots, graph.pins_per_shard,
+        cfg.top_k,
     )
     return ShardedWalkResult(
-        top_scores=gs, top_pins=gp, dropped=dropped,
-        slot_events=sev, pin_events=pev,
+        top_scores=scores[0], top_pins=pins[0], dropped=res.dropped
     )

@@ -139,6 +139,9 @@ def serve_batch(
     cfg: walk_lib.WalkConfig,
     backend: str | None = None,
     with_stats: bool = False,
+    mesh=None,
+    axis: str = "model",
+    slack: float = 2.0,
 ) -> Tuple[jnp.ndarray, ...]:
     """One SPMD serving step: Pixie over a whole query batch.
 
@@ -168,10 +171,37 @@ def serve_batch(
     ``(scores, ids, steps_taken, n_high)`` (each leading with the batch
     axis) so the fleet can monitor how much step budget Algorithm 3's
     early stopping saves per query shape.
+
+    A ``distributed.ShardedGraph`` routes through the pod-sharded batched
+    engine instead (``mesh`` required; ``axis`` names the shard axis,
+    ``slack`` scales routing capacity): the same walk semantics with the
+    graph node-range-sharded across the mesh, bit-identical to the
+    unsharded engines whenever routing drops nothing.  ``with_stats=True``
+    then returns ``(scores, ids, steps_taken, n_high, dropped)`` — the
+    extra scalar is the routing-overflow drop count, the serving signal
+    for raising ``slack`` (drops are bounded Monte Carlo slack, never
+    silent).
     """
     if backend is not None and backend != cfg.backend:
         cfg = dataclasses.replace(cfg, backend=backend)
     keys = jax.random.split(key, pins.shape[0])
+
+    from repro.core import distributed as dist_lib
+
+    if isinstance(graph, dist_lib.ShardedGraph):
+        if mesh is None:
+            raise ValueError(
+                "serve_batch over a ShardedGraph needs the device mesh "
+                "(pass mesh=...)"
+            )
+        scores, ids, steps, n_high, dropped = (
+            dist_lib.recommend_sharded_batched(
+                graph, pins, weights, keys, cfg, mesh, axis, slack=slack
+            )
+        )
+        if with_stats:
+            return scores, ids, steps, n_high, dropped
+        return scores, ids
 
     if cfg.backend == "pallas" and walk_lib.batched_engine_fits(
         int(pins.shape[0]), int(pins.shape[1]), graph.n_pins,

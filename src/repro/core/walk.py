@@ -136,6 +136,7 @@ def batched_engine_fits(
     n_pins: int,
     n_boards: int = 0,
     count_boards: bool = False,
+    n_shards: int = 1,
 ) -> bool:
     """Whether the batch-native dense engine can materialize its bins.
 
@@ -148,10 +149,15 @@ def batched_engine_fits(
     previously-serving (graph, batch) shape into a trace-time error.
     Pure-int predicate so callers (and tests) can probe production shapes
     without materializing anything.
+
+    ``n_shards > 1`` probes the pod-sharded batched engine: each shard
+    only counts its OWNED id subrange, so the per-shard bin space divides
+    by the shard count — the mechanism that brings the paper's 3B-pin
+    id space under the int32 dense-count envelope (2e9 pins / 16 shards
+    at n_slots = 16, batch 1: 2e9 bins < 2**31).
     """
-    n_bins = n_queries * n_slots * max(
-        n_pins, n_boards if count_boards else 0
-    )
+    per_shard = -(-max(n_pins, n_boards if count_boards else 0) // n_shards)
+    n_bins = n_queries * n_slots * per_shard
     return n_bins + 1 < 2**31
 
 

@@ -31,6 +31,7 @@ from repro.kernels.visit_counter import (
 from repro.kernels.walk_step import walk_step as _walk_kernel
 from repro.kernels.walk_step import DEFAULT_BLOCK_W as _DEFAULT_BLOCK_W
 from repro.kernels.walk_step import walk_steps_fused as _fused_kernel
+from repro.kernels.walk_step import walk_hop_fused as _hop_kernel
 
 Array = jax.Array
 
@@ -273,6 +274,41 @@ def walk_chunk_fused_batched(
         n_boards=n_boards,
         alpha_u32=alpha_u32, beta_u32=beta_u32,
         count_boards=count_boards, unroll=unroll,
+    )
+
+
+def walk_hop(
+    pos: Array,
+    gate: Array,
+    r: Array,
+    offsets: Array,
+    targets: Array,
+    row_base: Array,
+    *,
+    use_kernel: Optional[bool] = None,
+    block_l: Optional[int] = None,
+    gather_mode: str = "scalar",
+) -> Tuple[Array, Array]:
+    """ONE walk hop on a shard-local CSR slice -> (tgt, ok).
+
+    The half-step twin of :func:`walk_chunk_fused` used by the sharded
+    superstep: walkers hop once (pin->board or board->pin) on a node-range
+    CSR slice whose first owned row is ``row_base``, then migrate over the
+    routing fabric before the next hop.  The kernel path is ONE
+    ``pallas_call`` for the whole routed walker buffer (per shard, not per
+    query); the oracle path (``ref.walk_hop_ref``) is the same arithmetic
+    as XLA gathers, bit-identical per the usual twin contract.
+    """
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if not use_kernel:
+        return ref.walk_hop_ref(pos, gate, r, offsets, targets, row_base)
+    l = pos.shape[0]
+    if block_l is None:
+        block_l = _DEFAULT_BLOCK_W if l % _DEFAULT_BLOCK_W == 0 else l
+    return _hop_kernel(
+        pos, gate, r, row_base, offsets, targets,
+        block_l=block_l, gather_mode=gather_mode,
     )
 
 

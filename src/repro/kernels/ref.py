@@ -301,6 +301,42 @@ def walk_chunk_batched_ref(
     return nxt, qev, sev, pev, bev
 
 
+def walk_hop_ref(
+    pos: Array,       # (l,) int32 global node ids (pins OR boards)
+    gate: Array,      # (l,) bool/int32 — walkers allowed to hop
+    r: Array,         # (l,) uint32 raw random bits for the edge pick
+    offsets: Array,   # (rows + 1,) shard-local CSR offsets (rebased to 0)
+    targets: Array,   # (edges,) shard-local CSR targets
+    row_base: Array,  # () or (1,) int32 — first global id this slice owns
+) -> Tuple[Array, Array]:
+    """ONE hop of the walk on a shard-local CSR slice (sharded superstep).
+
+    The half-step twin of ``walk_chunk_ref``'s ``one_step``: the same
+    ``r & _RMASK`` masking, the same ``where(ok, start + r % max(deg, 1),
+    0)`` edge pick, the same gather — split at the hop boundary so the
+    sharded engine can run ``_route`` between the pin->board and
+    board->pin halves.  ``row_base`` rebases global ids onto the slice
+    (the shard-local subrange offset); callers guarantee ``gate`` implies
+    ``row_base <= pos < row_base + rows``.
+
+    Returns ``(tgt (l,), ok (l,))``: the sampled neighbour where ``ok``
+    (= gate and degree > 0), 0 elsewhere — exactly the masked values the
+    unsharded oracle produces for its ``board``/``pin`` intermediates.
+    """
+    gate = gate.astype(jnp.bool_)
+    row_base = jnp.asarray(row_base, jnp.int32).reshape(())
+    local = jnp.where(gate, pos.astype(jnp.int32) - row_base, 0)
+    start = jnp.take(offsets, local)
+    deg = jnp.take(offsets, local + 1) - start
+    ok = gate & (deg > 0)
+    r_m = (r & jnp.uint32(_RMASK)).astype(jnp.int32)
+    eidx = jnp.where(
+        ok, start + (r_m % jnp.maximum(deg, 1)).astype(offsets.dtype), 0
+    )
+    tgt = jnp.take(targets, eidx).astype(jnp.int32)
+    return jnp.where(ok, tgt, 0), ok
+
+
 # ---------------------------------------------------------------------------
 # embedding_bag: fixed-bag-size gather + pool (JAX has no native EmbeddingBag)
 # ---------------------------------------------------------------------------

@@ -672,3 +672,151 @@ def walk_steps_fused(
     if with_query:
         return out[0], qev, sev, pev, bev
     return out[0], sev, pev, bev
+
+
+# ---------------------------------------------------------------------------
+# Hop-phase fused kernel — walk_steps_fused split at the hop boundary
+# ---------------------------------------------------------------------------
+
+
+def _walk_hop_kernel(
+    pos_ref, gate_ref, r_ref, base_ref,
+    off_ref, tgt_ref,            # shard-local CSR slice, HBM/ANY
+    out_ref, ok_ref,
+    *,
+    block_l: int,
+    gather_mode: str,
+):
+    """One CSR hop for a block of routed walkers.
+
+    ``walk_steps_fused`` runs both hops of a step back to back because the
+    replicated graph owns every row; the sharded engine must ``_route``
+    walkers between hops, so this kernel is the fused kernel's per-hop
+    half: the same ``_RMASK`` decode, the same ``_pick_edge`` arithmetic,
+    the same scalar/dma gather pipelines — over a shard-local CSR slice
+    whose rows are rebased by the traced ``row_base`` scalar (the
+    shard-local subrange offset, ``shard_id * rows_per_shard``).
+    """
+    pos = pos_ref[...]
+    gate = gate_ref[...] != 0
+    r = (r_ref[...] & jnp.uint32(_RMASK)).astype(jnp.int32)
+    row_base = base_ref[0]
+    # clamp non-gated walkers to row 0: their position may be a global id
+    # another shard owns (or a sentinel) — the result is masked anyway
+    local = jnp.where(gate, pos - row_base, 0)
+
+    if gather_mode == "dma":
+
+        def scoped(off_scr, tgt_scr, sem):
+            # offset phase: (start, end) rows, double-buffered
+            _dma_row_gather(
+                lambda i: off_ref.at[pl.ds(local[i], 2)], off_scr, sem,
+                block_l,
+            )
+            off = off_scr[...]                        # (block_l, 2)
+            start, deg = off[:, 0], off[:, 1] - off[:, 0]
+            ok = gate & (deg > 0)
+            eidx = _pick_edge(start, deg, r, False, None, ok)
+            # target phase: the sampled neighbour ids
+            _dma_row_gather(
+                lambda i: tgt_ref.at[pl.ds(eidx[i], 1)], tgt_scr, sem,
+                block_l,
+            )
+            tgt = tgt_scr[...][:, 0]
+            out_ref[...] = jnp.where(ok, tgt, 0)
+            ok_ref[...] = ok
+
+        pl.run_scoped(
+            scoped,
+            pltpu.VMEM((block_l, 2), jnp.int32),
+            pltpu.VMEM((block_l, 1), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        )
+    else:
+
+        def walker(i, acc):
+            out, okv = acc
+            off = off_ref[pl.ds(local[i], 2)]
+            start, deg = off[0], off[1] - off[0]
+            ok = gate[i] & (deg > 0)
+            eidx = _pick_edge(start, deg, r[i], False, None, ok)
+            t = tgt_ref[pl.ds(eidx, 1)][0]
+            out = out.at[i].set(jnp.where(ok, t, 0))
+            okv = okv.at[i].set(ok)
+            return out, okv
+
+        out, okv = jax.lax.fori_loop(
+            0, block_l, walker,
+            (jnp.zeros((block_l,), jnp.int32),
+             jnp.zeros((block_l,), jnp.bool_)),
+        )
+        out_ref[...] = out
+        ok_ref[...] = okv
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "gather_mode", "interpret")
+)
+def walk_hop_fused(
+    pos: jax.Array,       # (l,) int32 global node ids
+    gate: jax.Array,      # (l,) bool — walkers allowed to hop
+    r: jax.Array,         # (l,) uint32 raw bits for the edge pick
+    row_base: jax.Array,  # (1,) int32 traced shard-local subrange offset
+    offsets: jax.Array,   # (rows + 1,) shard-local CSR offsets
+    targets: jax.Array,   # (edges,) shard-local CSR targets
+    *,
+    block_l: int = DEFAULT_BLOCK_W,
+    gather_mode: str = "scalar",
+    interpret: bool | None = None,
+):
+    """ONE walk hop in one ``pallas_call`` (the sharded superstep phase).
+
+    Returns ``(tgt (l,) int32, ok (l,) bool)`` — the sampled neighbour
+    where ``ok`` (= ``gate`` and the row has edges), 0 elsewhere —
+    bit-identical to ``kernels/ref.walk_hop_ref`` and to the matching
+    half of ``walk_steps_fused``'s superstep.  ``row_base`` is a traced
+    (1,) array, NOT a static int: every shard of a ``shard_map`` runs the
+    same program with its own ``axis_index``-derived base, so baking it
+    in would force one kernel variant per shard.
+    """
+    if gather_mode not in GATHER_MODES:
+        raise ValueError(
+            f"unknown gather_mode {gather_mode!r}; use {GATHER_MODES}"
+        )
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    l = pos.shape[0]
+    if l % block_l != 0:
+        raise ValueError(f"walker count {l} must be a multiple of {block_l}")
+    grid = (l // block_l,)
+    blk = lambda i: (i,)
+    any_spec = pl.BlockSpec(memory_space=pl.ANY)
+    return pl.pallas_call(
+        functools.partial(
+            _walk_hop_kernel, block_l=block_l, gather_mode=gather_mode
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l,), blk),           # pos
+            pl.BlockSpec((block_l,), blk),           # gate
+            pl.BlockSpec((block_l,), blk),           # r
+            pl.BlockSpec((1,), lambda i: (0,)),      # row_base
+            any_spec, any_spec,                      # CSR slice
+        ],
+        out_specs=[
+            pl.BlockSpec((block_l,), blk),
+            pl.BlockSpec((block_l,), blk),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l,), jnp.int32),
+            jax.ShapeDtypeStruct((l,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(
+        pos.astype(jnp.int32),
+        gate.astype(jnp.int32),
+        r.astype(jnp.uint32),
+        jnp.asarray(row_base, jnp.int32).reshape((1,)),
+        offsets.astype(jnp.int32),
+        targets.astype(jnp.int32),
+    )

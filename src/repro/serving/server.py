@@ -60,24 +60,61 @@ class PixieServer:
         n_slots: int = 8,
         seed: int = 0,
         backend: Optional[str] = None,
+        mesh=None,
+        axis: str = "model",
+        slack: float = 2.0,
     ):
         """``backend`` overrides cfg.backend ("xla" | "pallas") so a fleet
         can flip every replica onto the fused Pallas walk engine at server
-        construction; recommendations are bit-identical either way."""
+        construction; recommendations are bit-identical either way.
+
+        A ``distributed.ShardedGraph`` replica (graph too big for one
+        chip) needs ``mesh``; ``axis``/``slack`` configure the walker
+        routing fabric (core/distributed.py).  The sharded graph is
+        closed over rather than passed through jit — its static int
+        metadata must stay Python ints — so ``swap_graph`` re-jits on a
+        sharded replica (the daily reload already pays a retrace for the
+        new graph constants)."""
         if backend is not None and backend != cfg.backend:
             cfg = dataclasses.replace(cfg, backend=backend)
         self.graph = graph
         self.cfg = cfg
         self.batch_size = batch_size
         self.n_slots = n_slots
+        self.mesh = mesh
+        self.axis = axis
+        self.slack = slack
         self.stats = ServerStats()
         self._key = jax.random.key(seed)
         self._queue: List[Tuple[np.ndarray, np.ndarray, int]] = []
+        self._build_serve()
 
-        def _serve(graph, pins, weights, feats, key):
-            return service.serve_batch(graph, pins, weights, feats, key, cfg)
+    def _build_serve(self) -> None:
+        from repro.core import distributed as dist_lib
 
-        self._serve = jax.jit(_serve)
+        cfg = self.cfg
+        if isinstance(self.graph, dist_lib.ShardedGraph):
+            graph, mesh, axis, slack = (
+                self.graph, self.mesh, self.axis, self.slack
+            )
+            sharded = jax.jit(
+                lambda pins, weights, feats, key: service.serve_batch(
+                    graph, pins, weights, feats, key, cfg,
+                    mesh=mesh, axis=axis, slack=slack,
+                )
+            )
+            self._serve = lambda _g, p, w, f, k: sharded(p, w, f, k)
+        else:
+            # the plain jitted program takes the graph as an argument, so
+            # a same-shape daily swap reuses the compiled program
+            if getattr(self, "_plain_serve", None) is None:
+                self._plain_serve = jax.jit(
+                    lambda graph, pins, weights, feats, key:
+                        service.serve_batch(
+                            graph, pins, weights, feats, key, cfg
+                        )
+                )
+            self._serve = self._plain_serve
 
     # -- request path ---------------------------------------------------------
     def submit(self, pins: Sequence[int], weights: Sequence[float], user_feat: int = 0):
@@ -118,6 +155,7 @@ class PixieServer:
         return out
 
     # -- graph swap (the daily reload, §3.3) -----------------------------------
-    def swap_graph(self, new_graph: PinBoardGraph) -> None:
+    def swap_graph(self, new_graph) -> None:
         self.graph = new_graph
         self.stats.graph_generation += 1
+        self._build_serve()

@@ -39,6 +39,19 @@ def test_serve_fleet_example_smoke():
     assert stats.percentile(50) > 0
 
 
+def test_sharded_walk_example_smoke():
+    # single-device in-process configuration (n_shards=1 on a (1,) mesh);
+    # the multi-device path is covered by tests/test_sharded_engine.py's
+    # subprocess runs
+    mod = _load("sharded_walk")
+    overlap, dropped = mod.main(
+        n_pins=500, n_boards=60, n_shards=1, mesh_shape=(1,),
+        n_supersteps=32, walkers_per_shard=128, top_k=10, slack=4.0,
+    )
+    assert overlap >= 5
+    assert dropped == 0  # one shard: every route is shard-local
+
+
 def test_two_stage_recsys_example_smoke():
     mod = _load("two_stage_recsys")
     scores, items = mod.main(

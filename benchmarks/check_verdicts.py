@@ -43,6 +43,10 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     # board counts, steps_taken, n_high) across n_shards x batch, zero
     # drops at parity slack, and starved-fabric drops are counted
     ("BENCH_serving.json", ("sharded", "sharded_engine_agrees")),
+    # bench_traffic (merged): bucketed deadline-aware batch formation ==
+    # single-bucket flush() oracle score-for-score on the same requests
+    # and RNG streams, with the daily graph swap exercised under load
+    ("BENCH_serving.json", ("traffic", "traffic_buckets_agree")),
     # bench_earlystop_fused: fused in-VMEM tally == naive recount
     ("results/bench.json", ("earlystop_fused", "counting",
                             "fused_matches_naive")),

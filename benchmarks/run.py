@@ -28,6 +28,7 @@ from benchmarks import (
     bench_smoke,
     bench_table1_hitrate,
     bench_table3_bias,
+    bench_traffic,
     bench_widepack,
 )
 
@@ -54,6 +55,9 @@ SUITES = {
     "sharded": ("Pod-sharded batched fused walk engine: per-shard "
                 "supersteps on the bounded routing fabric",
                 bench_sharded.run),
+    "traffic": ("Continuous-traffic serving: bucketed deadline-aware "
+                "batches under an open-loop Poisson load generator",
+                bench_traffic.run),
 }
 
 VERDICT_KEYS = (
@@ -64,6 +68,7 @@ VERDICT_KEYS = (
     "both_backends_agree", "fused_matches_naive", "earlystop_backends_agree",
     "widepack_backends_agree", "incremental_matches_full",
     "dma_backends_agree", "batch_engine_agrees", "sharded_engine_agrees",
+    "traffic_buckets_agree",
 )
 
 

@@ -167,6 +167,18 @@ def serve_batch(
     per-query bins may still fit — rather than erroring where the old
     path served.
 
+    ``key`` is either a scalar PRNG key — split into one stream per query,
+    the original behavior — or a ``(batch,)`` typed key array used
+    directly as the per-query streams.  Per-query keys are what makes a
+    query's result independent of BATCH COMPOSITION: the bucketed server
+    (serving/server.py) assigns each request its key at submit time
+    (``fold_in`` of the request id), so deadline-aware batch formation can
+    group requests however load dictates and still return bit-identical
+    recommendations to the single-bucket flush oracle on the same
+    requests.  (Padding a query into a wider ``n_slots`` shape is also
+    bit-invariant: zero-weight slots get zero step budget and zero
+    walkers, so bucket shape never changes a query's walk.)
+
     Returns ``(scores, ids)``; with ``with_stats=True`` returns
     ``(scores, ids, steps_taken, n_high)`` (each leading with the batch
     axis) so the fleet can monitor how much step budget Algorithm 3's
@@ -184,7 +196,15 @@ def serve_batch(
     """
     if backend is not None and backend != cfg.backend:
         cfg = dataclasses.replace(cfg, backend=backend)
-    keys = jax.random.split(key, pins.shape[0])
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) and key.ndim == 1:
+        if key.shape[0] != pins.shape[0]:
+            raise ValueError(
+                f"per-query key array has {key.shape[0]} keys for a batch "
+                f"of {pins.shape[0]} queries; one key per query required"
+            )
+        keys = key
+    else:
+        keys = jax.random.split(key, pins.shape[0])
 
     from repro.core import distributed as dist_lib
 

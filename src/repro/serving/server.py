@@ -2,21 +2,37 @@
 
 The paper's server: IO threads deserialize queries, worker threads each own
 a counter and run one query at a time; ~1,200 QPS / 60 ms p99 per machine.
-The batch-SPMD translation:
+The batch-SPMD translation, now shaped for CONTINUOUS traffic rather than a
+synchronous flush loop:
 
-  * requests accumulate in a queue and are **padded/bucketed into a fixed
-    (batch, n_slots) shape** — one jitted `serve_batch` program replaces the
-    worker pool (each vmapped lane is "a worker with its own counter");
+  * requests route into **shape buckets** — small/medium/large
+    ``(batch_size, n_slots)`` pairs, each lowering to its own cached jitted
+    program (jit's compile cache is keyed on shape, so a straggler 16-pin
+    query pads a 16-slot bucket, not the whole fleet shape);
+  * batches form **deadline-aware**: a bucket dispatches when FULL or when
+    its oldest request has waited ``max_wait_ms``, whichever first —
+    freshness over batch occupancy ("Related Pins": tail latency, not
+    throughput, is the production objective);
+  * dispatch is **async**: the jitted call is enqueued and ``submit``/
+    ``pump`` return immediately; ``jax.block_until_ready`` happens in
+    ``harvest``, off the intake path;
+  * every request gets its PRNG stream at submit time
+    (``fold_in(server_key, req_id)``), so batch composition NEVER changes a
+    query's walk — bucketed serving is bit-identical to the single-bucket
+    ``flush()`` oracle on the same requests (the ``traffic_buckets_agree``
+    CI verdict);
   * the graph array is the shared read-only segment (the paper's
-    HugePages-backed mmap) — donated into none, replicated or sharded;
-  * a background "graph swap" hook models the daily graph reload: the server
-    holds a generation number and swaps the graph handle between batches
-    (serving never blocks on the swap — the old graph serves until the new
-    one is resident, exactly like the paper's restart-with-shared-memory).
+    HugePages-backed mmap); ``swap_graph`` models the daily reload — the
+    old graph serves until the new one is resident, in-flight batches
+    complete on the generation they dispatched under, and every
+    ``QueryResult`` carries its generation number.
 
-Latency accounting is wall-clock around the jitted call; on CPU this gives
-the *shape* of Fig. 1 (runtime vs steps / query size), which is what
-benchmarks/bench_fig1_runtime.py reports.
+Latency accounting is per query: ``latency = queue wait + dispatch +
+compute`` (wait stamped at ``submit``, compute wall-clocked around the
+device round-trip).  ``ServerStats`` keeps bounded ring buffers — a
+long-lived replica never grows memory with traffic.  On CPU the Pallas
+engine interprets, so the latency numbers measure plumbing; the
+benchmarks/bench_traffic.py agreement verdict is the regression signal.
 """
 
 from __future__ import annotations
@@ -33,24 +49,152 @@ from repro.core import service, walk as walk_lib
 from repro.core.graph import PinBoardGraph
 
 
+class LatencyRing:
+    """Bounded float ring buffer with list-ish edges (append/extend/clear).
+
+    Replaces the unbounded ``List[float]`` that leaked memory under
+    continuous traffic: a long-lived replica keeps only the most recent
+    ``capacity`` samples, and ``percentile`` is exact over that window.
+    """
+
+    __slots__ = ("capacity", "_buf", "_n", "_head")
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._buf = np.zeros((self.capacity,), np.float64)
+        self._n = 0      # valid samples (<= capacity)
+        self._head = 0   # next write position
+
+    def append(self, x: float) -> None:
+        self._buf[self._head] = float(x)
+        self._head = (self._head + 1) % self.capacity
+        self._n = min(self._n + 1, self.capacity)
+
+    def extend(self, xs) -> None:
+        for x in xs:
+            self.append(x)
+
+    def clear(self) -> None:
+        self._n = 0
+        self._head = 0
+
+    def values(self) -> np.ndarray:
+        """Samples oldest-first (only the retained window)."""
+        if self._n < self.capacity:
+            return self._buf[: self._n].copy()
+        return np.roll(self._buf, -self._head)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self):
+        return iter(self.values())
+
+
 @dataclasses.dataclass
 class ServerStats:
-    latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    """Continuous-serving telemetry with bounded memory.
+
+    ``latencies_ms[i] = wait_ms[i] + compute_ms[i]`` per query: queue wait
+    (enqueue -> dispatch, stamped in ``submit``) plus dispatch+compute
+    (host enqueue of the jitted call through ``block_until_ready``).  The
+    old accounting dropped the wait term entirely — under load that hid
+    exactly the queueing delay the paper's 60 ms p99 target is about.
+    """
+
+    capacity: int = 4096
+    latencies_ms: LatencyRing = None
+    wait_ms: LatencyRing = None
+    compute_ms: LatencyRing = None
     queries: int = 0
     batches: int = 0
+    dropped: int = 0
     graph_generation: int = 0
 
-    def percentile(self, p: float) -> float:
-        if not self.latencies_ms:
+    def __post_init__(self):
+        if self.latencies_ms is None:
+            self.latencies_ms = LatencyRing(self.capacity)
+        if self.wait_ms is None:
+            self.wait_ms = LatencyRing(self.capacity)
+        if self.compute_ms is None:
+            self.compute_ms = LatencyRing(self.capacity)
+
+    def percentile(self, p: float, which: str = "latency") -> float:
+        ring = {
+            "latency": self.latencies_ms,
+            "wait": self.wait_ms,
+            "compute": self.compute_ms,
+        }[which]
+        if not len(ring):
             return 0.0
-        return float(np.percentile(self.latencies_ms, p))
+        return float(np.percentile(ring.values(), p))
 
     def qps(self, wall_seconds: float) -> float:
         return self.queries / max(wall_seconds, 1e-9)
 
 
+class QueryResult:
+    """Per-query serving result.
+
+    Unpacks as ``scores, ids = result`` (the historical flush() contract)
+    and additionally carries the request id, the graph generation the
+    batch dispatched under (§3.3: results produced before a swap report
+    the OLD generation), and the latency split.
+    """
+
+    __slots__ = ("req_id", "scores", "ids", "generation", "wait_ms",
+                 "compute_ms", "latency_ms", "batch_seq")
+
+    def __init__(self, req_id, scores, ids, generation, wait_ms,
+                 compute_ms, batch_seq):
+        self.req_id = req_id
+        self.scores = scores
+        self.ids = ids
+        self.generation = generation
+        self.wait_ms = wait_ms
+        self.compute_ms = compute_ms
+        self.latency_ms = wait_ms + compute_ms
+        self.batch_seq = batch_seq
+
+    def __iter__(self):
+        return iter((self.scores, self.ids))
+
+    def __getitem__(self, i):
+        return (self.scores, self.ids)[i]
+
+    def __len__(self):
+        return 2
+
+    def __repr__(self):
+        return (f"QueryResult(req_id={self.req_id}, gen={self.generation}, "
+                f"wait={self.wait_ms:.2f}ms, compute={self.compute_ms:.2f}ms)")
+
+
+@dataclasses.dataclass
+class _Pending:
+    req_id: int
+    pins: np.ndarray      # (bucket n_slots,) int32, -1 padded
+    weights: np.ndarray   # (bucket n_slots,) float32, 0 padded
+    feat: int
+    key: jax.Array        # per-request PRNG stream (fold_in at submit)
+    t_enqueue: float      # logical seconds (wall by default)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    entries: List[_Pending]   # real requests only (padding not recorded)
+    scores: jax.Array
+    ids: jax.Array
+    generation: int           # stamped at DISPATCH: swaps don't rewrite it
+    t_dispatch: float         # logical clock (matches submit's ``now``)
+    t_dispatch_wall: float    # wall clock, for the compute measurement
+    batch_seq: int
+
+
 class PixieServer:
-    """Single-host Pixie serving replica (batched SPMD worker pool)."""
+    """Single-host Pixie serving replica (bucketed, deadline-aware)."""
 
     def __init__(
         self,
@@ -63,10 +207,25 @@ class PixieServer:
         mesh=None,
         axis: str = "model",
         slack: float = 2.0,
+        buckets: Optional[Sequence[Tuple[int, int]]] = None,
+        max_wait_ms: float = 5.0,
+        max_queue_per_bucket: Optional[int] = None,
+        stats_capacity: int = 4096,
     ):
         """``backend`` overrides cfg.backend ("xla" | "pallas") so a fleet
         can flip every replica onto the fused Pallas walk engine at server
         construction; recommendations are bit-identical either way.
+
+        ``buckets`` is the shape-specialization table: ``(batch_size,
+        n_slots)`` pairs, e.g. ``[(8, 2), (4, 8), (2, 16)]``.  A request
+        routes to the smallest bucket whose ``n_slots`` fits its pin
+        count; each bucket shape lowers to its own cached jitted program.
+        ``None`` keeps the single-bucket legacy shape ``[(batch_size,
+        n_slots)]``.  ``max_wait_ms`` is the batch-formation deadline
+        (``pump`` dispatches a partial bucket once its oldest request has
+        waited this long); ``max_queue_per_bucket`` bounds admission —
+        a full queue sheds the request (returns None, counted in
+        ``stats.dropped``) instead of growing without bound.
 
         A ``distributed.ShardedGraph`` replica (graph too big for one
         chip) needs ``mesh``; ``axis``/``slack`` configure the walker
@@ -84,9 +243,37 @@ class PixieServer:
         self.mesh = mesh
         self.axis = axis
         self.slack = slack
-        self.stats = ServerStats()
+        self.max_wait_ms = float(max_wait_ms)
+        self.max_queue_per_bucket = max_queue_per_bucket
+        self.stats = ServerStats(capacity=stats_capacity)
         self._key = jax.random.key(seed)
-        self._queue: List[Tuple[np.ndarray, np.ndarray, int]] = []
+        # one deterministic stream for padding lanes (results discarded)
+        self._pad_key = jax.random.fold_in(self._key, jnp.iinfo(jnp.int32).max)
+        self._seq = 0        # next auto-assigned request id
+        self._batch_seq = 0  # dispatch order (monotone)
+        if buckets is None:
+            buckets = [(batch_size, n_slots)]
+        if not buckets:
+            raise ValueError("need at least one (batch_size, n_slots) bucket")
+        # smallest-slots-first: routing picks the tightest fitting shape
+        self._buckets: List[Tuple[int, int]] = sorted(
+            ((int(b), int(s)) for b, s in buckets), key=lambda bs: bs[1]
+        )
+        seen = set()
+        for b, s in self._buckets:
+            if b < 1 or s < 1:
+                raise ValueError(f"bucket ({b}, {s}) must be positive")
+            if s in seen:
+                raise ValueError(
+                    f"two buckets share n_slots={s}; routing by pin count "
+                    "needs distinct slot shapes"
+                )
+            seen.add(s)
+        self.max_slots = self._buckets[-1][1]
+        self._queues: Dict[int, List[_Pending]] = {
+            s: [] for _, s in self._buckets
+        }
+        self._inflight: List[_InFlight] = []
         self._build_serve()
 
     def _build_serve(self) -> None:
@@ -98,64 +285,221 @@ class PixieServer:
                 self.graph, self.mesh, self.axis, self.slack
             )
             sharded = jax.jit(
-                lambda pins, weights, feats, key: service.serve_batch(
-                    graph, pins, weights, feats, key, cfg,
+                lambda pins, weights, feats, keys: service.serve_batch(
+                    graph, pins, weights, feats, keys, cfg,
                     mesh=mesh, axis=axis, slack=slack,
                 )
             )
             self._serve = lambda _g, p, w, f, k: sharded(p, w, f, k)
         else:
-            # the plain jitted program takes the graph as an argument, so
-            # a same-shape daily swap reuses the compiled program
+            # ONE jitted callable for every bucket: jit's compile cache is
+            # keyed on argument shapes, so each (batch, n_slots) bucket
+            # gets its own cached program, and a same-shape daily graph
+            # swap reuses the compiled program (no retrace) — pinned by
+            # _plain_serve._cache_size() in tests/test_traffic.py
             if getattr(self, "_plain_serve", None) is None:
                 self._plain_serve = jax.jit(
-                    lambda graph, pins, weights, feats, key:
+                    lambda graph, pins, weights, feats, keys:
                         service.serve_batch(
-                            graph, pins, weights, feats, key, cfg
+                            graph, pins, weights, feats, keys, cfg
                         )
                 )
             self._serve = self._plain_serve
 
     # -- request path ---------------------------------------------------------
-    def submit(self, pins: Sequence[int], weights: Sequence[float], user_feat: int = 0):
-        qp, qw = np.full(self.n_slots, -1, np.int32), np.zeros(
-            self.n_slots, np.float32
+    def _route(self, n_pins: int) -> Tuple[int, int]:
+        """Smallest bucket whose n_slots fits the query; raises past the
+        largest — a query must NEVER be silently truncated (dropping pins
+        silently skews every Eq. 2 step budget downstream)."""
+        for b, s in self._buckets:
+            if n_pins <= s:
+                return b, s
+        raise ValueError(
+            f"query has {n_pins} pins but the largest bucket holds "
+            f"{self.max_slots} slots; shrink the query (service.build_query "
+            f"keeps the top-n_slots pins by weight) or add a larger bucket"
         )
-        n = min(len(pins), self.n_slots)
-        qp[:n] = np.asarray(pins[:n], np.int32)
-        qw[:n] = np.asarray(weights[:n], np.float32)
-        self._queue.append((qp, qw, user_feat))
 
-    def flush(self) -> List[Tuple[np.ndarray, np.ndarray]]:
-        """Serve every queued request (padding the final partial batch)."""
-        out: List[Tuple[np.ndarray, np.ndarray]] = []
-        while self._queue:
-            batch = self._queue[: self.batch_size]
-            self._queue = self._queue[self.batch_size:]
-            n_real = len(batch)
-            while len(batch) < self.batch_size:  # pad with empty queries
-                batch.append(
-                    (np.full(self.n_slots, -1, np.int32),
-                     np.zeros(self.n_slots, np.float32), 0)
-                )
-            pins = jnp.asarray(np.stack([b[0] for b in batch]))
-            weights = jnp.asarray(np.stack([b[1] for b in batch]))
-            feats = jnp.asarray(np.asarray([b[2] for b in batch], np.int32))
-            self._key, sub = jax.random.split(self._key)
-            t0 = time.perf_counter()
-            scores, ids = self._serve(self.graph, pins, weights, feats, sub)
-            scores.block_until_ready()
-            dt_ms = (time.perf_counter() - t0) * 1e3
-            self.stats.batches += 1
-            self.stats.queries += n_real
-            # per-query latency = batch latency (SPMD lanes are concurrent)
-            self.stats.latencies_ms.extend([dt_ms] * n_real)
-            s_np, i_np = np.asarray(scores), np.asarray(ids)
-            out.extend((s_np[i], i_np[i]) for i in range(n_real))
+    def submit(
+        self,
+        pins: Sequence[int],
+        weights: Sequence[float],
+        user_feat: int = 0,
+        now: Optional[float] = None,
+        req_id: Optional[int] = None,
+    ) -> Optional[int]:
+        """Enqueue one request; returns its request id (None if shed).
+
+        Validates up front: ``len(weights)`` must equal ``len(pins)`` (a
+        mismatch used to either crash with an opaque NumPy broadcast error
+        or silently misalign weights to the wrong pins), and the pin count
+        must fit a bucket (no silent truncation).  Stamps the enqueue time
+        for the wait component of latency; ``now`` injects a logical clock
+        (the open-loop traffic harness), defaulting to wall time.
+        ``req_id`` overrides the auto-assigned id — the id seeds the
+        request's PRNG stream (``fold_in``), so a workload replayed with
+        the same ids gets bit-identical walks regardless of batching.
+        """
+        if len(weights) != len(pins):
+            raise ValueError(
+                f"query has {len(pins)} pins but {len(weights)} weights; "
+                "one weight per pin required (mismatched lengths silently "
+                "misalign weights to the wrong pins)"
+            )
+        n = len(pins)
+        _, slots = self._route(n)
+        if now is None:
+            now = time.perf_counter()
+        if req_id is None:
+            req_id = self._seq
+            self._seq += 1
+        else:
+            self._seq = max(self._seq, req_id + 1)
+        queue = self._queues[slots]
+        if (self.max_queue_per_bucket is not None
+                and len(queue) >= self.max_queue_per_bucket):
+            self.stats.dropped += 1
+            return None
+        qp = np.full(slots, -1, np.int32)
+        qw = np.zeros(slots, np.float32)
+        qp[:n] = np.asarray(pins, np.int32)
+        qw[:n] = np.asarray(weights, np.float32)
+        queue.append(_Pending(
+            req_id=req_id, pins=qp, weights=qw, feat=int(user_feat),
+            key=jax.random.fold_in(self._key, req_id), t_enqueue=now,
+        ))
+        return req_id
+
+    # -- batch formation ------------------------------------------------------
+    def _dispatch(self, batch_size: int, slots: int, now: float) -> None:
+        """Form one batch from a bucket queue and enqueue the jitted call.
+
+        Async: no ``block_until_ready`` here — the device round-trip is
+        paid in ``harvest``, off the intake path."""
+        queue = self._queues[slots]
+        entries = queue[:batch_size]
+        del queue[:batch_size]
+        n_real = len(entries)
+        pad = batch_size - n_real
+        pins = np.full((batch_size, slots), -1, np.int32)
+        weights = np.zeros((batch_size, slots), np.float32)
+        feats = np.zeros((batch_size,), np.int32)
+        for i, e in enumerate(entries):
+            pins[i] = e.pins
+            weights[i] = e.weights
+            feats[i] = e.feat
+        keys = jnp.stack(
+            [e.key for e in entries] + [self._pad_key] * pad
+        )
+        t_wall = time.perf_counter()
+        scores, ids = self._serve(
+            self.graph, jnp.asarray(pins), jnp.asarray(weights),
+            jnp.asarray(feats), keys,
+        )
+        self._inflight.append(_InFlight(
+            entries=entries, scores=scores, ids=ids,
+            generation=self.stats.graph_generation,
+            t_dispatch=now, t_dispatch_wall=t_wall,
+            batch_seq=self._batch_seq,
+        ))
+        self._batch_seq += 1
+        self.stats.batches += 1
+
+    def _deadline_of(self, entry: _Pending) -> float:
+        """Logical dispatch deadline of one queued request.  The SINGLE
+        float expression shared by ``pump`` and ``next_deadline`` — a
+        caller pumping at exactly ``next_deadline()`` must trigger the
+        dispatch (two differently-rounded formulations would make the
+        returned deadline land an ulp short of its own check)."""
+        return entry.t_enqueue + self.max_wait_ms / 1e3
+
+    def pump(self, now: Optional[float] = None) -> int:
+        """Deadline-aware batch formation: dispatch every FULL bucket, and
+        every bucket whose oldest request has waited >= ``max_wait_ms``
+        (dispatch on max-wait OR full, whichever first).  Returns the
+        number of batches dispatched.  Non-blocking."""
+        if now is None:
+            now = time.perf_counter()
+        dispatched = 0
+        for batch_size, slots in self._buckets:
+            queue = self._queues[slots]
+            while len(queue) >= batch_size:
+                self._dispatch(batch_size, slots, now)
+                dispatched += 1
+            if queue and now >= self._deadline_of(queue[0]):
+                self._dispatch(batch_size, slots, now)
+                dispatched += 1
+        return dispatched
+
+    def next_deadline(self) -> Optional[float]:
+        """Logical time at which the oldest queued request hits its
+        max-wait deadline (None when every queue is empty) — the traffic
+        harness uses this to fire deadline dispatches deterministically."""
+        heads = [
+            self._deadline_of(q[0]) for q in self._queues.values() if q
+        ]
+        return min(heads) if heads else None
+
+    def pending(self) -> int:
+        """Requests queued but not yet dispatched."""
+        return sum(len(q) for q in self._queues.values())
+
+    # -- completion path ------------------------------------------------------
+    def harvest(self) -> List[QueryResult]:
+        """Collect every in-flight batch (blocking) and account latency.
+
+        Per query: ``wait = dispatch - enqueue`` on the logical clock,
+        ``compute = harvest_wall - dispatch_wall`` (host dispatch enqueue
+        + device compute + transfer), ``latency = wait + compute``.
+        Results carry the generation their batch dispatched under.
+        """
+        out: List[QueryResult] = []
+        for fl in self._inflight:
+            jax.block_until_ready(fl.scores)
+            t_done_wall = time.perf_counter()
+            compute_ms = (t_done_wall - fl.t_dispatch_wall) * 1e3
+            s_np, i_np = np.asarray(fl.scores), np.asarray(fl.ids)
+            for i, e in enumerate(fl.entries):
+                wait_ms = max(0.0, (fl.t_dispatch - e.t_enqueue) * 1e3)
+                out.append(QueryResult(
+                    req_id=e.req_id, scores=s_np[i], ids=i_np[i],
+                    generation=fl.generation, wait_ms=wait_ms,
+                    compute_ms=compute_ms, batch_seq=fl.batch_seq,
+                ))
+                self.stats.queries += 1
+                self.stats.wait_ms.append(wait_ms)
+                self.stats.compute_ms.append(compute_ms)
+                self.stats.latencies_ms.append(wait_ms + compute_ms)
+        self._inflight = []
+        return out
+
+    def flush(self, now: Optional[float] = None) -> List[QueryResult]:
+        """Serve every queued request synchronously (padding partials).
+
+        The single-bucket oracle path: with one bucket this reproduces the
+        historical flush loop — batches formed in submit order — and the
+        bucketed deadline path is verified score-for-score identical to it
+        (``traffic_buckets_agree``).  Results return in request-id order
+        and still unpack as ``(scores, ids)`` pairs.
+        """
+        if now is None:
+            now = time.perf_counter()
+        for batch_size, slots in self._buckets:
+            while self._queues[slots]:
+                self._dispatch(batch_size, slots, now)
+        out = self.harvest()
+        out.sort(key=lambda r: r.req_id)
         return out
 
     # -- graph swap (the daily reload, §3.3) -----------------------------------
     def swap_graph(self, new_graph) -> None:
+        """Swap in the freshly built daily graph, under load.
+
+        Increments the generation exactly once; batches already in flight
+        (or already dispatched) keep serving from the OLD graph handle —
+        the swap never blocks serving, and their results report the old
+        generation.  A same-shape plain-graph swap reuses the compiled
+        serve programs (the graph is a jit ARGUMENT, not a closure)."""
         self.graph = new_graph
         self.stats.graph_generation += 1
         self._build_serve()

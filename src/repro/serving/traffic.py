@@ -1,0 +1,267 @@
+"""Open-loop traffic for the Pixie server (paper §3.3: 1,200 QPS / 60 ms p99).
+
+An OPEN-LOOP load generator offers requests at arrival times drawn from a
+seeded Poisson process — arrivals never wait for the server, so queueing
+delay shows up honestly in the latency distribution instead of being
+absorbed by a closed loop's back-pressure ("Related Pins": freshness and
+tail latency, not batch throughput, are the production objective).
+
+The harness drives ``PixieServer`` on a deterministic VIRTUAL clock:
+
+  * arrivals and batch-formation deadlines advance logical time (so the
+    arrival pattern, the bucket composition of every batch, and therefore
+    every query's walk are bit-reproducible from the seed);
+  * per-batch COMPUTE is wall-clock measured around the real jitted call,
+    then folded into a single-executor queueing model — batch k's service
+    starts at ``max(dispatch_k, done_{k-1})`` — which is what turns
+    offered-QPS sweeps into the classic hockey-stick latency curve even
+    though the host serves batches one at a time;
+  * per-query latency = queue wait (arrival -> dispatch) + executor queue
+    (dispatch -> service start) + compute, reported with the split;
+  * load shedding: an arrival finding the executor backlogged past
+    ``max_backlog_s`` is DROPPED and counted — drop rate is a first-class
+    output, never silent.
+
+On CPU hosts the compute term measures interpret-mode plumbing, so the
+absolute curve is only meaningful on TPU hosts; the shape (wait exploding
+as offered load approaches capacity) and the ``traffic_buckets_agree``
+verdict (bucketed deadline-aware serving bit-identical to the
+single-bucket flush oracle) are host-independent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.server import PixieServer, QueryResult
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One offered request: arrival time plus the query payload."""
+
+    req_id: int
+    t_arrival: float            # seconds since epoch start
+    pins: Tuple[int, ...]
+    weights: Tuple[float, ...]
+    user_feat: int
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenLoopConfig:
+    """Seeded Poisson workload shape.
+
+    ``offered_qps`` sets the exponential inter-arrival rate; query sizes
+    draw uniformly from ``1..max_pins`` (mixed sizes exercise bucket
+    routing), weights decay from 1.0 with seeded jitter, feats draw from
+    ``n_feats``.  Same seed -> same arrivals, payloads, and (via request
+    ids seeding the server's per-query ``fold_in`` streams) same walks.
+    """
+
+    offered_qps: float
+    n_requests: int
+    seed: int = 0
+    max_pins: int = 8
+    n_feats: int = 4
+
+
+def poisson_requests(
+    candidate_pins: np.ndarray, cfg: OpenLoopConfig
+) -> List[Request]:
+    """Draw the open-loop arrival schedule and query payloads."""
+    if cfg.offered_qps <= 0:
+        raise ValueError(f"offered_qps must be > 0, got {cfg.offered_qps}")
+    if cfg.max_pins > len(candidate_pins):
+        raise ValueError(
+            f"max_pins={cfg.max_pins} exceeds the {len(candidate_pins)} "
+            "candidate pins to sample from"
+        )
+    rng = np.random.default_rng(cfg.seed)
+    gaps = rng.exponential(1.0 / cfg.offered_qps, size=cfg.n_requests)
+    arrivals = np.cumsum(gaps)
+    out: List[Request] = []
+    for i in range(cfg.n_requests):
+        k = int(rng.integers(1, cfg.max_pins + 1))
+        pins = rng.choice(candidate_pins, size=k, replace=False)
+        # weight profile: leading pin strongest, seeded decay after it
+        weights = np.maximum(
+            1.0 * (0.6 ** np.arange(k)) * rng.uniform(0.5, 1.0, size=k),
+            0.05,
+        )
+        out.append(Request(
+            req_id=i,
+            t_arrival=float(arrivals[i]),
+            pins=tuple(int(p) for p in pins),
+            weights=tuple(float(w) for w in weights),
+            user_feat=int(rng.integers(0, cfg.n_feats)),
+        ))
+    return out
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    """Aggregate + per-request accounting of one open-loop run."""
+
+    offered_qps: float
+    n_offered: int
+    n_served: int
+    n_dropped: int
+    makespan_s: float
+    latency_ms: np.ndarray        # (n_served,) wait + exec queue + compute
+    wait_ms: np.ndarray           # batch-formation wait
+    queue_ms: np.ndarray          # executor backlog wait
+    compute_ms: np.ndarray        # measured device round-trip
+    results: Dict[int, QueryResult]  # req_id -> result (scores/ids/gen)
+    generations: Dict[int, int]   # req_id -> graph generation served under
+
+    @property
+    def drop_rate(self) -> float:
+        return self.n_dropped / max(self.n_offered, 1)
+
+    @property
+    def achieved_qps(self) -> float:
+        return self.n_served / max(self.makespan_s, 1e-9)
+
+    def percentile(self, p: float) -> float:
+        if self.latency_ms.size == 0:
+            return 0.0
+        return float(np.percentile(self.latency_ms, p))
+
+    def summary(self) -> Dict:
+        return {
+            "offered_qps": round(self.offered_qps, 3),
+            "achieved_qps": round(self.achieved_qps, 3),
+            "n_offered": self.n_offered,
+            "n_served": self.n_served,
+            "n_dropped": self.n_dropped,
+            "drop_rate": round(self.drop_rate, 4),
+            "p50_ms": round(self.percentile(50), 3),
+            "p95_ms": round(self.percentile(95), 3),
+            "p99_ms": round(self.percentile(99), 3),
+            "mean_wait_ms": round(float(self.wait_ms.mean()), 3)
+            if self.wait_ms.size else 0.0,
+            "mean_queue_ms": round(float(self.queue_ms.mean()), 3)
+            if self.queue_ms.size else 0.0,
+            "mean_compute_ms": round(float(self.compute_ms.mean()), 3)
+            if self.compute_ms.size else 0.0,
+        }
+
+
+def run_open_loop(
+    server: PixieServer,
+    requests: Sequence[Request],
+    max_backlog_s: Optional[float] = None,
+    swap_at: Optional[int] = None,
+    swap_graph=None,
+) -> TrafficReport:
+    """Offer ``requests`` to ``server`` on the virtual clock.
+
+    ``max_backlog_s`` bounds the executor backlog an arrival may join
+    (open-loop load shedding; ``None`` admits everything — required for
+    the agreement verdict, where every request must be served).
+    ``swap_at``/``swap_graph`` exercise the daily graph reload (§3.3)
+    UNDER load: after offering ``swap_at`` requests the new graph swaps
+    in; requests dispatched before the swap carry the old generation.
+    """
+    requests = sorted(requests, key=lambda r: r.t_arrival)
+    busy_until = 0.0
+    harvested: List[QueryResult] = []
+    dispatch_time: Dict[int, float] = {}  # batch_seq -> logical dispatch t
+    n_dropped = 0
+
+    def _account():
+        """Harvest any newly dispatched batches and note dispatch times."""
+        for fl in server._inflight:
+            dispatch_time[fl.batch_seq] = fl.t_dispatch
+        harvested.extend(server.harvest())
+
+    for i, req in enumerate(requests):
+        if swap_at is not None and i == swap_at:
+            if swap_graph is None:
+                raise ValueError("swap_at set but no swap_graph given")
+            server.swap_graph(swap_graph)
+        # fire every deadline that ripens before this arrival, in order
+        while True:
+            d = server.next_deadline()
+            if d is None or d > req.t_arrival:
+                break
+            server.pump(now=d)
+            _account()
+        if max_backlog_s is not None and (
+            busy_until - req.t_arrival > max_backlog_s
+        ):
+            n_dropped += 1
+            server.stats.dropped += 1
+            continue
+        server.submit(list(req.pins), list(req.weights), req.user_feat,
+                      now=req.t_arrival, req_id=req.req_id)
+        server.pump(now=req.t_arrival)  # full-bucket dispatches
+        _account()
+        # fold harvested compute into the executor model as batches land
+        busy_until = _advance_executor(harvested, dispatch_time, busy_until)
+
+    # drain: remaining partials dispatch at their deadlines
+    while server.pending():
+        d = server.next_deadline()
+        server.pump(now=d)
+        _account()
+    busy_until = _advance_executor(harvested, dispatch_time, busy_until)
+
+    # executor queueing model over the full run (batch_seq = dispatch order)
+    per_batch: Dict[int, List[QueryResult]] = {}
+    for r in harvested:
+        per_batch.setdefault(r.batch_seq, []).append(r)
+    busy = 0.0
+    lat, wait, queue, comp = [], [], [], []
+    results: Dict[int, QueryResult] = {}
+    generations: Dict[int, int] = {}
+    for seq in sorted(per_batch):
+        rs = per_batch[seq]
+        t_d = dispatch_time[seq]
+        start = max(t_d, busy)
+        compute_s = rs[0].compute_ms / 1e3
+        done = start + compute_s
+        busy = done
+        for r in rs:
+            t_arr = t_d - r.wait_ms / 1e3
+            lat.append((done - t_arr) * 1e3)
+            wait.append(r.wait_ms)
+            queue.append((start - t_d) * 1e3)
+            comp.append(r.compute_ms)
+            results[r.req_id] = r
+            generations[r.req_id] = r.generation
+
+    makespan = max(
+        [busy] + [r.t_arrival for r in requests[-1:]]
+    ) if requests else 0.0
+    return TrafficReport(
+        offered_qps=(
+            len(requests) / max(requests[-1].t_arrival, 1e-9)
+            if requests else 0.0
+        ),
+        n_offered=len(requests),
+        n_served=len(results),
+        n_dropped=n_dropped,
+        makespan_s=makespan,
+        latency_ms=np.asarray(lat),
+        wait_ms=np.asarray(wait),
+        queue_ms=np.asarray(queue),
+        compute_ms=np.asarray(comp),
+        results=results,
+        generations=generations,
+    )
+
+
+def _advance_executor(harvested, dispatch_time, busy_until: float) -> float:
+    """Current executor-free time given everything harvested so far."""
+    busy = 0.0
+    seen: Dict[int, float] = {}
+    for r in harvested:
+        seen.setdefault(r.batch_seq, r.compute_ms / 1e3)
+    for seq in sorted(seen):
+        start = max(dispatch_time[seq], busy)
+        busy = start + seen[seq]
+    return max(busy_until, busy)

@@ -1,0 +1,318 @@
+"""Continuous-traffic serving: bucketed deadline-aware batch formation,
+the open-loop Poisson harness, the request-path bugfix regressions, and
+the graph swap under in-flight traffic.
+
+The four bugfix regression tests each pin behavior that FAILED on the old
+request path: silent query truncation, unvalidated pins/weights length
+mismatch, unbounded latency-list growth, and queue-wait time excluded
+from reported latency."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import service, walk as walk_lib
+from repro.graphs.synthetic import small_test_graph, top_degree_pins
+from repro.serving.server import LatencyRing, PixieServer, ServerStats
+from repro.serving.traffic import (
+    OpenLoopConfig, poisson_requests, run_open_loop,
+)
+
+
+def _cfg(**kw):
+    base = dict(n_steps=1_000, n_walkers=64, chunk_steps=8, top_k=20,
+                n_p=60, n_v=3)
+    base.update(kw)
+    return walk_lib.WalkConfig(**base)
+
+
+# -- bugfix regressions ------------------------------------------------------
+
+
+def test_submit_rejects_oversized_query():
+    """Old path: ``n = min(len(pins), n_slots)`` silently DROPPED pins past
+    n_slots, skewing every Eq. 2 step budget downstream.  Now an
+    oversized query must raise (single bucket) or route to a larger
+    bucket (multi-bucket) — never truncate."""
+    sg = small_test_graph()
+    server = PixieServer(sg.graph, _cfg(), batch_size=2, n_slots=4)
+    with pytest.raises(ValueError, match="6 pins.*4 slots"):
+        server.submit(list(range(6)), [1.0] * 6)
+    assert server.pending() == 0  # nothing partially enqueued
+
+    # multi-bucket: the same query routes to a bucket that FITS it
+    bucketed = PixieServer(
+        sg.graph, _cfg(), buckets=[(2, 4), (2, 8)]
+    )
+    assert bucketed.submit(list(range(6)), [1.0] * 6) is not None
+    assert len(bucketed._queues[8]) == 1  # landed in the 8-slot bucket
+    with pytest.raises(ValueError, match="9 pins.*8 slots"):
+        bucketed.submit(list(range(9)), [1.0] * 9)
+
+
+def test_submit_rejects_mismatched_weights():
+    """Old path: ``len(weights) != len(pins)`` either crashed with an
+    opaque NumPy broadcast error (fewer weights) or silently misaligned
+    truncated weights to the wrong pins (more weights)."""
+    sg = small_test_graph()
+    server = PixieServer(sg.graph, _cfg(), batch_size=2, n_slots=4)
+    with pytest.raises(ValueError, match="2 pins but 1 weights"):
+        server.submit([1, 2], [1.0])
+    with pytest.raises(ValueError, match="2 pins but 3 weights"):
+        server.submit([1, 2], [1.0, 0.5, 0.3])
+    assert server.pending() == 0
+
+
+def test_latency_ring_is_bounded_and_percentile_correct():
+    """Old ``ServerStats.latencies_ms`` was an unbounded list — a
+    long-lived replica leaked memory with every query.  The ring keeps
+    only the newest ``capacity`` samples and percentiles stay exact over
+    that window."""
+    ring = LatencyRing(capacity=8)
+    ring.extend(float(i) for i in range(100))
+    assert len(ring) == 8
+    np.testing.assert_array_equal(ring.values(),
+                                  np.arange(92, 100, dtype=np.float64))
+    stats = ServerStats(capacity=8)
+    stats.latencies_ms.extend(float(i) for i in range(100))
+    assert stats.percentile(50) == pytest.approx(
+        np.percentile(np.arange(92, 100), 50)
+    )
+    # the server-level bound: heavy traffic never grows stats memory
+    sg = small_test_graph()
+    server = PixieServer(sg.graph, _cfg(n_steps=256, n_walkers=32),
+                         batch_size=2, n_slots=2, stats_capacity=4)
+    qs = top_degree_pins(sg, 2)
+    for _ in range(6):
+        server.submit([int(qs[0])], [1.0])
+    server.flush()
+    assert server.stats.queries == 6
+    assert len(server.stats.latencies_ms) == 4
+    assert len(server.stats.wait_ms) == 4
+    with pytest.raises(ValueError, match="capacity"):
+        LatencyRing(capacity=0)
+
+
+def test_latency_includes_queue_wait():
+    """Old ``flush()`` measured only the jitted call: a request that sat
+    queued for 100 ms reported the same latency as one served instantly.
+    Enqueue time is now stamped in ``submit`` and wait is reported
+    separately from compute, with latency = wait + compute."""
+    sg = small_test_graph()
+    server = PixieServer(sg.graph, _cfg(n_steps=256, n_walkers=32),
+                         batch_size=2, n_slots=2)
+    qs = top_degree_pins(sg, 2)
+    server.submit([int(qs[0])], [1.0], now=0.0)
+    server.submit([int(qs[1])], [1.0], now=0.040)
+    out = server.flush(now=0.100)  # both dispatch 100 ms after t=0
+    assert len(out) == 2
+    assert out[0].wait_ms == pytest.approx(100.0)
+    assert out[1].wait_ms == pytest.approx(60.0)
+    for r in out:
+        assert r.compute_ms > 0.0
+        assert r.latency_ms == pytest.approx(r.wait_ms + r.compute_ms)
+    assert server.stats.percentile(50, which="wait") == pytest.approx(80.0)
+    # the aggregate latency percentile includes the wait term
+    assert server.stats.percentile(99) > server.stats.percentile(
+        99, which="compute"
+    )
+
+
+# -- graph swap under in-flight traffic --------------------------------------
+
+
+def test_swap_graph_under_inflight_traffic_generations_and_no_retrace():
+    """Generation moves exactly once per swap; results whose batch
+    dispatched BEFORE the swap carry the old generation even when
+    harvested after it; and a same-shape plain-graph swap reuses the
+    compiled serve program (no retrace)."""
+    sg = small_test_graph()
+    server = PixieServer(sg.graph, _cfg(n_steps=512, n_walkers=64),
+                         batch_size=2, n_slots=2)
+    qs = top_degree_pins(sg, 4)
+    server.submit([int(qs[0])], [1.0], now=0.0)
+    server.submit([int(qs[1])], [1.0], now=0.0)
+    server.pump(now=0.0)              # full bucket: dispatched, in flight
+    assert server.pending() == 0
+
+    compiles_before = server._plain_serve._cache_size()
+    server.swap_graph(sg.graph)       # same-shape daily swap, under load
+    assert server.stats.graph_generation == 1
+
+    # post-swap traffic dispatches under the NEW generation
+    server.submit([int(qs[2])], [1.0], now=1.0)
+    server.submit([int(qs[3])], [1.0], now=1.0)
+    server.pump(now=1.0)
+    results = server.harvest()
+    assert len(results) == 4
+    by_req = {r.req_id: r for r in results}
+    assert by_req[0].generation == 0 and by_req[1].generation == 0
+    assert by_req[2].generation == 1 and by_req[3].generation == 1
+    # same shape, graph passed as a jit argument: NO recompilation
+    assert server._plain_serve._cache_size() == compiles_before
+
+    server.swap_graph(sg.graph)
+    assert server.stats.graph_generation == 2  # exactly once per swap
+
+
+# -- bucketed serving vs the flush oracle ------------------------------------
+
+
+def test_bucketed_serving_matches_single_bucket_flush_oracle():
+    """The tentpole contract (the ``traffic_buckets_agree`` verdict, in
+    miniature): deadline-aware multi-bucket serving returns bit-identical
+    scores AND ids to the single-bucket flush() oracle on the same
+    requests — per-request fold_in RNG streams make the walk independent
+    of batch composition and bucket shape."""
+    sg = small_test_graph()
+    cfg = _cfg(n_steps=512, n_walkers=64)
+    candidates = top_degree_pins(sg, 12).astype(np.int32)
+    workload = poisson_requests(candidates, OpenLoopConfig(
+        offered_qps=300.0, n_requests=10, seed=3, max_pins=4,
+    ))
+
+    bucketed = PixieServer(
+        sg.graph, cfg, seed=5, buckets=[(3, 2), (2, 4)], max_wait_ms=3.0,
+    )
+    report = run_open_loop(bucketed, workload)
+    assert report.n_served == len(workload)
+    assert bucketed.stats.batches >= 3  # really split across shapes
+
+    oracle = PixieServer(sg.graph, cfg, batch_size=4, n_slots=4, seed=5)
+    for req in workload:
+        oracle.submit(list(req.pins), list(req.weights), req.user_feat,
+                      req_id=req.req_id)
+    oracle_out = {r.req_id: r for r in oracle.flush()}
+
+    for req in workload:
+        b, o = report.results[req.req_id], oracle_out[req.req_id]
+        np.testing.assert_array_equal(b.scores, o.scores)
+        np.testing.assert_array_equal(b.ids, o.ids)
+
+
+def test_bucket_routing_and_deadline_dispatch():
+    """Dispatch fires on max-wait OR full bucket, whichever first."""
+    sg = small_test_graph()
+    server = PixieServer(
+        sg.graph, _cfg(n_steps=256, n_walkers=32),
+        buckets=[(2, 2), (2, 4)], max_wait_ms=10.0,
+    )
+    qs = top_degree_pins(sg, 4)
+    # one small query: not full, deadline not reached -> stays queued
+    server.submit([int(qs[0])], [1.0], now=0.0)
+    assert server.pump(now=0.005) == 0
+    assert server.pending() == 1
+    assert server.next_deadline() == pytest.approx(0.010)
+    # deadline reached -> partial batch dispatches
+    assert server.pump(now=server.next_deadline()) == 1
+    assert server.pending() == 0
+    assert len(server.harvest()) == 1
+    # full bucket dispatches immediately, before any deadline
+    server.submit([int(qs[0])], [1.0], now=1.0)
+    server.submit([int(qs[1]), int(qs[2]), int(qs[3])], [1.0, 0.5, 0.2],
+                  now=1.0)  # 3 pins -> the 4-slot bucket
+    server.submit([int(qs[1])], [1.0], now=1.0)
+    assert server.pump(now=1.0) == 1   # 2-slot bucket full; 4-slot waits
+    assert server.pending() == 1
+    results = server.harvest()
+    assert len(results) == 2
+    assert all(len(r.scores) == server.cfg.top_k for r in results)
+
+
+def test_open_loop_drop_accounting_and_admission_bound():
+    """Open-loop load shedding is counted, never silent: a backlogged
+    executor drops arrivals (harness), and a bounded bucket queue sheds
+    at submit (server)."""
+    sg = small_test_graph()
+    candidates = top_degree_pins(sg, 8).astype(np.int32)
+    # absurd offered load + tiny backlog bound: drops must happen
+    workload = poisson_requests(candidates, OpenLoopConfig(
+        offered_qps=100_000.0, n_requests=12, seed=0, max_pins=2,
+    ))
+    server = PixieServer(sg.graph, _cfg(n_steps=256, n_walkers=32),
+                         buckets=[(2, 2)], max_wait_ms=1.0)
+    report = run_open_loop(server, workload, max_backlog_s=1e-5)
+    assert report.n_dropped > 0
+    assert report.n_served + report.n_dropped == report.n_offered
+    assert report.drop_rate == pytest.approx(
+        report.n_dropped / report.n_offered
+    )
+    assert server.stats.dropped == report.n_dropped
+
+    # server-side admission bound
+    bounded = PixieServer(sg.graph, _cfg(n_steps=256, n_walkers=32),
+                          buckets=[(4, 2)], max_queue_per_bucket=2)
+    ids = [bounded.submit([int(candidates[0])], [1.0]) for _ in range(4)]
+    assert ids[:2] == [0, 1] and ids[2:] == [None, None]
+    assert bounded.stats.dropped == 2
+
+
+def test_poisson_workload_is_seeded_and_validates():
+    candidates = np.arange(100, dtype=np.int32)
+    cfg = OpenLoopConfig(offered_qps=50.0, n_requests=8, seed=11, max_pins=4)
+    a = poisson_requests(candidates, cfg)
+    b = poisson_requests(candidates, cfg)
+    assert [r.t_arrival for r in a] == [r.t_arrival for r in b]
+    assert [r.pins for r in a] == [r.pins for r in b]
+    assert all(1 <= len(r.pins) <= 4 for r in a)
+    assert all(len(r.weights) == len(r.pins) for r in a)
+    with pytest.raises(ValueError, match="offered_qps"):
+        poisson_requests(candidates, OpenLoopConfig(
+            offered_qps=0.0, n_requests=1))
+    with pytest.raises(ValueError, match="max_pins"):
+        poisson_requests(np.arange(2, dtype=np.int32), OpenLoopConfig(
+            offered_qps=1.0, n_requests=1, max_pins=4))
+
+
+# -- serve_batch per-query key plumbing --------------------------------------
+
+
+def test_serve_batch_per_query_keys_match_split_keys():
+    """A (batch,) key array must reproduce exactly what a scalar key's
+    ``jax.random.split`` streams produce — and a wrong-length key array
+    must fail loudly."""
+    import jax.numpy as jnp
+
+    sg = small_test_graph()
+    g = sg.graph
+    qs = top_degree_pins(sg, 4)
+    pins = jnp.asarray(np.asarray(qs).reshape(2, 2), jnp.int32)
+    weights = jnp.full((2, 2), 0.8, jnp.float32)
+    feats = jnp.zeros((2,), jnp.int32)
+    cfg = _cfg(n_steps=512, n_walkers=64)
+    key = jax.random.key(9)
+    s_scalar, i_scalar = service.serve_batch(g, pins, weights, feats, key, cfg)
+    s_keys, i_keys = service.serve_batch(
+        g, pins, weights, feats, jax.random.split(key, 2), cfg
+    )
+    np.testing.assert_array_equal(np.asarray(s_scalar), np.asarray(s_keys))
+    np.testing.assert_array_equal(np.asarray(i_scalar), np.asarray(i_keys))
+    with pytest.raises(ValueError, match="3 keys for a batch of 2"):
+        service.serve_batch(
+            g, pins, weights, feats, jax.random.split(key, 3), cfg
+        )
+
+
+def test_query_walk_invariant_to_bucket_slot_padding():
+    """The property bucket routing leans on: padding a query into a wider
+    n_slots shape (zero-weight slots) never changes its walk."""
+    import jax.numpy as jnp
+
+    sg = small_test_graph()
+    qs = top_degree_pins(sg, 2)
+    cfg = _cfg(n_steps=512, n_walkers=64)
+    key = jax.random.fold_in(jax.random.key(1), 42)
+
+    outs = []
+    for n_slots in (2, 8):
+        qp = np.full(n_slots, -1, np.int32)
+        qw = np.zeros(n_slots, np.float32)
+        qp[:2] = [int(qs[0]), int(qs[1])]
+        qw[:2] = [1.0, 0.6]
+        s, i, _, _ = walk_lib.recommend_with_stats(
+            sg.graph, jnp.asarray(qp), jnp.asarray(qw),
+            jnp.asarray(0, jnp.int32), key, cfg,
+        )
+        outs.append((np.asarray(s), np.asarray(i)))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])

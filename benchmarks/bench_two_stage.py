@@ -1,0 +1,254 @@
+"""Fused two-stage retrieval -> ranking sweep: batch x walk backend at
+fixed serving capacity, plus the backend-agreement verdict.
+
+This suite exercises the two-stage tentpole on the serving path
+(``service.serve_batch(rank=...)`` / ``serving.recommend.recommend_two_stage``):
+stage 1 retrieves ``n_candidates`` per query with the batch-native fused
+walk engine (or its vmapped XLA oracle twin), stage 2 gathers each
+candidate's graph neighborhood, pools it with the Pallas embedding-bag,
+and scores it under a per-request scenario head — ONE jitted program end
+to end.
+
+The sweep holds SERVER CAPACITY fixed — a constant total walker pool and
+step budget split evenly across the batch (the bench_batchfuse framing) —
+while the ranker config stays constant: stage-2 work scales with
+batch x n_candidates regardless of how stage-1 capacity is split.
+
+The agreement verdict is the regression signal: ``two_stage_backends_agree``
+asserts the fused pallas path == the XLA oracle BIT-identically — stage-1
+candidate ids, final ranker scores, final ordering, and the walk
+telemetry — for every batch {1, 4, 16} x gather mode {scalar, dma}, with
+mixed scenario heads in every batch.  Stage 2's float math is ONE shared
+program for both walk backends (the bag op's lowering is
+platform-defaulted, never backend-derived — kernels/ops.py), so this
+parity is exact by construction; the backends diverge only inside the
+integer-exact walk engines.
+
+Kernel-launch structure is recorded from the jaxpr: a ranked serve step
+keeps a CONSTANT pallas_call count independent of batch size — 2
+walk-engine calls per chunk, plus 2 rank-1-grid embedding bags when
+stage 2 lowers through the kernel (the TPU shape; on CPU the platform
+default is the oracle bag, and the kernel-shaped lowering is traced
+explicitly).  On CPU hosts the kernels run in interpret mode — ms there
+measures plumbing, not kernel speed; regress on the verdict, never on
+the CPU ratios.
+
+Results land in ``results/bench.json`` AND merge into
+``BENCH_serving.json`` as the ``two_stage`` section.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import merge_serving_section, timed
+from repro.core import service, walk as walk_lib
+from repro.graphs.synthetic import SyntheticGraphConfig, generate
+from repro.kernels.introspect import pallas_grids
+from repro.serving import ranker as ranker_lib
+
+BATCHES = (1, 4, 16)
+# fixed server capacity, split evenly across the batch (divisible by all
+# swept batch sizes); the ranker shape below is constant across the sweep
+TOTAL_WALKERS = 192
+TOTAL_STEPS = 6_144
+
+
+def _ranker(g, seed: int) -> ranker_lib.RankRequest:
+    cfg = ranker_lib.RankerConfig(
+        n_items=g.n_pins, d_model=32, n_neighbors=8,
+        n_candidates=32, final_k=10,
+    )
+    return ranker_lib.RankRequest(
+        ranker_lib.init_ranker_params(jax.random.key(seed), cfg), cfg
+    )
+
+
+def _batch(g, seed, batch, n_slots=2):
+    rng = np.random.default_rng(seed)
+    degs = np.asarray(g.p2b.degrees()).astype(np.float64)
+    qs = rng.choice(g.n_pins, size=batch * n_slots, replace=False,
+                    p=degs / degs.sum())
+    pins = qs.reshape(batch, n_slots).astype(np.int32)
+    weights = np.tile(np.asarray([1.0, 0.6], np.float32), (batch, 1))
+    scen = np.arange(batch, dtype=np.int32) % 2  # mixed heads every batch
+    return jnp.asarray(pins), jnp.asarray(weights), jnp.asarray(scen)
+
+
+def _launch_counts(g, rank, pins, weights, feats, scen, cfg) -> Dict:
+    """Kernel-launch structure of one RANKED serve step.
+
+    Two traces: the platform-default program serve_batch actually runs
+    (on CPU stage 2 lowers to the oracle bag — walk calls only), and the
+    kernel-shaped stage 2 (``use_kernel=True`` — what a TPU host lowers),
+    which must add exactly 2 rank-1 bag grids on top of the walk's calls.
+    """
+    ret_cfg = dataclasses.replace(cfg, top_k=rank.cfg.n_candidates)
+
+    def ranked(key):
+        return service.serve_batch(g, pins, weights, feats, key, cfg,
+                                   backend="pallas", rank=rank,
+                                   scenario=scen)
+
+    def ranked_kernel_bags(key):
+        s, i, st, nh = service.serve_batch(
+            g, pins, weights, feats, key, ret_cfg, backend="pallas",
+            with_stats=True,
+        )
+        return ranker_lib.rank_candidates(
+            rank.params, rank.cfg, g, i, s, scen, use_kernel=True
+        )
+
+    dg = pallas_grids(jax.make_jaxpr(ranked)(jax.random.key(0)))
+    kg = pallas_grids(jax.make_jaxpr(ranked_kernel_bags)(jax.random.key(0)))
+    batch = int(pins.shape[0])
+    return {
+        "default_calls": len(dg),
+        "kernel_bag_calls": len(kg),
+        "kernel_bag_grids": [list(x) for x in kg],
+        # the structural claim: no grid anywhere leads with the batch axis
+        "batch_in_grid": batch > 1 and any(
+            x and x[0] == batch for x in list(dg) + list(kg)
+        ),
+    }
+
+
+def _sweep(seed: int) -> Dict:
+    sg = generate(SyntheticGraphConfig(
+        n_pins=1_000, n_boards=100, n_topics=8, n_langs=2, seed=seed
+    ))
+    g = sg.graph
+    rank = _ranker(g, seed + 1)
+    key = jax.random.key(seed)
+
+    sweep = []
+    agree = True
+    for batch in BATCHES:
+        cfg = walk_lib.WalkConfig(
+            n_steps=TOTAL_STEPS // batch, n_walkers=TOTAL_WALKERS // batch,
+            chunk_steps=8, top_k=20, n_p=60, n_v=3,
+        )
+        pins, weights, scen = _batch(g, seed, batch)
+        feats = jnp.zeros((batch,), jnp.int32)
+        row: Dict = {
+            "batch": batch, "n_walkers_per_query": cfg.n_walkers,
+            "n_steps_per_query": cfg.n_steps, "engines": {},
+        }
+        outs = {}
+
+        def two_stage(backend, gather):
+            ecfg = dataclasses.replace(cfg, gather_mode=gather)
+            return jax.jit(lambda k: service.serve_batch(
+                g, pins, weights, feats, k, ecfg, backend=backend,
+                rank=rank, scenario=scen, with_stats=True,
+            ))
+
+        def retrieval_only(backend):
+            ecfg = dataclasses.replace(cfg, top_k=rank.cfg.n_candidates)
+            return jax.jit(lambda k: service.serve_batch(
+                g, pins, weights, feats, k, ecfg, backend=backend,
+            ))
+
+        engines = {
+            "xla": two_stage("xla", "scalar"),
+            "pallas_scalar": two_stage("pallas", "scalar"),
+            "pallas_dma": two_stage("pallas", "dma"),
+        }
+        for label, fn in engines.items():
+            t = timed(fn, key, warmup=1, iters=2)
+            scores, ids, steps, n_high = fn(key)
+            outs[label] = (np.asarray(scores), np.asarray(ids),
+                           np.asarray(steps), np.asarray(n_high))
+            row["engines"][label] = {
+                "batch_ms": round(t["mean_ms"], 2),
+                "per_query_ms": round(t["mean_ms"] / batch, 3),
+            }
+        # stage-1 candidates agree too (not just the final ranking)
+        cand = {
+            label: tuple(np.asarray(x) for x in retrieval_only(b)(key))
+            for label, b in (("xla", "xla"), ("pallas", "pallas"))
+        }
+        row["stage1_agree"] = bool(all(
+            np.array_equal(a, b)
+            for a, b in zip(cand["xla"], cand["pallas"])
+        ))
+        ref = outs["xla"]
+        row["agree"] = bool(row["stage1_agree"] and all(
+            np.array_equal(a, b)
+            for other in ("pallas_scalar", "pallas_dma")
+            for a, b in zip(ref, outs[other])
+        ))
+        agree &= row["agree"]
+        # stage-2 overhead on the fused path, same backend
+        ro = timed(retrieval_only("pallas"), key, warmup=1, iters=2)
+        row["retrieval_only_batch_ms"] = round(ro["mean_ms"], 2)
+        row["launch"] = _launch_counts(
+            g, rank, pins, weights, feats, scen, cfg
+        )
+        sweep.append(row)
+    # structural invariant across the sweep: ranked call counts constant
+    # and batch-free, kernel-shaped stage 2 = walk calls + 2 bags
+    defaults = {r["launch"]["default_calls"] for r in sweep}
+    kernels = {r["launch"]["kernel_bag_calls"] for r in sweep}
+    structure_ok = (
+        len(defaults) == 1 and len(kernels) == 1
+        and next(iter(kernels)) == 4
+        and not any(r["launch"]["batch_in_grid"] for r in sweep)
+    )
+    return {
+        "graph": {"n_pins": g.n_pins, "n_boards": g.n_boards},
+        "config": {
+            "total_walkers": TOTAL_WALKERS, "total_steps": TOTAL_STEPS,
+            "chunk_steps": 8, "n_candidates": rank.cfg.n_candidates,
+            "final_k": rank.cfg.final_k, "d_model": rank.cfg.d_model,
+            "n_neighbors": rank.cfg.n_neighbors,
+            "scenarios": list(rank.cfg.scenarios),
+        },
+        "sweep": sweep, "agree_all": agree,
+        "constant_calls": structure_ok,
+    }
+
+
+def run(seed: int = 0) -> Dict:
+    out: Dict = {
+        "host_backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "two_stage": _sweep(seed),
+    }
+    # verdict: the fused pallas two-stage path == the XLA oracle
+    # bit-identically (candidate ids, ranker scores, final ordering,
+    # telemetry) across batch x gather, AND the lowering keeps a constant
+    # pallas_call count independent of batch size
+    out["two_stage_backends_agree"] = bool(
+        out["two_stage"]["agree_all"] and out["two_stage"]["constant_calls"]
+    )
+    out["wrote"] = merge_serving_section("two_stage", {
+        "two_stage_backends_agree": out["two_stage_backends_agree"],
+        "pallas_interpret": out["pallas_interpret"],
+        "config": out["two_stage"]["config"],
+        "sweep": [
+            {
+                "batch": row["batch"],
+                "agree": row["agree"],
+                "stage1_agree": row["stage1_agree"],
+                "per_query_ms": {
+                    k: v["per_query_ms"] for k, v in row["engines"].items()
+                },
+                "retrieval_only_batch_ms": row["retrieval_only_batch_ms"],
+                "default_calls": row["launch"]["default_calls"],
+                "kernel_bag_calls": row["launch"]["kernel_bag_calls"],
+            }
+            for row in out["two_stage"]["sweep"]
+        ],
+    })
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

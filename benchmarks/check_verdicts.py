@@ -47,6 +47,12 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     # single-bucket flush() oracle score-for-score on the same requests
     # and RNG streams, with the daily graph swap exercised under load
     ("BENCH_serving.json", ("traffic", "traffic_buckets_agree")),
+    # bench_two_stage (merged): fused pallas two-stage path == XLA oracle
+    # bit-identically (stage-1 candidate ids, ranker scores, final
+    # ordering, walk telemetry) across batch {1,4,16} x gather
+    # {scalar,dma} with mixed scenario heads, AND a constant pallas_call
+    # count independent of batch size (jaxpr-pinned)
+    ("BENCH_serving.json", ("two_stage", "two_stage_backends_agree")),
     # bench_earlystop_fused: fused in-VMEM tally == naive recount
     ("results/bench.json", ("earlystop_fused", "counting",
                             "fused_matches_naive")),

@@ -23,7 +23,9 @@ BENCH_SERVING_PATH = os.path.join(
 # sections other suites merge into BENCH_serving.json; bench_smoke (which
 # rewrites the base file) preserves exactly this list, so registering a new
 # merged suite means adding its section name HERE, nowhere else
-MERGED_SECTIONS = ("widepack", "dma", "batchfuse", "sharded", "traffic")
+MERGED_SECTIONS = (
+    "widepack", "dma", "batchfuse", "sharded", "traffic", "two_stage"
+)
 
 
 def merge_serving_section(name: str, payload: Dict) -> str:

@@ -29,6 +29,7 @@ from benchmarks import (
     bench_table1_hitrate,
     bench_table3_bias,
     bench_traffic,
+    bench_two_stage,
     bench_widepack,
 )
 
@@ -58,6 +59,9 @@ SUITES = {
     "traffic": ("Continuous-traffic serving: bucketed deadline-aware "
                 "batches under an open-loop Poisson load generator",
                 bench_traffic.run),
+    "two_stage": ("Fused two-stage retrieval -> ranking: batched walk + "
+                  "embedding-bag neighborhoods + scenario heads",
+                  bench_two_stage.run),
 }
 
 VERDICT_KEYS = (
@@ -68,7 +72,7 @@ VERDICT_KEYS = (
     "both_backends_agree", "fused_matches_naive", "earlystop_backends_agree",
     "widepack_backends_agree", "incremental_matches_full",
     "dma_backends_agree", "batch_engine_agrees", "sharded_engine_agrees",
-    "traffic_buckets_agree",
+    "traffic_buckets_agree", "two_stage_backends_agree",
 )
 
 

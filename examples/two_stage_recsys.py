@@ -1,8 +1,15 @@
-"""Two-stage recommender: Pixie retrieval -> SASRec ranking.
+"""Two-stage recommender: Pixie retrieval -> ranking, both flavors.
 
 This is the composition DESIGN.md §4 describes: the paper's random walk is
-the candidate generator, and an assigned recsys architecture re-ranks —
-the Pinterest production shape (Related Pins, ref [22] of the paper).
+the candidate generator and a ranking model re-orders — the Pinterest
+production shape (Related Pins, ref [22] of the paper).  Two stage-2
+flavors run over the same graph:
+
+  1. a trained SASRec ranker via the callable-ranker stage boundary
+     (``pixie_then_rank`` = walk + ``rank_retrieved``);
+  2. the FUSED serving path (``recommend_two_stage``): batched retrieval +
+     PinSage-style scenario heads (related-pins vs homefeed) in one jitted
+     program — what `PixieServer(ranker=...)` dispatches.
 
   PYTHONPATH=src python examples/two_stage_recsys.py
 """
@@ -15,7 +22,13 @@ from repro.core import walk
 from repro.data.pipeline import SeqRecPipeline
 from repro.graphs.synthetic import SyntheticGraphConfig, generate
 from repro.models import sequential_rec as sr
-from repro.serving.recommend import TwoStageConfig, pixie_then_rank, sasrec_ranker
+from repro.serving import ranker as ranker_lib
+from repro.serving.recommend import (
+    TwoStageConfig,
+    pixie_then_rank,
+    recommend_two_stage,
+    sasrec_ranker,
+)
 from repro.training import optim
 
 def main(
@@ -28,7 +41,9 @@ def main(
 ):
     """Run the two-stage pipeline; parameters shrink it to a smoke test
     (tests/test_examples.py runs a tiny graph + 2 train steps through this
-    same path).  Returns (ranker scores, ranked item ids)."""
+    same path).  Returns (sasrec scores, sasrec item ids, fused scores,
+    fused item ids) — the last two batched (2, final_k), one row per
+    scenario head."""
     # interaction graph for retrieval (pins double as items)
     sg = generate(SyntheticGraphConfig(n_pins=n_pins, n_boards=n_boards,
                                        seed=2))
@@ -72,11 +87,35 @@ def main(
         sg.graph, query_pins, query_weights, jnp.asarray(0, jnp.int32),
         jax.random.key(1), wcfg, ranker, TwoStageConfig(final_k=final_k),
     )
-    print("\ntwo-stage recommendations (walk-retrieved, ranker-ordered):")
+    print("\ntwo-stage recommendations (walk-retrieved, SASRec-ordered):")
     for s, it in zip(np.asarray(scores), np.asarray(items)):
         if np.isfinite(s):
             print(f"  item {it:5d}  ranker score {s:7.3f}")
-    return scores, items
+
+    # fused serving path: same query under both scenario heads in ONE
+    # batched two-stage program (the PixieServer dispatch shape)
+    rcfg = ranker_lib.RankerConfig(
+        n_items=n_pins, d_model=16, n_neighbors=4,
+        n_candidates=min(32, final_k * 2), final_k=final_k,
+    )
+    rank = ranker_lib.RankRequest(
+        ranker_lib.init_ranker_params(jax.random.key(3), rcfg), rcfg
+    )
+    pins_b = jnp.stack([query_pins, query_pins])
+    weights_b = jnp.stack([query_weights, query_weights])
+    feats_b = jnp.zeros((2,), jnp.int32)
+    scenario = jnp.asarray(
+        [rcfg.scenario_id("related_pins"), rcfg.scenario_id("homefeed")],
+        jnp.int32,
+    )
+    fused_scores, fused_items = recommend_two_stage(
+        sg.graph, pins_b, weights_b, feats_b, jax.random.key(1), wcfg,
+        rank, scenario=scenario,
+    )
+    for row, name in enumerate(rcfg.scenarios):
+        head = [int(i) for i in np.asarray(fused_items)[row] if i >= 0][:5]
+        print(f"fused head {name:>13}: top items {head}")
+    return scores, items, fused_scores, fused_items
 
 if __name__ == "__main__":
     main()

@@ -142,6 +142,8 @@ def serve_batch(
     mesh=None,
     axis: str = "model",
     slack: float = 2.0,
+    rank=None,
+    scenario: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """One SPMD serving step: Pixie over a whole query batch.
 
@@ -193,9 +195,32 @@ def serve_batch(
     extra scalar is the routing-overflow drop count, the serving signal
     for raising ``slack`` (drops are bounded Monte Carlo slack, never
     silent).
+
+    ``rank`` (a ``serving.ranker.RankRequest``) turns the step TWO-STAGE:
+    retrieval runs with ``top_k`` overridden to ``rank.cfg.n_candidates``,
+    then `serving.ranker.rank_candidates` re-scores the candidates with
+    the per-request ``scenario`` head (``(batch,)`` int32 head indices;
+    default head 0 for every query) — still one jitted program, still a
+    constant ``pallas_call`` count independent of batch size.  Returned
+    ``(scores, ids)`` are then the ranked ``(batch, final_k)`` results;
+    ``with_stats=True`` keeps appending the stage-1 walk telemetry.
+    Stage 2's float math is ONE shared program for both backends (the bag
+    op's lowering is platform-defaulted, never backend-derived), so ranked
+    serving inherits the walk's bit-parity contract end to end
+    (`two_stage_backends_agree`).  Ranked serving over a ``ShardedGraph``
+    raises: stage 2 gathers candidate neighborhoods from the full CSR,
+    which a node-range shard doesn't hold — rank on an unsharded replica,
+    or rank host-side from the sharded walk's ``(scores, ids)``.
     """
     if backend is not None and backend != cfg.backend:
         cfg = dataclasses.replace(cfg, backend=backend)
+    if scenario is not None and rank is None:
+        raise ValueError(
+            "scenario= selects a ranker head and needs rank=; a bare "
+            "retrieval step has no scenario axis"
+        )
+    if rank is not None and cfg.top_k != rank.cfg.n_candidates:
+        cfg = dataclasses.replace(cfg, top_k=rank.cfg.n_candidates)
     if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) and key.ndim == 1:
         if key.shape[0] != pins.shape[0]:
             raise ValueError(
@@ -209,6 +234,14 @@ def serve_batch(
     from repro.core import distributed as dist_lib
 
     if isinstance(graph, dist_lib.ShardedGraph):
+        if rank is not None:
+            raise ValueError(
+                "serve_batch(rank=...) over a ShardedGraph is not "
+                "supported: stage 2 gathers candidate neighborhoods from "
+                "the full CSR, which a node-range shard doesn't hold; rank "
+                "on an unsharded replica or host-side from the sharded "
+                "walk's (scores, ids)"
+            )
         if mesh is None:
             raise ValueError(
                 "serve_batch over a ShardedGraph needs the device mesh "
@@ -237,6 +270,14 @@ def serve_batch(
 
         scores, ids, steps, n_high = jax.vmap(one)(
             pins, weights, user_feats, keys
+        )
+    if rank is not None:
+        from repro.serving import ranker as ranker_lib
+
+        if scenario is None:
+            scenario = jnp.zeros((pins.shape[0],), jnp.int32)
+        scores, ids = ranker_lib.rank_candidates(
+            rank.params, rank.cfg, graph, ids, scores, scenario
         )
     if with_stats:
         return scores, ids, steps, n_high

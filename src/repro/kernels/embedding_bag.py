@@ -55,6 +55,107 @@ def _embedding_bag_kernel(
     out_ref[...] = out.astype(out_ref.dtype)
 
 
+def _bag_pallas_call(
+    ids2: jax.Array,      # (n, bag) int32, -1 padding
+    weights2: jax.Array,  # (n, bag) f32
+    table: jax.Array,     # (v, d)
+    *,
+    mode: str,
+    block_b: int,
+    interpret: bool,
+) -> jax.Array:
+    """Shared launch: tile flattened bags ``block_b`` rows per grid cell.
+
+    ONE copy of the pad-and-launch plumbing for both the per-bag and the
+    query-batched entry points, wrapping the ONE kernel body
+    (`_embedding_bag_kernel`) — bit-parity between the two public shapes is
+    structural, not re-proved.
+    """
+    n, bag = ids2.shape
+    v, d = table.shape
+    n_pad = -(-n // block_b) * block_b
+    if n_pad != n:
+        ids2 = jnp.concatenate(
+            [ids2, jnp.full((n_pad - n, bag), -1, ids2.dtype)]
+        )
+        weights2 = jnp.concatenate(
+            [weights2, jnp.zeros((n_pad - n, bag), weights2.dtype)]
+        )
+    grid = (n_pad // block_b,)
+    out = pl.pallas_call(
+        functools.partial(
+            _embedding_bag_kernel,
+            block_b=block_b,
+            bag=bag,
+            mean=(mode == "mean"),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, bag), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, bag), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), table.dtype),
+        interpret=interpret,
+    )(ids2.astype(jnp.int32), weights2.astype(jnp.float32), table)
+    return out[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_b", "interpret")
+)
+def embedding_bag_batched(
+    table: jax.Array,                 # (v, d)
+    ids: jax.Array,                   # (b, k, l) int32, -1 padding
+    weights: Optional[jax.Array] = None,  # (b, k, l) f32
+    *,
+    mode: str = "sum",
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Query-batched pooled lookup: (b, k, l) bags -> (b, k, d).
+
+    The serving-path shape of :func:`embedding_bag`: a whole batch of
+    queries' candidate neighborhoods pooled together.  Bags are flattened
+    query-major onto the row axis and tiled ``block_b`` rows per grid cell
+    over a rank-1 grid, so a batched two-stage serve step stays at ONE
+    ``pallas_call`` per bag op regardless of batch size (the two-stage
+    lowering pin in tests/test_two_stage.py counts on this) — batch only
+    changes the number of grid cells, never the number of launches.
+
+    Accumulation inside each bag runs in ascending element order (the
+    kernel's inner fori_loop), the same chain order as
+    ``ref.embedding_bag_batched_ref`` — the tightest parity two separately
+    compiled float programs can promise: the compiler may still contract a
+    mul+add into an FMA on one side and not the other, so kernel-vs-oracle
+    is pinned at tight tolerance, not array_equal.  EXACT cross-backend
+    serving parity (`two_stage_backends_agree`) comes from the layer above:
+    both walk backends share ONE stage-2 bag lowering
+    (ops.embedding_bag_batched's platform default), the same trick that
+    keeps the walk's float scores exact (shared boost over integer counts).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if ids.ndim != 3:
+        raise ValueError(
+            f"embedding_bag_batched wants (batch, bags, bag_size) ids, got "
+            f"shape {ids.shape}; for plain (bags, bag_size) use embedding_bag"
+        )
+    bq, k, bag = ids.shape
+    n = bq * k
+    ids2 = ids.reshape(n, bag)
+    if weights is None:
+        weights2 = jnp.ones((n, bag), jnp.float32)
+    else:
+        weights2 = weights.reshape(n, bag)
+    out = _bag_pallas_call(
+        ids2, weights2, table,
+        mode=mode, block_b=block_b, interpret=interpret,
+    )
+    return out.reshape(bq, k, table.shape[1])
+
+
 @functools.partial(
     jax.jit, static_argnames=("mode", "block_b", "interpret")
 )
@@ -71,33 +172,9 @@ def embedding_bag(
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, bag = ids.shape
-    v, d = table.shape
     if weights is None:
         weights = jnp.ones((b, bag), jnp.float32)
-    b_pad = -(-b // block_b) * block_b
-    if b_pad != b:
-        ids = jnp.concatenate(
-            [ids, jnp.full((b_pad - b, bag), -1, ids.dtype)]
-        )
-        weights = jnp.concatenate(
-            [weights, jnp.zeros((b_pad - b, bag), weights.dtype)]
-        )
-    grid = (b_pad // block_b,)
-    out = pl.pallas_call(
-        functools.partial(
-            _embedding_bag_kernel,
-            block_b=block_b,
-            bag=bag,
-            mean=(mode == "mean"),
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, bag), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, bag), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b_pad, d), table.dtype),
-        interpret=interpret,
-    )(ids.astype(jnp.int32), weights.astype(jnp.float32), table)
-    return out[:b]
+    return _bag_pallas_call(
+        ids, weights, table,
+        mode=mode, block_b=block_b, interpret=interpret,
+    )

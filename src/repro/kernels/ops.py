@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.embedding_bag import embedding_bag as _bag_kernel
+from repro.kernels.embedding_bag import (
+    embedding_bag_batched as _bag_batched_kernel,
+)
 from repro.kernels.visit_counter import visit_counter as _counter_kernel
 from repro.kernels.visit_counter import (
     visit_counter_wide as _counter_wide_kernel,
@@ -326,6 +329,33 @@ def embedding_bag(
     if use_kernel:
         return _bag_kernel(table, ids, weights, mode=mode)
     return ref.embedding_bag_ref(table, ids, weights, mode=mode)
+
+
+def embedding_bag_batched(
+    table: Array,
+    ids: Array,
+    weights: Optional[Array] = None,
+    *,
+    mode: str = "sum",
+    use_kernel: Optional[bool] = None,
+) -> Array:
+    """Query-batched pooled embedding lookup: (b, k, l) bags -> (b, k, d).
+
+    The two-stage serving path's bag op.  `use_kernel` keeps the module's
+    platform default (kernel on TPU, oracle on CPU) and — deliberately —
+    is NOT derived from the walk backend by the serving path: stage 2's
+    float math runs as ONE shared program under both ``backend="xla"`` and
+    ``backend="pallas"``, so `two_stage_backends_agree` is exact by
+    construction (the same design that keeps walk scores exact: shared
+    float boost over bit-identical integer counts).  Kernel-vs-oracle
+    parity is pinned separately at tight tolerance (matched accumulation
+    order; only compiler FMA contraction may differ in the last ulp).
+    """
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    if use_kernel:
+        return _bag_batched_kernel(table, ids, weights, mode=mode)
+    return ref.embedding_bag_batched_ref(table, ids, weights, mode=mode)
 
 
 def decode_attention(

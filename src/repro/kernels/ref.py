@@ -362,6 +362,48 @@ def embedding_bag_ref(
     return pooled
 
 
+def embedding_bag_batched_ref(
+    table: Array,          # (v, d)
+    ids: Array,            # (b, k, l) int32, -1 = padding
+    weights: Optional[Array] = None,  # (b, k, l) f32
+    mode: str = "sum",
+) -> Array:
+    """Query-batched pooled lookup -> (b, k, d): the oracle twin of
+    ``embedding_bag.embedding_bag_batched``.
+
+    Unlike :func:`embedding_bag_ref` (a ``jnp.sum`` reduction XLA may tree
+    up however it likes), this twin accumulates each bag as a chain of
+    adds in ascending element order — the same per-bag operation sequence
+    as the kernel's inner fori_loop, so the only divergence left is
+    compiler FMA contraction (last-ulp), pinned at tight tolerance in
+    tests/test_kernels.py.  The serving path never depends on that last
+    ulp: both walk backends share one bag lowering (see
+    ops.embedding_bag_batched), making `two_stage_backends_agree` exact by
+    construction.
+    """
+    b, k, l = ids.shape
+    d = table.shape[1]
+    acc = jnp.zeros((b, k, d), jnp.float32)
+    wsum = jnp.zeros((b, k), jnp.float32)
+    for j in range(l):
+        idx = ids[:, :, j]
+        valid = idx >= 0
+        safe = jnp.where(valid, idx, 0)
+        rows = jnp.take(table, safe, axis=0)       # (b, k, d)
+        if weights is None:
+            w = jnp.ones((b, k), jnp.float32) * valid.astype(jnp.float32)
+        else:
+            w = (
+                weights[:, :, j].astype(jnp.float32)
+                * valid.astype(jnp.float32)
+            )
+        acc = acc + rows.astype(jnp.float32) * w[..., None]
+        wsum = wsum + w
+    if mode == "mean":
+        acc = acc / jnp.maximum(wsum, 1.0)[..., None]
+    return acc.astype(table.dtype)
+
+
 # ---------------------------------------------------------------------------
 # decode_attention: single-token GQA attention over a (possibly long) KV cache
 # ---------------------------------------------------------------------------

@@ -1,0 +1,235 @@
+"""Stage 2 of the serving path: rank Pixie candidates with scenario heads.
+
+PinSage's key trick (PAPERS.md: "Graph Convolutional Neural Networks for
+Web-Scale Recommender Systems" — same authors, same object graph) is that
+importance-sampled neighborhoods are exactly what a random walk's visit
+counts already are.  The retrieval stage here hands us that for free: the
+walk's boosted per-(query, slot) visit counts ARE an importance-weighted
+sample of the query's graph neighborhood.  Stage 2 therefore needs no
+second sampling pass —
+
+  * the **query embedding** pools the retrieved candidate set itself,
+    weighted by ``sqrt(walk score)`` (undoing the Eq. 3 multi-hit boost
+    back to visit-count scale — PinSage's importance pooling);
+  * each **candidate embedding** pools a deterministic 2-hop fan gathered
+    from the SAME CSR the walk ran on (pin -> board -> pin, Eq. 4's
+    gather arithmetic with fixed instead of random picks);
+  * both pools are one Pallas ``embedding_bag_batched`` call for the whole
+    batch (kernels/embedding_bag.py), so a batched two-stage serve step
+    keeps a constant ``pallas_call`` count regardless of batch size;
+  * a small per-scenario head (PinnerSage motivates heads per surface:
+    related-pins vs homefeed) scores candidates against the query.
+
+Everything float in this module is ONE shared program for both walk
+backends — ``use_kernel`` for the bag op defaults by platform, never by
+walk backend — which is what makes the fused pallas two-stage path
+bit-identical to the XLA oracle (`two_stage_backends_agree`, verdict 15):
+the backends diverge only inside the integer-exact walk engines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PinBoardGraph
+from repro.kernels import ops
+from repro.models import layers
+
+Array = jax.Array
+
+SCENARIOS: Tuple[str, ...] = ("related_pins", "homefeed")
+
+
+@dataclasses.dataclass(frozen=True)
+class RankerConfig:
+    """Shape of the stage-2 ranker.
+
+    ``n_items`` must equal the graph's ``n_pins`` — candidate ids index the
+    item table directly.  ``n_candidates`` is the stage-1 walk top-k fed to
+    the ranker (it overrides ``WalkConfig.top_k`` on the serving path);
+    ``final_k`` of those come back ranked.
+    """
+
+    n_items: int
+    d_model: int = 32
+    n_neighbors: int = 8          # 2-hop fan size per candidate
+    n_candidates: int = 64        # stage-1 top-k handed to stage 2
+    final_k: int = 16
+    scenarios: Tuple[str, ...] = SCENARIOS
+
+    def __post_init__(self):
+        if self.final_k > self.n_candidates:
+            raise ValueError(
+                f"final_k={self.final_k} > n_candidates={self.n_candidates}: "
+                "stage 2 can only return candidates stage 1 retrieved"
+            )
+        if len(set(self.scenarios)) != len(self.scenarios) or not self.scenarios:
+            raise ValueError(
+                f"scenarios must be non-empty and unique, got {self.scenarios}"
+            )
+
+    @property
+    def n_scenarios(self) -> int:
+        return len(self.scenarios)
+
+    def scenario_id(self, name: str) -> int:
+        """Scenario name -> head index; raises on unknown names so a typo'd
+        surface never silently scores with head 0."""
+        try:
+            return self.scenarios.index(name)
+        except ValueError:
+            raise ValueError(
+                f"unknown scenario {name!r}; known: {list(self.scenarios)}"
+            ) from None
+
+
+class RankRequest(NamedTuple):
+    """What `service.serve_batch(rank=...)` needs to run stage 2."""
+
+    params: Dict[str, Any]
+    cfg: RankerConfig
+
+
+def init_ranker_params(key: Array, cfg: RankerConfig) -> Dict[str, Any]:
+    """Item table + one (w_self, w_neigh, w_query, b) head per scenario,
+    stacked on a leading scenario axis so a batch can gather its per-request
+    head with one ``jnp.take``."""
+    kt, k_self, k_neigh, k_query = jax.random.split(key, 4)
+    d = cfg.d_model
+
+    def per_scenario(k: Array) -> Array:
+        ks = jax.random.split(k, cfg.n_scenarios)
+        return jnp.stack([layers.dense_init(kk, (d, d)) for kk in ks])
+
+    return {
+        "items": layers.embed_init(kt, (cfg.n_items, d)),
+        "heads": {
+            "w_self": per_scenario(k_self),
+            "w_neigh": per_scenario(k_neigh),
+            "w_query": per_scenario(k_query),
+            "b": jnp.zeros((cfg.n_scenarios, d), jnp.float32),
+        },
+    }
+
+
+def candidate_neighborhoods(
+    graph: PinBoardGraph,
+    cand_ids: Array,      # (..., k) int32 pin ids, anything under valid=False ignored
+    valid: Array,         # (..., k) bool
+    n_neighbors: int,
+) -> Tuple[Array, Array]:
+    """Deterministic 2-hop fan per candidate from the walk's own CSR.
+
+    Neighbor j of candidate c is ``b2p[p2b[c][j % deg(c)]][(j*31 + 7) %
+    deg(board)]`` — Eq. 4's two gathers with a fixed stride instead of a
+    random draw (the 31/7 stride decorrelates the board-side pick from the
+    pin-side pick so fan-in isn't all copies of one pin).  Pure integer
+    arithmetic: both walk backends compute identical neighborhoods by
+    construction.
+
+    Returns ``(nbr_ids, nbr_w)``, each ``(..., k, n_neighbors)``: ids are
+    -1 where the fan dead-ends (invalid candidate, isolated pin, empty
+    board) and weights are a ``1 / (1 + j)`` position decay zeroed on dead
+    ends — CSR adjacency is feature-sorted, so low j is a stable, not
+    random, subset.
+    """
+    off_dt = graph.p2b.offsets.dtype
+    safe_c = jnp.where(valid, cand_ids, 0).astype(off_dt)
+    start = jnp.take(graph.p2b.offsets, safe_c)
+    deg = (jnp.take(graph.p2b.offsets, safe_c + 1) - start).astype(jnp.int32)
+    j = jnp.arange(n_neighbors, dtype=jnp.int32)          # (L,)
+    bsel = j % jnp.maximum(deg, 1)[..., None]             # (..., k, L)
+    board = jnp.take(graph.p2b.targets, start[..., None] + bsel.astype(off_dt))
+    board_ok = (deg > 0)[..., None]
+    b_local = jnp.where(board_ok, board.astype(jnp.int32) - graph.n_pins, 0)
+    bstart = jnp.take(graph.b2p.offsets, b_local.astype(off_dt))
+    bdeg = (
+        jnp.take(graph.b2p.offsets, b_local.astype(off_dt) + 1) - bstart
+    ).astype(jnp.int32)
+    psel = (j * 31 + 7) % jnp.maximum(bdeg, 1)
+    nbr = jnp.take(graph.b2p.targets, bstart + psel.astype(off_dt))
+    ok = valid[..., None] & board_ok & (bdeg > 0)
+    nbr_ids = jnp.where(ok, nbr.astype(jnp.int32), -1)
+    nbr_w = ok.astype(jnp.float32) / (1.0 + j.astype(jnp.float32))
+    return nbr_ids, nbr_w
+
+
+def rank_candidates(
+    params: Dict[str, Any],
+    cfg: RankerConfig,
+    graph: PinBoardGraph,
+    cand_ids: Array,      # (batch, k) int32 from stage-1 top-k
+    cand_scores: Array,   # (batch, k) f32 boosted walk scores (0 = padding)
+    scenario: Array,      # (batch,) int32 head index per request
+    *,
+    use_kernel: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    """Stage 2: score a batch's retrieved candidates with scenario heads.
+
+    Takes the stage-1 output ``(ids, scores)`` DIRECTLY — this is the stage
+    boundary: callers with precomputed walk stats (a cache, a replayed
+    batch, a different retrieval engine) enter here without re-walking.
+
+    Returns ``(final_scores, final_ids)``, each ``(batch, final_k)``;
+    ids are -1 (and scores -inf) where a query retrieved fewer than
+    ``final_k`` real candidates, mirroring the walk top-k's contract.
+    """
+    if cand_ids.ndim != 2:
+        raise ValueError(
+            f"rank_candidates is batched: want (batch, k) candidate ids, "
+            f"got shape {cand_ids.shape}"
+        )
+    if cfg.n_items != graph.n_pins:
+        raise ValueError(
+            f"ranker table has {cfg.n_items} items but the graph has "
+            f"{graph.n_pins} pins; candidate ids index the item table"
+        )
+    table = params["items"]
+    d = table.shape[1]
+    scenario = jnp.broadcast_to(
+        jnp.asarray(scenario, jnp.int32), cand_ids.shape[:1]
+    )
+    valid = cand_scores > 0
+
+    # candidate side: self embedding + pooled 2-hop neighborhood
+    nbr_ids, nbr_w = candidate_neighborhoods(
+        graph, cand_ids, valid, cfg.n_neighbors
+    )
+    neigh_emb = ops.embedding_bag_batched(
+        table, nbr_ids, nbr_w, mode="mean", use_kernel=use_kernel
+    )                                                       # (b, k, d)
+    self_emb = (
+        jnp.take(table, jnp.where(valid, cand_ids, 0), axis=0)
+        * valid[..., None].astype(table.dtype)
+    )                                                       # (b, k, d)
+
+    # query side: the retrieved set itself IS the importance-weighted
+    # neighborhood — sqrt undoes the Eq. 3 boost back to visit-count scale
+    q_ids = jnp.where(valid, cand_ids, -1)[:, None, :]      # (b, 1, k)
+    q_w = jnp.sqrt(jnp.maximum(cand_scores, 0.0))[:, None, :]
+    query_emb = ops.embedding_bag_batched(
+        table, q_ids, q_w, mode="mean", use_kernel=use_kernel
+    )[:, 0]                                                 # (b, d)
+
+    heads = params["heads"]
+    w_self = jnp.take(heads["w_self"], scenario, axis=0)    # (b, d, d)
+    w_neigh = jnp.take(heads["w_neigh"], scenario, axis=0)
+    w_query = jnp.take(heads["w_query"], scenario, axis=0)
+    bias = jnp.take(heads["b"], scenario, axis=0)           # (b, d)
+
+    h = jax.nn.relu(
+        jnp.einsum("bkd,bde->bke", self_emb, w_self)
+        + jnp.einsum("bkd,bde->bke", neigh_emb, w_neigh)
+        + bias[:, None, :]
+    )
+    qv = jnp.einsum("bd,bde->be", query_emb, w_query)
+    raw = jnp.einsum("bke,be->bk", h, qv) / jnp.sqrt(float(d))
+    rank_scores = jnp.where(valid, raw, -jnp.inf)
+    vals, idx = jax.lax.top_k(rank_scores, cfg.final_k)
+    sel_valid = jnp.take_along_axis(valid, idx, axis=1)
+    ids = jnp.where(sel_valid, jnp.take_along_axis(cand_ids, idx, axis=1), -1)
+    return vals, ids

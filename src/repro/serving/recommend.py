@@ -10,7 +10,7 @@ shape as Pinterest's production stack ([22] in the paper).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +19,9 @@ from repro.core import walk as walk_lib
 from repro.core.graph import PinBoardGraph
 from repro.models import sequential_rec as sr
 
+if TYPE_CHECKING:  # import cycle: service -> ranker, recommend -> service
+    from repro.serving import ranker as ranker_lib
+
 Array = jax.Array
 
 
@@ -26,6 +29,32 @@ Array = jax.Array
 class TwoStageConfig:
     n_candidates: int = 200      # Pixie walk top-k fed to the ranker
     final_k: int = 20
+
+
+def rank_retrieved(
+    walk_scores: Array,         # (k,) stage-1 scores, 0 = padding
+    cand: Array,                # (k,) stage-1 candidate ids
+    ranker: Callable[[Array], Array],   # candidate ids (k,) -> scores (k,)
+    final_k: int,
+) -> Tuple[Array, Array]:
+    """Stage 2 alone: re-score a PRECOMPUTED retrieval ``(scores, ids)``.
+
+    This is the stage boundary: anything that already holds walk output —
+    a cache hit, a replayed request log, `serve_batch(with_stats=True)`
+    telemetry — enters here without re-running retrieval
+    (``pixie_then_rank`` is now just walk + this).
+    """
+    rank_scores = ranker(cand)
+    # candidates with zero walk score are padding — mask them out
+    rank_scores = jnp.where(walk_scores > 0, rank_scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(rank_scores, final_k)
+    # when fewer than final_k candidates carry positive walk score, top_k
+    # still fills the tail with entries whose idx points at arbitrary
+    # padding candidates — report those as id -1, never a real pin id.
+    # Keyed on the padding condition itself (zero walk score), not the
+    # ranker's -inf, so a real candidate a ranker scores -inf keeps its id.
+    ids = jnp.where(jnp.take(walk_scores, idx) > 0, jnp.take(cand, idx), -1)
+    return vals, ids
 
 
 def pixie_then_rank(
@@ -43,17 +72,7 @@ def pixie_then_rank(
     walk_scores, cand = walk_lib.recommend(
         graph, query_pins, query_weights, user_feat, key, walk_cfg
     )
-    rank_scores = ranker(cand)
-    # candidates with zero walk score are padding — mask them out
-    rank_scores = jnp.where(walk_scores > 0, rank_scores, -jnp.inf)
-    vals, idx = jax.lax.top_k(rank_scores, cfg.final_k)
-    # when fewer than final_k candidates carry positive walk score, top_k
-    # still fills the tail with entries whose idx points at arbitrary
-    # padding candidates — report those as id -1, never a real pin id.
-    # Keyed on the padding condition itself (zero walk score), not the
-    # ranker's -inf, so a real candidate a ranker scores -inf keeps its id.
-    ids = jnp.where(jnp.take(walk_scores, idx) > 0, jnp.take(cand, idx), -1)
-    return vals, ids
+    return rank_retrieved(walk_scores, cand, ranker, cfg.final_k)
 
 
 def sasrec_ranker(
@@ -65,7 +84,49 @@ def sasrec_ranker(
     state = sr.sasrec_user_state(params, user_history[None], cfg)[0]  # (d,)
 
     def score(cand: Array) -> Array:
+        # -1 marks an under-full candidate slot; score it -inf instead of
+        # quietly embedding item 0 (which would let pin 0's affinity leak
+        # into every short retrieval).  rank_retrieved re-masks on walk
+        # score anyway, but other callers of this closure get the honest
+        # scores too.
         emb = jnp.take(params["items"], jnp.maximum(cand, 0), axis=0)
-        return emb @ state
+        return jnp.where(cand >= 0, emb @ state, -jnp.inf)
 
     return score
+
+
+def recommend_two_stage(
+    graph: PinBoardGraph,
+    pins: Array,                # (batch, n_slots)
+    weights: Array,             # (batch, n_slots)
+    user_feats: Array,          # (batch,)
+    key: Array,
+    walk_cfg: walk_lib.WalkConfig,
+    rank: "ranker_lib.RankRequest",
+    scenario: Optional[Array] = None,   # (batch,) head index per request
+    backend: Optional[str] = None,
+    with_stats: bool = False,
+) -> Tuple[Array, ...]:
+    """The fused two-stage serving step: batched Pixie retrieval -> scenario
+    ranker heads, ONE jitted program end to end.
+
+    Stage 1 is `service.serve_batch`'s engine routing (batch-native pallas
+    walk or the vmapped XLA oracle twin) with ``top_k`` overridden to
+    ``rank.cfg.n_candidates``; stage 2 is `serving.ranker.rank_candidates`
+    on the walk's own visit-count scores.  Riding the PR 5 query axis, a
+    batched serve step lowers to a constant number of ``pallas_call``s
+    independent of batch size (2 walk-engine calls per chunk + 2 embedding
+    bags — pinned in tests/test_two_stage.py).
+
+    Returns ``(final_scores, final_ids)`` each ``(batch, final_k)``; with
+    ``with_stats=True`` appends the stage-1 ``(steps_taken, n_high)``
+    telemetry.  Thin alias for ``service.serve_batch(rank=..., ...)`` so
+    callers holding a ranker need not know the engine-routing layer.
+    """
+    from repro.core import service
+
+    return service.serve_batch(
+        graph, pins, weights, user_feats, key, walk_cfg,
+        backend=backend, with_stats=with_stats,
+        rank=rank, scenario=scenario,
+    )

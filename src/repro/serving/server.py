@@ -180,6 +180,7 @@ class _Pending:
     feat: int
     key: jax.Array        # per-request PRNG stream (fold_in at submit)
     t_enqueue: float      # logical seconds (wall by default)
+    scenario: int = 0     # ranker head index (ranked servers only)
 
 
 @dataclasses.dataclass
@@ -211,6 +212,7 @@ class PixieServer:
         max_wait_ms: float = 5.0,
         max_queue_per_bucket: Optional[int] = None,
         stats_capacity: int = 4096,
+        ranker=None,
     ):
         """``backend`` overrides cfg.backend ("xla" | "pallas") so a fleet
         can flip every replica onto the fused Pallas walk engine at server
@@ -233,9 +235,19 @@ class PixieServer:
         closed over rather than passed through jit — its static int
         metadata must stay Python ints — so ``swap_graph`` re-jits on a
         sharded replica (the daily reload already pays a retrace for the
-        new graph constants)."""
+        new graph constants).
+
+        ``ranker`` (a ``serving.ranker.RankRequest``) makes this a
+        TWO-STAGE replica: every dispatched batch runs retrieval (top_k
+        overridden to ``ranker.cfg.n_candidates``) + the scenario ranker
+        head inside the same jitted program, and ``submit(scenario=...)``
+        selects each request's head (related-pins vs homefeed).  Ranked
+        results keep the ``(scores, ids)`` contract, now ``final_k`` wide.
+        Ranker params are closed over like the walk config; a sharded
+        replica rejects ``ranker`` (stage 2 needs the full CSR)."""
         if backend is not None and backend != cfg.backend:
             cfg = dataclasses.replace(cfg, backend=backend)
+        self.ranker = ranker
         self.graph = graph
         self.cfg = cfg
         self.batch_size = batch_size
@@ -281,6 +293,13 @@ class PixieServer:
 
         cfg = self.cfg
         if isinstance(self.graph, dist_lib.ShardedGraph):
+            if self.ranker is not None:
+                raise ValueError(
+                    "a sharded replica can't rank: stage 2 gathers "
+                    "candidate neighborhoods from the full CSR, which a "
+                    "node-range shard doesn't hold; rank on an unsharded "
+                    "replica"
+                )
             graph, mesh, axis, slack = (
                 self.graph, self.mesh, self.axis, self.slack
             )
@@ -298,12 +317,25 @@ class PixieServer:
             # swap reuses the compiled program (no retrace) — pinned by
             # _plain_serve._cache_size() in tests/test_traffic.py
             if getattr(self, "_plain_serve", None) is None:
-                self._plain_serve = jax.jit(
-                    lambda graph, pins, weights, feats, keys:
-                        service.serve_batch(
-                            graph, pins, weights, feats, keys, cfg
-                        )
-                )
+                if self.ranker is None:
+                    self._plain_serve = jax.jit(
+                        lambda graph, pins, weights, feats, keys:
+                            service.serve_batch(
+                                graph, pins, weights, feats, keys, cfg
+                            )
+                    )
+                else:
+                    # ranker params close over like cfg; scenario rides as
+                    # a (batch,) argument so one cached program serves
+                    # every head mix
+                    rank = self.ranker
+                    self._plain_serve = jax.jit(
+                        lambda graph, pins, weights, feats, keys, scen:
+                            service.serve_batch(
+                                graph, pins, weights, feats, keys, cfg,
+                                rank=rank, scenario=scen,
+                            )
+                    )
             self._serve = self._plain_serve
 
     # -- request path ---------------------------------------------------------
@@ -327,8 +359,14 @@ class PixieServer:
         user_feat: int = 0,
         now: Optional[float] = None,
         req_id: Optional[int] = None,
+        scenario: int = 0,
     ) -> Optional[int]:
         """Enqueue one request; returns its request id (None if shed).
+
+        ``scenario`` picks the request's ranker head on a two-stage
+        replica (``ranker.cfg.scenario_id`` maps names to indices);
+        validated here so a bad surface id fails at intake, not as a
+        garbage gather inside a dispatched batch.
 
         Validates up front: ``len(weights)`` must equal ``len(pins)`` (a
         mismatch used to either crash with an opaque NumPy broadcast error
@@ -345,6 +383,17 @@ class PixieServer:
                 f"query has {len(pins)} pins but {len(weights)} weights; "
                 "one weight per pin required (mismatched lengths silently "
                 "misalign weights to the wrong pins)"
+            )
+        if self.ranker is None:
+            if scenario != 0:
+                raise ValueError(
+                    f"scenario={scenario} on a retrieval-only server; pass "
+                    "ranker= to PixieServer to open the scenario axis"
+                )
+        elif not 0 <= int(scenario) < self.ranker.cfg.n_scenarios:
+            raise ValueError(
+                f"scenario={scenario} out of range for heads "
+                f"{list(self.ranker.cfg.scenarios)}"
             )
         n = len(pins)
         _, slots = self._route(n)
@@ -367,6 +416,7 @@ class PixieServer:
         queue.append(_Pending(
             req_id=req_id, pins=qp, weights=qw, feat=int(user_feat),
             key=jax.random.fold_in(self._key, req_id), t_enqueue=now,
+            scenario=int(scenario),
         ))
         return req_id
 
@@ -384,18 +434,23 @@ class PixieServer:
         pins = np.full((batch_size, slots), -1, np.int32)
         weights = np.zeros((batch_size, slots), np.float32)
         feats = np.zeros((batch_size,), np.int32)
+        scen = np.zeros((batch_size,), np.int32)
         for i, e in enumerate(entries):
             pins[i] = e.pins
             weights[i] = e.weights
             feats[i] = e.feat
+            scen[i] = e.scenario
         keys = jnp.stack(
             [e.key for e in entries] + [self._pad_key] * pad
         )
-        t_wall = time.perf_counter()
-        scores, ids = self._serve(
+        args = (
             self.graph, jnp.asarray(pins), jnp.asarray(weights),
             jnp.asarray(feats), keys,
         )
+        if self.ranker is not None:
+            args += (jnp.asarray(scen),)
+        t_wall = time.perf_counter()
+        scores, ids = self._serve(*args)
         self._inflight.append(_InFlight(
             entries=entries, scores=scores, ids=ids,
             generation=self.stats.graph_generation,

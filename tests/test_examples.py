@@ -69,7 +69,7 @@ def test_sharded_walk_example_smoke():
 
 def test_two_stage_recsys_example_smoke():
     mod = _load("two_stage_recsys")
-    scores, items = mod.main(
+    scores, items, fused_scores, fused_items = mod.main(
         n_pins=400, n_boards=60, train_steps=2, walk_steps=512,
         n_walkers=64, final_k=5,
     )
@@ -79,3 +79,14 @@ def test_two_stage_recsys_example_smoke():
     assert finite.any()
     # ranked items are real graph items, never the -inf padding id
     assert ((items[finite] >= 0) & (items[finite] < 400)).all()
+    # fused path: one row per scenario head, same contracts per row
+    fused_scores = np.asarray(fused_scores)
+    fused_items = np.asarray(fused_items)
+    assert fused_items.shape == (2, 5) and fused_scores.shape == (2, 5)
+    ffin = np.isfinite(fused_scores)
+    assert ffin.any(axis=1).all()
+    assert (
+        (fused_items[ffin] >= 0) & (fused_items[ffin] < 400)
+    ).all()
+    # the two scenario heads rank the same retrieval differently
+    assert not np.array_equal(fused_scores[0], fused_scores[1])

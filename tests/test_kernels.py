@@ -11,7 +11,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
-from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_batched
 from repro.kernels.visit_counter import visit_counter
 from repro.kernels.walk_step import walk_step
 
@@ -142,6 +142,128 @@ def test_embedding_bag_all_padding():
     ids = jnp.full((8, 4), -1, jnp.int32)
     out = embedding_bag(table, ids, mode="mean", interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.zeros((8, 16)))
+
+
+@pytest.mark.parametrize("with_weights", [True, False])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_weight_padding_zeroed(mode, with_weights):
+    """A padded (-1) slot contributes NOTHING even when its weight lane
+    holds garbage — validity gates the weight, not the other way round."""
+    table = jax.random.normal(jax.random.key(0), (20, 8), jnp.float32)
+    ids_clean = jnp.asarray([[3, 5, -1, -1], [7, -1, -1, -1]], jnp.int32)
+    w = jnp.asarray(
+        [[0.5, 1.5, 99.0, -7.0], [2.0, 123.0, 4.0, 5.0]], jnp.float32
+    )
+    w_clean = jnp.where(ids_clean >= 0, w, 0.0)
+    kw = dict(mode=mode, interpret=True)
+    got = embedding_bag(table, ids_clean, w if with_weights else None, **kw)
+    want = embedding_bag(
+        table, ids_clean, w_clean if with_weights else None, **kw
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag_batched (the two-stage serving shape)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,k,l,v,d",
+    [
+        (1, 8, 4, 100, 32),     # single query
+        (4, 16, 8, 500, 16),    # serving-ish
+        (3, 33, 5, 50, 8),      # b*k not a block_b multiple (padding path)
+        (2, 64, 1, 40, 128),    # single-hot bags
+    ],
+)
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_batched_matches_ref(dtype, b, k, l, v, d, mode):
+    """Kernel vs the ORDER-MATCHED oracle: both accumulate each bag in
+    ascending element order, so the only residual divergence is compiler
+    FMA contraction — last-ulp, hence the tight (not zero) tolerance."""
+    key = jax.random.key(b * 1000 + k * 10 + l)
+    kt, ki, kw = jax.random.split(key, 3)
+    table = jax.random.normal(kt, (v, d), dtype=jnp.float32).astype(dtype)
+    ids = jax.random.randint(ki, (b, k, l), -1, v, dtype=jnp.int32)
+    weights = jax.random.uniform(kw, (b, k, l), dtype=jnp.float32)
+    for w in (weights, None):
+        got = embedding_bag_batched(table, ids, w, mode=mode, interpret=True)
+        want = ref.embedding_bag_batched_ref(table, ids, w, mode=mode)
+        assert got.shape == (b, k, d)
+        tol = 2e-6 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+
+def test_embedding_bag_batched_matches_flat():
+    """(b, k, l) bags are EXACTLY the flattened (b*k, l) bags through the
+    per-bag kernel — same kernel body, same launch plumbing, so this is
+    array_equal, not allclose."""
+    kt, ki, kw = jax.random.split(jax.random.key(3), 3)
+    b, k, l, v, d = 3, 20, 6, 80, 16
+    table = jax.random.normal(kt, (v, d), jnp.float32)
+    ids = jax.random.randint(ki, (b, k, l), -1, v, dtype=jnp.int32)
+    weights = jax.random.uniform(kw, (b, k, l), jnp.float32)
+    got = embedding_bag_batched(table, ids, weights, mode="mean",
+                                interpret=True)
+    flat = embedding_bag(table, ids.reshape(b * k, l),
+                         weights.reshape(b * k, l), mode="mean",
+                         interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(flat.reshape(b, k, d))
+    )
+
+
+def test_embedding_bag_batched_ragged_and_empty():
+    """Ragged neighborhoods: rows mixing full, partial, and EMPTY (all -1)
+    bags — empty bags pool to exact zero in both modes (mean's denominator
+    clamps at 1), never NaN."""
+    table = jax.random.normal(jax.random.key(1), (30, 8), jnp.float32)
+    ids = jnp.asarray(
+        [
+            [[1, 2, 3], [4, -1, -1], [-1, -1, -1]],
+            [[-1, -1, -1], [-1, -1, -1], [29, 0, -1]],
+        ],
+        jnp.int32,
+    )
+    weights = jnp.ones_like(ids, jnp.float32)
+    for mode in ("sum", "mean"):
+        out = np.asarray(
+            embedding_bag_batched(table, ids, weights, mode=mode,
+                                  interpret=True)
+        )
+        want = np.asarray(
+            ref.embedding_bag_batched_ref(table, ids, weights, mode=mode)
+        )
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+        # empty bags exactly zero
+        assert not out[0, 2].any() and not out[1, 0].any() and not out[1, 1].any()
+
+
+def test_embedding_bag_batched_small_blocks():
+    """block_b smaller than a row count that doesn't divide it: the padded
+    tail rows must not leak into real outputs."""
+    kt, ki = jax.random.split(jax.random.key(5))
+    table = jax.random.normal(kt, (25, 4), jnp.float32)
+    ids = jax.random.randint(ki, (2, 7, 3), -1, 25, dtype=jnp.int32)
+    got = embedding_bag_batched(table, ids, None, mode="sum", block_b=4,
+                                interpret=True)
+    want = ref.embedding_bag_batched_ref(table, ids, None, mode="sum")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_embedding_bag_batched_rejects_2d():
+    table = jnp.ones((4, 4), jnp.float32)
+    with pytest.raises(ValueError, match="batch, bags, bag_size"):
+        embedding_bag_batched(table, jnp.zeros((3, 2), jnp.int32),
+                              interpret=True)
 
 
 # ---------------------------------------------------------------------------

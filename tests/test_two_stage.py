@@ -1,0 +1,439 @@
+"""Fused two-stage retrieval -> ranking on the serving path.
+
+The contract under test (serving/ranker.py + service.serve_batch(rank=)):
+
+  * **Verdict-15 parity**: the fused pallas two-stage path is BIT-identical
+    to the XLA oracle — candidate ids, ranker scores, final ordering — for
+    batch {1, 4, 16} x gather {scalar, dma}.  Parity is by construction:
+    the walk engines are integer-exact twins, and every stage-2 float op
+    is ONE shared program for both backends (the bag op's lowering is
+    platform-defaulted, never backend-derived).
+  * **Lowering pin**: a batched two-stage serve step has a CONSTANT
+    pallas_call count independent of batch size — 2 walk-engine calls
+    inside the chunk loop, plus 2 rank-1-grid embedding-bag calls when
+    stage 2 lowers through the kernel (the TPU shape) — via
+    kernels/introspect.pallas_grids.
+  * **Stage boundary**: stage 2 (`rank_candidates`, `rank_retrieved`)
+    takes precomputed ``(ids, scores)`` directly — no re-retrieval — and
+    ``pixie_then_rank`` is exactly walk + ``rank_retrieved``.
+  * **Scenario axis**: >= 2 ranker heads (related-pins vs homefeed),
+    selected per request, threaded through `PixieServer(ranker=...)`.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import service, walk as walk_lib
+from repro.graphs.synthetic import small_test_graph, top_degree_pins
+from repro.kernels.introspect import pallas_grids
+from repro.models import sequential_rec as sr
+from repro.serving import ranker as ranker_lib
+from repro.serving.recommend import (
+    TwoStageConfig,
+    pixie_then_rank,
+    rank_retrieved,
+    recommend_two_stage,
+    sasrec_ranker,
+)
+from repro.serving.server import PixieServer
+
+
+@pytest.fixture(scope="module")
+def sg():
+    return small_test_graph()
+
+
+@pytest.fixture(scope="module")
+def rank(sg):
+    cfg = ranker_lib.RankerConfig(
+        n_items=sg.graph.n_pins, d_model=16, n_neighbors=4,
+        n_candidates=16, final_k=8,
+    )
+    params = ranker_lib.init_ranker_params(jax.random.key(7), cfg)
+    return ranker_lib.RankRequest(params, cfg)
+
+
+def _cfg(**kw):
+    kw = {
+        "n_steps": 1536, "n_walkers": 64, "chunk_steps": 4, "top_k": 20,
+        "n_p": 40, "n_v": 3, "backend": "pallas", **kw,
+    }
+    return walk_lib.WalkConfig(**kw)
+
+
+def _mk_batch(sg, batch, n_slots=2):
+    qs = top_degree_pins(sg, min(2 * batch, 32))
+    pins = np.full((batch, n_slots), -1, np.int32)
+    weights = np.zeros((batch, n_slots), np.float32)
+    for i in range(batch):
+        pins[i, 0] = int(qs[(2 * i) % len(qs)])
+        pins[i, 1] = int(qs[(2 * i + 1) % len(qs)])
+        weights[i] = [1.0, 0.6]
+    return (
+        jnp.asarray(pins),
+        jnp.asarray(weights),
+        jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _scenarios(batch):
+    return jnp.asarray([i % 2 for i in range(batch)], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Verdict 15: backend parity across batch x gather
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gather_mode", ["scalar", "dma"])
+@pytest.mark.parametrize("batch", [1, 4, 16])
+def test_two_stage_backends_agree(sg, rank, batch, gather_mode):
+    """The acceptance matrix: pallas (both gather modes) vs the XLA oracle,
+    bit-identical on candidate ids (stage 1), ranker scores and final
+    ordering (stage 2), plus the walk telemetry."""
+    g = sg.graph
+    pins, weights, feats = _mk_batch(sg, batch)
+    key = jax.random.key(11)
+    scen = _scenarios(batch)
+    cfg = _cfg(gather_mode=gather_mode)
+
+    # stage-1 candidates agree (ranked retrieval runs top_k = n_candidates)
+    ret_cfg = dataclasses.replace(cfg, top_k=rank.cfg.n_candidates)
+    cand_p = service.serve_batch(
+        g, pins, weights, feats, key, ret_cfg, backend="pallas"
+    )
+    cand_x = service.serve_batch(
+        g, pins, weights, feats, key, ret_cfg, backend="xla"
+    )
+    for a, b, name in zip(cand_p, cand_x, ("scores", "ids")):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"stage-1 {name}"
+        )
+
+    # full two-stage parity, scores AND ordering AND telemetry
+    out_p = service.serve_batch(
+        g, pins, weights, feats, key, cfg, backend="pallas",
+        rank=rank, scenario=scen, with_stats=True,
+    )
+    out_x = service.serve_batch(
+        g, pins, weights, feats, key, cfg, backend="xla",
+        rank=rank, scenario=scen, with_stats=True,
+    )
+    for a, b, name in zip(out_p, out_x, ("scores", "ids", "steps", "n_high")):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=name
+        )
+    scores, ids = np.asarray(out_p[0]), np.asarray(out_p[1])
+    assert scores.shape == (batch, rank.cfg.final_k)
+    assert ids.shape == (batch, rank.cfg.final_k)
+    finite = np.isfinite(scores)
+    assert finite.any(axis=1).all()  # every query got ranked results
+    assert ((ids[finite] >= 0) & (ids[finite] < g.n_pins)).all()
+    assert (ids[~finite] == -1).all()
+    # ranked scores are sorted descending per query
+    assert (np.diff(scores, axis=1) <= 0).all()
+
+
+def test_recommend_two_stage_is_serve_batch(sg, rank):
+    """The named entry point is the serve_batch(rank=...) program."""
+    g = sg.graph
+    pins, weights, feats = _mk_batch(sg, 4)
+    key = jax.random.key(3)
+    scen = _scenarios(4)
+    cfg = _cfg()
+    a = recommend_two_stage(
+        g, pins, weights, feats, key, cfg, rank, scenario=scen,
+        backend="pallas",
+    )
+    b = service.serve_batch(
+        g, pins, weights, feats, key, cfg, backend="pallas",
+        rank=rank, scenario=scen,
+    )
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+# ---------------------------------------------------------------------------
+# Lowering pin: constant pallas_call count, independent of batch size
+# ---------------------------------------------------------------------------
+
+
+def test_two_stage_lowers_to_constant_calls(sg, rank):
+    """A batched two-stage serve step with stage 2 lowered through the bag
+    KERNEL (the TPU shape) contains exactly 4 pallas_call eqns — 2 walk
+    calls inside the one chunk while loop + 2 rank-1-grid embedding bags
+    (candidate neighborhoods, query pool) — for EVERY batch size: batch
+    scales grid cells, never launches."""
+    g = sg.graph
+    cfg = _cfg()
+    ret_cfg = dataclasses.replace(cfg, top_k=rank.cfg.n_candidates)
+    structures = {}
+    for batch in (1, 16):
+        pins, weights, feats = _mk_batch(sg, batch)
+        scen = _scenarios(batch)
+
+        def two_stage(key):
+            s, i, st, nh = service.serve_batch(
+                g, pins, weights, feats, key, ret_cfg, with_stats=True
+            )
+            return ranker_lib.rank_candidates(
+                rank.params, rank.cfg, g, i, s, scen, use_kernel=True
+            )
+
+        grids = pallas_grids(jax.make_jaxpr(two_stage)(jax.random.key(0)))
+        assert len(grids) == 4, grids
+        # 2 walk-engine calls (rank-1 walk grid + rank-2 counter) and two
+        # rank-1 bag grids; no grid anywhere leads with the batch axis
+        assert sorted(len(grid) for grid in grids) == [1, 1, 1, 2], grids
+        structures[batch] = (len(grids), sorted(len(g_) for g_ in grids))
+    assert structures[1] == structures[16]
+
+    # the platform-default path (CPU: oracle bags) is also batch-constant
+    for batch in (1, 16):
+        pins, weights, feats = _mk_batch(sg, batch)
+        scen = _scenarios(batch)
+
+        def ranked_serve(key):
+            return service.serve_batch(
+                g, pins, weights, feats, key, cfg, rank=rank, scenario=scen
+            )
+
+        grids = pallas_grids(jax.make_jaxpr(ranked_serve)(jax.random.key(0)))
+        structures[f"serve{batch}"] = len(grids)
+    assert structures["serve1"] == structures["serve16"]
+
+
+# ---------------------------------------------------------------------------
+# Stage boundary + scenario axis
+# ---------------------------------------------------------------------------
+
+
+def test_rank_candidates_takes_precomputed_stats(sg, rank):
+    """Stage 2 consumes (ids, scores) directly: feeding it the SAME
+    retrieval twice gives the same ranking with no walk in between (the
+    old pixie_then_rank re-ran retrieval internally)."""
+    g = sg.graph
+    pins, weights, feats = _mk_batch(sg, 4)
+    cfg = dataclasses.replace(_cfg(), top_k=rank.cfg.n_candidates)
+    scores, ids = service.serve_batch(
+        g, pins, weights, feats, jax.random.key(0), cfg
+    )
+    scen = _scenarios(4)
+    a = ranker_lib.rank_candidates(rank.params, rank.cfg, g, ids, scores, scen)
+    b = ranker_lib.rank_candidates(rank.params, rank.cfg, g, ids, scores, scen)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    # and the fused path produces exactly rank_candidates on its own
+    # stage-1 output
+    fused = service.serve_batch(
+        g, pins, weights, feats, jax.random.key(0), cfg,
+        rank=rank, scenario=scen,
+    )
+    np.testing.assert_array_equal(np.asarray(fused[0]), np.asarray(a[0]))
+    np.testing.assert_array_equal(np.asarray(fused[1]), np.asarray(a[1]))
+
+
+def test_scenario_heads_differ_and_select_per_request(sg, rank):
+    """>= 2 heads, selected PER REQUEST: a mixed batch row equals the
+    uniform-scenario run of the same row (head gather is per query), and
+    the two heads genuinely rank differently."""
+    g = sg.graph
+    pins, weights, feats = _mk_batch(sg, 4)
+    cfg = dataclasses.replace(_cfg(), top_k=rank.cfg.n_candidates)
+    scores, ids = service.serve_batch(
+        g, pins, weights, feats, jax.random.key(5), cfg
+    )
+    mixed = ranker_lib.rank_candidates(
+        rank.params, rank.cfg, g, ids, scores, _scenarios(4)
+    )
+    uni0 = ranker_lib.rank_candidates(
+        rank.params, rank.cfg, g, ids, scores, jnp.zeros((4,), jnp.int32)
+    )
+    uni1 = ranker_lib.rank_candidates(
+        rank.params, rank.cfg, g, ids, scores, jnp.ones((4,), jnp.int32)
+    )
+    for row in range(4):
+        src = uni0 if row % 2 == 0 else uni1
+        np.testing.assert_array_equal(
+            np.asarray(mixed[0])[row], np.asarray(src[0])[row]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(mixed[1])[row], np.asarray(src[1])[row]
+        )
+    assert not np.array_equal(np.asarray(uni0[0]), np.asarray(uni1[0]))
+
+
+def test_rank_candidates_underfull_and_empty_queries(sg, rank):
+    """Queries retrieving fewer than final_k real candidates report -1 ids
+    (-inf scores) in the tail; an all-padding retrieval ranks to nothing."""
+    g = sg.graph
+    k = rank.cfg.n_candidates
+    cand = jnp.tile(jnp.arange(k, dtype=jnp.int32)[None], (2, 1))
+    scores = jnp.stack([
+        jnp.where(jnp.arange(k) < 3, 1.0, 0.0),   # 3 real candidates
+        jnp.zeros((k,)),                           # none
+    ]).astype(jnp.float32)
+    vals, ids = ranker_lib.rank_candidates(
+        rank.params, rank.cfg, g, cand, scores, jnp.zeros((2,), jnp.int32)
+    )
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    assert set(ids[0][:3]) <= {0, 1, 2}
+    assert (ids[0][3:] == -1).all() and np.isneginf(vals[0][3:]).all()
+    assert (ids[1] == -1).all() and np.isneginf(vals[1]).all()
+
+
+def test_pixie_then_rank_is_walk_plus_rank_retrieved(sg):
+    """The refactor didn't change the callable-ranker path: pixie_then_rank
+    == recommend(...) + rank_retrieved(...) on the same stats."""
+    g = sg.graph
+    qs = top_degree_pins(sg, 2)
+    qp = jnp.asarray([int(qs[0]), int(qs[1])], jnp.int32)
+    qw = jnp.asarray([1.0, 0.6], jnp.float32)
+    cfg = _cfg(backend="xla")
+    ts = TwoStageConfig(n_candidates=16, final_k=8)
+    key = jax.random.key(2)
+
+    def ranker(cand):
+        return -cand.astype(jnp.float32)  # deterministic toy ranker
+
+    feat = jnp.asarray(0, jnp.int32)
+    a = pixie_then_rank(g, qp, qw, feat, key, cfg, ranker, ts)
+    walk_cfg = dataclasses.replace(cfg, top_k=ts.n_candidates)
+    ws, cand = walk_lib.recommend(g, qp, qw, feat, key, walk_cfg)
+    b = rank_retrieved(ws, cand, ranker, ts.final_k)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_sasrec_ranker_masks_underfull_ids():
+    """Regression: a -1 (under-full) candidate id must score -inf, not the
+    embedding of item 0."""
+    cfg = sr.SeqRecConfig(name="r", kind="sasrec", n_items=50, embed_dim=8,
+                          seq_len=4, n_blocks=1, n_heads=1, n_negatives=2)
+    params = sr.init_params(jax.random.key(0), cfg)
+    score = sasrec_ranker(params, jnp.asarray([1, 2, 3, 4], jnp.int32), cfg)
+    cand = jnp.asarray([5, -1, 0, -1], jnp.int32)
+    s = np.asarray(score(cand))
+    assert np.isneginf(s[[1, 3]]).all()
+    assert np.isfinite(s[[0, 2]]).all()
+    # item 0's finite score is untouched by the masking
+    np.testing.assert_array_equal(
+        s[2], np.asarray(score(jnp.asarray([0], jnp.int32)))[0]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+
+def test_two_stage_validation(sg, rank):
+    g = sg.graph
+    pins, weights, feats = _mk_batch(sg, 2)
+    with pytest.raises(ValueError, match="needs rank="):
+        service.serve_batch(
+            g, pins, weights, feats, jax.random.key(0), _cfg(),
+            scenario=jnp.zeros((2,), jnp.int32),
+        )
+    with pytest.raises(ValueError, match="final_k"):
+        ranker_lib.RankerConfig(n_items=10, n_candidates=4, final_k=8)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        rank.cfg.scenario_id("shopping")
+    assert rank.cfg.scenario_id("homefeed") == 1
+    with pytest.raises(ValueError, match="item table"):
+        bad = ranker_lib.RankerConfig(
+            n_items=sg.graph.n_pins + 1, n_candidates=16, final_k=8
+        )
+        ranker_lib.rank_candidates(
+            ranker_lib.init_ranker_params(jax.random.key(0), bad), bad, g,
+            jnp.zeros((1, 16), jnp.int32), jnp.zeros((1, 16)),
+            jnp.zeros((1,), jnp.int32),
+        )
+    with pytest.raises(ValueError, match="batched"):
+        ranker_lib.rank_candidates(
+            rank.params, rank.cfg, g, jnp.zeros((16,), jnp.int32),
+            jnp.zeros((16,)), 0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# PixieServer: ranked dispatch on the continuous-traffic path
+# ---------------------------------------------------------------------------
+
+
+def test_server_ranked_dispatch_matches_direct_serve(sg, rank):
+    """A ranked replica's flush equals serve_batch(rank=...) on the same
+    requests with the same fold_in keys and scenarios — the two-stage
+    program rides the PR 7 dispatch machinery unchanged."""
+    g = sg.graph
+    cfg = _cfg()
+    qs = top_degree_pins(sg, 8)
+    srv = PixieServer(g, cfg, batch_size=4, n_slots=2, seed=13, ranker=rank)
+    scen = [0, 1, 1, 0]
+    for i in range(4):
+        srv.submit(
+            [int(qs[2 * i]), int(qs[2 * i + 1])], [1.0, 0.6],
+            scenario=scen[i],
+        )
+    results = srv.flush()
+    assert [r.req_id for r in results] == [0, 1, 2, 3]
+
+    pins = jnp.asarray(
+        [[int(qs[2 * i]), int(qs[2 * i + 1])] for i in range(4)], jnp.int32
+    )
+    weights = jnp.tile(jnp.asarray([1.0, 0.6], jnp.float32)[None], (4, 1))
+    feats = jnp.zeros((4,), jnp.int32)
+    keys = jnp.stack(
+        [jax.random.fold_in(jax.random.key(13), i) for i in range(4)]
+    )
+    # the oracle must be jitted exactly like the server's program: stage 2
+    # runs float math, and an eager (op-by-op) evaluation can differ from
+    # the fused XLA program in the last ulp — bit-parity contracts here
+    # are per compiled program, the same rule the backend-parity tests use
+    oracle = jax.jit(
+        lambda graph, p, w, f, k, sc: service.serve_batch(
+            graph, p, w, f, k, cfg, rank=rank, scenario=sc
+        )
+    )
+    want_s, want_i = oracle(
+        g, pins, weights, feats, keys, jnp.asarray(scen, jnp.int32)
+    )
+    for i, r in enumerate(results):
+        np.testing.assert_array_equal(r.scores, np.asarray(want_s)[i])
+        np.testing.assert_array_equal(r.ids, np.asarray(want_i)[i])
+        assert r.ids.shape == (rank.cfg.final_k,)
+
+
+def test_server_scenario_validation(sg, rank):
+    srv = PixieServer(sg.graph, _cfg(), batch_size=2, n_slots=2, seed=0,
+                      ranker=rank)
+    with pytest.raises(ValueError, match="out of range"):
+        srv.submit([1, 2], [1.0, 1.0], scenario=rank.cfg.n_scenarios)
+    plain = PixieServer(sg.graph, _cfg(), batch_size=2, n_slots=2, seed=0)
+    with pytest.raises(ValueError, match="retrieval-only"):
+        plain.submit([1, 2], [1.0, 1.0], scenario=1)
+
+
+def test_server_ranked_partial_batch_padding(sg, rank):
+    """A deadline-dispatched partial batch pads with zero-weight queries;
+    what rides the OTHER lanes of the batch — padding or real traffic —
+    must not perturb a request's ranked result.  (Same bucket shape both
+    times: per-program bit-parity, like traffic_buckets_agree.)"""
+    g = sg.graph
+    cfg = _cfg()
+    qs = top_degree_pins(sg, 8)
+    a = PixieServer(g, cfg, batch_size=4, n_slots=2, seed=4, ranker=rank)
+    a.submit([int(qs[0]), int(qs[1])], [1.0, 0.6], scenario=1)
+    ra = a.flush()[0]  # dispatched padded: 1 real lane + 3 zero-weight
+    b = PixieServer(g, cfg, batch_size=4, n_slots=2, seed=4, ranker=rank)
+    b.submit([int(qs[0]), int(qs[1])], [1.0, 0.6], scenario=1)
+    for i in range(1, 4):  # same req 0 (same fold_in key) + real traffic
+        b.submit([int(qs[2 * i]), int(qs[2 * i + 1])], [1.0, 0.6],
+                 scenario=i % 2)
+    rb = next(r for r in b.flush() if r.req_id == 0)
+    np.testing.assert_array_equal(ra.scores, rb.scores)
+    np.testing.assert_array_equal(ra.ids, rb.ids)

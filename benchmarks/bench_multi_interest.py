@@ -1,0 +1,253 @@
+"""Multi-interest serving sweep: users x clusters x walk backend at fixed
+serving capacity, plus the fused-vs-oracle agreement verdict.
+
+This suite exercises the multi-interest tentpole end to end
+(``service.build_user_query`` -> ``batch_user_queries`` ->
+``recommend.recommend_multi_interest``): every user's action history is
+clustered host-side into k interest clusters (PinnerSage-style
+agglomeration over pin topic vectors), each cluster becomes a weighted
+query lane with its own Eq. 2 step budget (importance-proportional,
+riding the batch as DATA, never shape), all lanes run in ONE batched
+walk, and per-user results merge with the bit-reproducible Eq. 3
+cross-cluster booster (``walk.merge_interest_topk``).
+
+The sweep holds SERVER CAPACITY fixed — a constant total step budget
+split across users (each user then splits its share across clusters by
+importance) — so the users x k grid isolates the cost of multi-interest
+fan-out at constant work.
+
+The agreement verdict is the regression signal: ``multi_interest_agrees``
+asserts, for users {1, 4, 16} x k {1, 2, 4} x backend {xla, pallas} x
+gather {scalar, dma}:
+
+  * the fused path == the per-cluster ORACLE (independent single-query
+    walks, each with its cluster's budget, merged host-side by the same
+    jitted merge at the live-k shape) BIT-identically;
+  * k=1 collapses EXACTLY to the flat homefeed ``serve_batch`` path;
+  * the ``pallas_call`` count of a multi-interest serve step is CONSTANT
+    as k grows — cluster lanes add rows on the PR 5 query axis, never
+    kernel launches (jaxpr-pinned).
+
+On CPU hosts the kernels run in interpret mode — ms there measures
+plumbing, not kernel speed; regress on the verdict, never on CPU ratios.
+
+Results land in ``results/bench.json`` AND merge into
+``BENCH_serving.json`` as the ``multi_interest`` section.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import merge_serving_section, timed
+from repro.core import service, walk as walk_lib
+from repro.graphs import synthetic
+from repro.kernels.introspect import pallas_grids
+from repro.serving.recommend import recommend_multi_interest
+
+USERS = (1, 4, 16)
+CLUSTERS = (1, 2, 4)
+# fixed per-user capacity; a user's clusters split this by importance
+STEPS_PER_USER = 768
+WALKERS = 32
+N_SLOTS = 8
+
+
+def _user_batches(sg, seed: int) -> Dict:
+    """One shared pool of seeded histories; each (users, k) cell reuses a
+    prefix so the sweep varies load, not workload identity."""
+    hist_cfg = synthetic.UserHistoryConfig(
+        n_users=max(USERS), n_interests=3, mean_actions=16, seed=seed
+    )
+    return synthetic.sample_user_histories(sg, hist_cfg)
+
+
+def _batch_for(sg, histories, n_users: int, k: int):
+    uqs = [
+        service.build_user_query(
+            h.actions, sg.pin_topics, n_slots=N_SLOTS, n_clusters=k
+        )
+        for h in histories[:n_users]
+    ]
+    return service.batch_user_queries(uqs, n_steps=STEPS_PER_USER), uqs
+
+
+def _oracle(g, batch, uqs, lane_keys, cfg):
+    """Per-cluster single-query walks merged host-side at the live-k
+    shape — the independent twin the fused path must reproduce bitwise."""
+    single = jax.jit(
+        lambda qp, qw, uf, kk, sb: walk_lib.recommend_with_stats(
+            g, qp, qw, uf, kk, cfg, step_budget=sb
+        )
+    )
+    merge = jax.jit(walk_lib.merge_interest_topk)
+    lane_of_user = np.asarray(batch.lane_of_user)
+    out_s, out_i = [], []
+    for u, uq in enumerate(uqs):
+        lanes = lane_of_user[u][lane_of_user[u] >= 0]
+        ss, ii = zip(*[
+            single(
+                batch.pins[li], batch.weights[li], batch.feats[li],
+                lane_keys[li], batch.step_budgets[li],
+            )[:2]
+            for li in lanes
+        ])
+        ms, mi = merge(jnp.stack(ss), jnp.stack(ii),
+                       jnp.asarray(uq.importance))
+        out_s.append(np.asarray(ms))
+        out_i.append(np.asarray(mi))
+    return np.stack(out_s), np.stack(out_i)
+
+
+def _launch_counts(g, batch, cfg) -> Dict:
+    n_lanes = int(batch.pins.shape[0])
+
+    def step(key):
+        return recommend_multi_interest(
+            g, batch, jax.random.split(key, n_lanes), cfg
+        )
+
+    grids = pallas_grids(jax.make_jaxpr(step)(jax.random.key(0)))
+    return {
+        "calls": len(grids),
+        "lanes_in_grid": n_lanes > 1 and any(
+            x and x[0] == n_lanes for x in grids
+        ),
+    }
+
+
+def _sweep(seed: int) -> Dict:
+    sg = synthetic.generate(synthetic.SyntheticGraphConfig(
+        n_pins=1_000, n_boards=100, n_topics=8, n_langs=2, seed=seed
+    ))
+    g = sg.graph
+    histories = _user_batches(sg, seed + 1)
+    base_cfg = walk_lib.WalkConfig(
+        n_steps=STEPS_PER_USER, n_walkers=WALKERS, chunk_steps=8,
+        top_k=16, n_p=60, n_v=3,
+    )
+
+    sweep = []
+    agree = True
+    pallas_calls = set()
+    for n_users in USERS:
+        for k in CLUSTERS:
+            batch, uqs = _batch_for(sg, histories, n_users, k)
+            n_lanes = int(batch.pins.shape[0])
+            lane_keys = jax.random.split(jax.random.key(seed), n_lanes)
+            row: Dict = {
+                "users": n_users, "k": k, "lanes": n_lanes, "engines": {},
+            }
+            outs = {}
+            engines = {
+                "xla": ("xla", "scalar"),
+                "pallas_scalar": ("pallas", "scalar"),
+                "pallas_dma": ("pallas", "dma"),
+            }
+            for label, (backend, gather) in engines.items():
+                ecfg = dataclasses.replace(
+                    base_cfg, backend=backend, gather_mode=gather
+                )
+                fn = jax.jit(lambda ks, b=batch, c=ecfg:
+                             recommend_multi_interest(g, b, ks, c))
+                t = timed(fn, lane_keys, warmup=1, iters=2)
+                ms, mi = fn(lane_keys)
+                outs[label] = (np.asarray(ms), np.asarray(mi))
+                row["engines"][label] = {
+                    "batch_ms": round(t["mean_ms"], 2),
+                    "per_user_ms": round(t["mean_ms"] / n_users, 3),
+                }
+            # fused engines agree with each other...
+            ref = outs["xla"]
+            row["backends_agree"] = bool(all(
+                np.array_equal(a, b)
+                for other in ("pallas_scalar", "pallas_dma")
+                for a, b in zip(ref, outs[other])
+            ))
+            # ...and with the per-cluster oracle, bit for bit
+            os_, oi = _oracle(g, batch, uqs, lane_keys, base_cfg)
+            row["oracle_agree"] = bool(
+                np.array_equal(ref[0].view(np.uint32), os_.view(np.uint32))
+                and np.array_equal(ref[1], oi)
+            )
+            # k=1 is the flat homefeed path, verbatim
+            if k == 1:
+                fs, fi = service.serve_batch(
+                    g, batch.pins, batch.weights, batch.feats, lane_keys,
+                    base_cfg,
+                )
+                row["flat_collapse"] = bool(
+                    np.array_equal(ref[0].view(np.uint32),
+                                   np.asarray(fs).view(np.uint32))
+                    and np.array_equal(ref[1], np.asarray(fi))
+                )
+            launch = _launch_counts(
+                g, batch, dataclasses.replace(base_cfg, backend="pallas")
+            )
+            row["pallas_calls"] = launch["calls"]
+            pallas_calls.add(launch["calls"])
+            row["agree"] = bool(
+                row["backends_agree"] and row["oracle_agree"]
+                and row.get("flat_collapse", True)
+                and not launch["lanes_in_grid"]
+            )
+            agree &= row["agree"]
+            sweep.append(row)
+    # the pin has teeth only if the pallas lowering actually launches
+    constant_calls = pallas_calls == {2}
+    return {
+        "graph": {"n_pins": g.n_pins, "n_boards": g.n_boards},
+        "config": {
+            "steps_per_user": STEPS_PER_USER, "walkers": WALKERS,
+            "n_slots": N_SLOTS, "users": list(USERS),
+            "clusters": list(CLUSTERS),
+        },
+        "sweep": sweep, "agree_all": agree,
+        "constant_calls": constant_calls,
+    }
+
+
+def run(seed: int = 0) -> Dict:
+    out: Dict = {
+        "host_backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "multi_interest": _sweep(seed),
+    }
+    # verdict: fused multi-interest serving == the per-cluster oracle
+    # bit-identically across users x k x backend x gather, k=1 collapses
+    # exactly to the flat path, and clusters add lanes, never launches
+    out["multi_interest_agrees"] = bool(
+        out["multi_interest"]["agree_all"]
+        and out["multi_interest"]["constant_calls"]
+    )
+    out["wrote"] = merge_serving_section("multi_interest", {
+        "multi_interest_agrees": out["multi_interest_agrees"],
+        "pallas_interpret": out["pallas_interpret"],
+        "config": out["multi_interest"]["config"],
+        "sweep": [
+            {
+                "users": row["users"], "k": row["k"], "lanes": row["lanes"],
+                "agree": row["agree"],
+                "oracle_agree": row["oracle_agree"],
+                "backends_agree": row["backends_agree"],
+                **({"flat_collapse": row["flat_collapse"]}
+                   if "flat_collapse" in row else {}),
+                "pallas_calls": row["pallas_calls"],
+                "per_user_ms": {
+                    kk: v["per_user_ms"] for kk, v in row["engines"].items()
+                },
+            }
+            for row in out["multi_interest"]["sweep"]
+        ],
+    })
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -9,7 +9,8 @@ a line HERE, not editing a YAML heredoc.
 Run locally after the smokes:
 
     PYTHONPATH=src python -m benchmarks.run \
-        --only smoke earlystop_fused widepack dma_gather batchfuse
+        --only smoke earlystop_fused widepack dma_gather batchfuse \
+        sharded traffic two_stage multi_interest
     PYTHONPATH=src python -m benchmarks.check_verdicts
 
 Exit code 0 iff every verdict is present and truthy.
@@ -53,6 +54,14 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     # {scalar,dma} with mixed scenario heads, AND a constant pallas_call
     # count independent of batch size (jaxpr-pinned)
     ("BENCH_serving.json", ("two_stage", "two_stage_backends_agree")),
+    # bench_multi_interest (merged): fused multi-interest serving (cluster
+    # lanes with importance-proportional step budgets in ONE batched walk
+    # + the bit-reproducible Eq. 3 cross-cluster merge) == the per-cluster
+    # single-query oracle bit-identically across users {1,4,16} x
+    # k {1,2,4} x backend {xla,pallas} x gather {scalar,dma}, k=1
+    # collapsing exactly to the flat homefeed path, with a constant
+    # pallas_call count as k grows (jaxpr-pinned: lanes, not launches)
+    ("BENCH_serving.json", ("multi_interest", "multi_interest_agrees")),
     # bench_earlystop_fused: fused in-VMEM tally == naive recount
     ("results/bench.json", ("earlystop_fused", "counting",
                             "fused_matches_naive")),

@@ -24,7 +24,8 @@ BENCH_SERVING_PATH = os.path.join(
 # rewrites the base file) preserves exactly this list, so registering a new
 # merged suite means adding its section name HERE, nowhere else
 MERGED_SECTIONS = (
-    "widepack", "dma", "batchfuse", "sharded", "traffic", "two_stage"
+    "widepack", "dma", "batchfuse", "sharded", "traffic", "two_stage",
+    "multi_interest",
 )
 
 

@@ -23,6 +23,7 @@ from benchmarks import (
     bench_fig3_earlystop,
     bench_fig4_pruning,
     bench_fig5_memory,
+    bench_multi_interest,
     bench_serving,
     bench_sharded,
     bench_smoke,
@@ -62,6 +63,9 @@ SUITES = {
     "two_stage": ("Fused two-stage retrieval -> ranking: batched walk + "
                   "embedding-bag neighborhoods + scenario heads",
                   bench_two_stage.run),
+    "multi_interest": ("Multi-interest users: clustered queries as budgeted "
+                       "lanes on the batch axis + Eq. 3 cross-cluster merge",
+                       bench_multi_interest.run),
 }
 
 VERDICT_KEYS = (
@@ -73,6 +77,7 @@ VERDICT_KEYS = (
     "widepack_backends_agree", "incremental_matches_full",
     "dma_backends_agree", "batch_engine_agrees", "sharded_engine_agrees",
     "traffic_buckets_agree", "two_stage_backends_agree",
+    "multi_interest_agrees",
 )
 
 

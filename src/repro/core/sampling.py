@@ -55,18 +55,24 @@ def scaling_factor(degree: Array, max_degree: Array) -> Array:
 
 
 def allocate_steps(
-    weights: Array, degrees: Array, max_degree: Array, n_total: int
+    weights: Array, degrees: Array, max_degree: Array, n_total
 ) -> Array:
     """Eq. 2: integer step budget per query pin, summing to ~n_total.
 
     Guarantees every active (weight>0, degree>0) query pin gets at least one
     step ("pins with low degrees also receive sufficient number of steps").
+
+    ``n_total`` may be a Python int (the classic static budget) or a traced
+    int32 scalar — multi-interest serving allocates each cluster lane its
+    own budget as DATA so ragged users share one compiled program.  Both
+    forms produce bit-identical budgets for equal values: the product below
+    is the same single f32 multiply either way.
     """
     s = scaling_factor(degrees, max_degree)
     w = weights.astype(jnp.float32) * s
     denom = jnp.maximum(jnp.sum(w), 1e-9)
     frac = w / denom
-    n_q = jnp.floor(frac * float(n_total)).astype(jnp.int32)
+    n_q = jnp.floor(frac * jnp.asarray(n_total, jnp.float32)).astype(jnp.int32)
     active = w > 0
     n_q = jnp.where(active, jnp.maximum(n_q, 1), 0)
     return n_q

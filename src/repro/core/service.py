@@ -5,6 +5,12 @@
 * **Related pins** (§5.2): single-pin queries with a *shorter* walk (higher
   alpha) for narrow recommendations.
 * **Board recs** (§5.3): query = last pins of a board; board counting on.
+* **Multi-interest users** (PinnerSage, PAPERS.md): a user's action history
+  is clustered host-side into k interest clusters over pin topic vectors;
+  each cluster is one weighted query lane with its own Eq. 2 step budget,
+  all lanes of a user ride the batch axis of ONE
+  ``walk.pixie_random_walk_batched`` call, and results merge back per user
+  with ``walk.merge_interest_topk`` (Eq. 3 across clusters).
 
 Queries are padded to a fixed slot count so batched serving stays SPMD.
 """
@@ -12,7 +18,8 @@ Queries are padded to a fixed slot count so batched serving stays SPMD.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+import math
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +42,39 @@ class UserAction:
     age_hours: float
 
 
+def _decayed_pin_weights(
+    actions: Sequence[UserAction],
+    half_life_hours: float,
+    default_weight: float | None,
+) -> Dict[int, float]:
+    """Per-pin decayed action weights, summed in a CANONICAL order.
+
+    Each pin's contributions are sorted ascending by value before the
+    left-to-right float sum, so a pin's weight is a function of the
+    MULTISET of its actions — reordering the action list can no longer
+    move a weight by an ulp (regression-tested with a crafted history
+    whose naive order-of-arrival sums round to different float32s).
+    """
+    contribs: Dict[int, List[float]] = {}
+    for a in actions:
+        base = ACTION_WEIGHTS.get(a.action, default_weight)
+        if base is None:
+            raise ValueError(
+                f"unknown action type {a.action!r}; known: "
+                f"{sorted(ACTION_WEIGHTS)} (pass default_weight to accept "
+                "unrecognized actions)"
+            )
+        w = base * 0.5 ** (a.age_hours / half_life_hours)
+        contribs.setdefault(a.pin, []).append(w)
+    acc: Dict[int, float] = {}
+    for pin, ws in contribs.items():
+        total = 0.0
+        for w in sorted(ws):
+            total += w
+        acc[pin] = total
+    return acc
+
+
 def build_query(
     actions: Sequence[UserAction],
     n_slots: int,
@@ -46,26 +86,16 @@ def build_query(
     Weight = action weight * 0.5 ** (age / half_life); repeated pins sum.
     The top-``n_slots`` pins by weight are kept, rest padded with (-1, 0).
     Weight ties break by pin id, so for a given set of per-pin weights the
-    truncation never depends on Python dict ordering.  (A pin's weight is
-    a float sum over its actions, so *reordering one pin's actions* can
-    still move it by an ulp — the tie-break fixes the data-structure
-    nondeterminism, not float associativity.)
+    truncation never depends on Python dict ordering, and each pin's float
+    sum runs in a canonical (value-sorted) order so reordering the action
+    list cannot move a weight by an ulp either — the query is a pure
+    function of the action MULTISET.
 
     Unrecognized action types raise — a typo'd action silently weighted
     0.1 skews every downstream walk budget; pass ``default_weight`` to
     opt into a catch-all weight instead.
     """
-    acc: Dict[int, float] = {}
-    for a in actions:
-        base = ACTION_WEIGHTS.get(a.action, default_weight)
-        if base is None:
-            raise ValueError(
-                f"unknown action type {a.action!r}; known: "
-                f"{sorted(ACTION_WEIGHTS)} (pass default_weight to accept "
-                "unrecognized actions)"
-            )
-        w = base * 0.5 ** (a.age_hours / half_life_hours)
-        acc[a.pin] = acc.get(a.pin, 0.0) + w
+    acc = _decayed_pin_weights(actions, half_life_hours, default_weight)
     # weight descending, pin id ascending on ties: the truncation below is
     # deterministic across Python dict insertion orders
     items = sorted(acc.items(), key=lambda kv: (-kv[1], kv[0]))[:n_slots]
@@ -109,14 +139,15 @@ def batch_queries(
             f"{len(queries)} queries but {len(user_feats)} user_feats; "
             "one personalization feature per query required"
         )
-    n_slots = np.asarray(queries[0][0]).shape
+    slot_shape = np.asarray(queries[0][0]).shape
+    n_slots = slot_shape[0] if len(slot_shape) == 1 else slot_shape
     for i, (q_pins, q_weights) in enumerate(queries):
         p = np.asarray(q_pins)
         w = np.asarray(q_weights)
-        if p.shape != n_slots or w.shape != n_slots:
+        if p.shape != slot_shape or w.shape != slot_shape:
             raise ValueError(
                 f"query {i} is ragged: pins shape {p.shape}, weights shape "
-                f"{w.shape}, but the batch's slot shape is {n_slots}; pad "
+                f"{w.shape}, but the batch has {n_slots} slots; pad "
                 "every query to the same n_slots (service.build_query does)"
             )
         if not np.issubdtype(w.dtype, np.floating):
@@ -128,6 +159,226 @@ def batch_queries(
     weights = jnp.asarray(np.stack([np.asarray(q[1]) for q in queries]))
     feats = jnp.asarray(np.asarray(user_feats, dtype=np.int32))
     return pins, weights, feats
+
+
+# ---------------------------------------------------------------------------
+# Multi-interest user queries (PinnerSage-style clustering, PAPERS.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UserQuery:
+    """One user's multi-interest query: k interest-cluster lanes.
+
+    Built by ``build_user_query``.  Each row of ``cluster_pins`` /
+    ``cluster_weights`` is a self-contained weighted query (the same shape
+    ``build_query`` emits) for ONE interest cluster; ``importance`` is the
+    cluster's share of the user's total action weight, normalized to sum
+    to 1 over the live clusters.  Lanes are ordered by importance
+    descending (ties: smallest member pin id), so a user's lane layout is
+    deterministic.
+    """
+
+    cluster_pins: np.ndarray     # (k, n_slots) int32, -1 padded
+    cluster_weights: np.ndarray  # (k, n_slots) float32, 0 padded
+    importance: np.ndarray       # (k,) float32, sums to 1
+    user_feat: int = 0
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.cluster_pins.shape[0])
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.cluster_pins.shape[1])
+
+
+def _agglomerate(
+    vecs: np.ndarray, mass: np.ndarray, n_clusters: int
+) -> List[List[int]]:
+    """Deterministic average-linkage agglomeration to ``n_clusters``.
+
+    Greedy centroid merging (PinnerSage's Ward-style host-side pass,
+    shrunk to numpy): repeatedly merge the pair of clusters with the
+    closest weighted centroids.  Distances are float64 and the argmin
+    scans row-major, so ties break on the smallest (i, j) — no RNG, no
+    dict-order dependence; the same action multiset always produces the
+    same clustering.
+    """
+    members = [[i] for i in range(vecs.shape[0])]
+    cent = np.asarray(vecs, np.float64).copy()
+    mass = np.asarray(mass, np.float64).copy()
+    while len(members) > n_clusters:
+        diff = cent[:, None, :] - cent[None, :, :]
+        d2 = np.einsum("ijk,ijk->ij", diff, diff)
+        iu = np.triu_indices(len(members), k=1)
+        flat = np.full_like(d2, np.inf)
+        flat[iu] = d2[iu]
+        i, j = np.unravel_index(int(np.argmin(flat)), flat.shape)
+        tot = mass[i] + mass[j]
+        cent[i] = (mass[i] * cent[i] + mass[j] * cent[j]) / tot
+        mass[i] = tot
+        members[i] = members[i] + members[j]
+        del members[j]
+        cent = np.delete(cent, j, axis=0)
+        mass = np.delete(mass, j, axis=0)
+    return members
+
+
+def build_user_query(
+    actions: Sequence[UserAction],
+    pin_topics: np.ndarray,   # (n_pins, n_topics) pin embedding table
+    n_slots: int,
+    n_clusters: int = 3,
+    half_life_hours: float = 24.0,
+    default_weight: float | None = None,
+    user_feat: int = 0,
+) -> UserQuery:
+    """Cluster a user's action history into a multi-interest ``UserQuery``.
+
+    The PinnerSage translation of §5.1's flat homefeed query: instead of
+    blending hundreds of acted pins into one weighted set (which washes
+    distinct interests into a mushy centroid), the DISTINCT acted pins are
+    agglomeratively clustered over their topic vectors and each cluster
+    becomes its own weighted query lane:
+
+      * per-pin weights are the same decayed action sums ``build_query``
+        uses (canonical-order float sums — see ``_decayed_pin_weights``);
+      * cluster importance I_c = the cluster's share of total action
+        weight (``math.fsum`` over member pins, order-independent),
+        normalized to sum to 1;
+      * within a lane, pins keep their decayed weights, top-``n_slots``
+        by (weight desc, pin asc) — ``build_query``'s truncation rule.
+
+    Users with fewer distinct pins than ``n_clusters`` get one cluster per
+    pin (k adapts down, never pads up); ``n_clusters=1`` reproduces the
+    flat homefeed query exactly (same pins, same weights, one lane).
+    Deterministic end to end — same action multiset, same ``UserQuery``.
+    """
+    if n_clusters < 1:
+        raise ValueError(f"n_clusters must be >= 1, got {n_clusters}")
+    acc = _decayed_pin_weights(actions, half_life_hours, default_weight)
+    if not acc:
+        raise ValueError("build_user_query needs at least one action")
+    topics = np.asarray(pin_topics)
+    pins = sorted(acc)
+    if pins[0] < 0 or pins[-1] >= topics.shape[0]:
+        raise ValueError(
+            f"action pin ids span [{pins[0]}, {pins[-1]}] but pin_topics "
+            f"covers [0, {topics.shape[0]})"
+        )
+    w64 = np.array([acc[p] for p in pins], dtype=np.float64)
+    k = min(n_clusters, len(pins))
+    members = _agglomerate(topics[pins].astype(np.float64), w64, k)
+
+    clusters = []
+    for mem in members:
+        mem_pins = sorted(pins[m] for m in mem)
+        imp = math.fsum(acc[p] for p in mem_pins)
+        clusters.append((imp, mem_pins))
+    # importance descending, smallest member pin breaking ties: lane order
+    # is a pure function of the clustering, not of merge history
+    clusters.sort(key=lambda c: (-c[0], c[1][0]))
+
+    cluster_pins = np.full((k, n_slots), -1, dtype=np.int32)
+    cluster_weights = np.zeros((k, n_slots), dtype=np.float32)
+    imp64 = np.array([c[0] for c in clusters], dtype=np.float64)
+    for ci, (_, mem_pins) in enumerate(clusters):
+        items = sorted(
+            ((p, acc[p]) for p in mem_pins), key=lambda kv: (-kv[1], kv[0])
+        )[:n_slots]
+        for si, (p, w) in enumerate(items):
+            cluster_pins[ci, si] = p
+            cluster_weights[ci, si] = w
+    importance = (imp64 / imp64.sum()).astype(np.float32)
+    return UserQuery(
+        cluster_pins=cluster_pins,
+        cluster_weights=cluster_weights,
+        importance=importance,
+        user_feat=int(user_feat),
+    )
+
+
+def cluster_step_budgets(importance: np.ndarray, n_steps: int) -> np.ndarray:
+    """Eq. 2 applied at CLUSTER granularity: per-lane step totals.
+
+    ``N_c = floor(I_c * N)`` with a min-1 floor for live clusters — the
+    same shape as ``sampling.allocate_steps`` (clusters have no graph
+    degree, so the Eq. 1 scaling s_p enters WITHIN each lane when the
+    engine splits the lane total across its member pins).  Host-side
+    numpy on normalized importance; every budget is <= ``n_steps``, the
+    engine's static chunk bound.
+    """
+    imp = np.asarray(importance, np.float32)
+    n_c = np.floor(imp * np.float32(n_steps)).astype(np.int32)
+    return np.where(imp > 0, np.maximum(n_c, 1), 0).astype(np.int32)
+
+
+class UserBatch(NamedTuple):
+    """A batch of multi-interest users flattened to cluster lanes.
+
+    The lane axis L = sum of every user's k is the SAME query axis the
+    PR 5 batched engine fuses over — multi-interest serving adds lanes,
+    never pallas_calls.  ``lane_user`` / ``lane_of_user`` are host-side
+    numpy (static at trace time): the per-user lane map the merge uses to
+    gather a user's lanes back together.
+    """
+
+    pins: jnp.ndarray          # (L, n_slots) int32
+    weights: jnp.ndarray       # (L, n_slots) float32
+    feats: jnp.ndarray         # (L,) int32
+    importance: jnp.ndarray    # (L,) float32, per-user normalized
+    step_budgets: jnp.ndarray  # (L,) int32 per-lane Eq. 2 totals
+    lane_user: np.ndarray      # (L,) int32 lane -> user index
+    lane_of_user: np.ndarray   # (n_users, k_max) int32 lane ids, -1 pad
+    n_users: int
+
+
+def batch_user_queries(
+    users: Sequence[UserQuery], n_steps: int
+) -> UserBatch:
+    """Flatten users -> cluster lanes for one batched engine call.
+
+    Ragged users (different k) flatten to different LANE COUNTS, not
+    different shapes: every lane is (n_slots,) and budgets/importance are
+    data, so any mix of users with the same total lane count shares one
+    compiled program.  ``n_steps`` is the PER-USER walk budget (the flat
+    path's ``cfg.n_steps``), split across each user's lanes by cluster
+    importance — a k-cluster user costs the same step budget as a flat
+    user, it just spends it per interest.
+    """
+    if not users:
+        raise ValueError("batch_user_queries needs at least one user")
+    n_slots = users[0].n_slots
+    for i, u in enumerate(users):
+        if u.n_slots != n_slots:
+            raise ValueError(
+                f"user {i} has {u.n_slots} slots but the batch has "
+                f"{n_slots}; build every UserQuery with the same n_slots"
+            )
+    k_max = max(u.n_clusters for u in users)
+    pins, weights, feats, imps, budgets, lane_user = [], [], [], [], [], []
+    lane_of_user = np.full((len(users), k_max), -1, dtype=np.int32)
+    for ui, u in enumerate(users):
+        u_budgets = cluster_step_budgets(u.importance, n_steps)
+        for ci in range(u.n_clusters):
+            lane_of_user[ui, ci] = len(pins)
+            lane_user.append(ui)
+            pins.append(u.cluster_pins[ci])
+            weights.append(u.cluster_weights[ci])
+            feats.append(u.user_feat)
+            imps.append(u.importance[ci])
+            budgets.append(u_budgets[ci])
+    return UserBatch(
+        pins=jnp.asarray(np.stack(pins)),
+        weights=jnp.asarray(np.stack(weights)),
+        feats=jnp.asarray(np.asarray(feats, np.int32)),
+        importance=jnp.asarray(np.asarray(imps, np.float32)),
+        step_budgets=jnp.asarray(np.asarray(budgets, np.int32)),
+        lane_user=np.asarray(lane_user, np.int32),
+        lane_of_user=lane_of_user,
+        n_users=len(users),
+    )
 
 
 def serve_batch(
@@ -144,6 +395,7 @@ def serve_batch(
     slack: float = 2.0,
     rank=None,
     scenario: jnp.ndarray | None = None,
+    step_budgets: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """One SPMD serving step: Pixie over a whole query batch.
 
@@ -211,6 +463,14 @@ def serve_batch(
     raises: stage 2 gathers candidate neighborhoods from the full CSR,
     which a node-range shard doesn't hold — rank on an unsharded replica,
     or rank host-side from the sharded walk's ``(scores, ids)``.
+
+    ``step_budgets`` (optional ``(batch,)`` int32) overrides each query
+    lane's Eq. 2 step total as DATA — the multi-interest layer rides its
+    interest-cluster lanes on the batch axis with importance-proportional
+    budgets (``batch_user_queries``), and ragged users share compiled
+    programs because budgets never enter a shape.  ``None`` (every
+    existing caller) leaves the classic static ``cfg.n_steps`` in place —
+    same program, same results.  Unsupported over a ``ShardedGraph``.
     """
     if backend is not None and backend != cfg.backend:
         cfg = dataclasses.replace(cfg, backend=backend)
@@ -234,6 +494,13 @@ def serve_batch(
     from repro.core import distributed as dist_lib
 
     if isinstance(graph, dist_lib.ShardedGraph):
+        if step_budgets is not None:
+            raise ValueError(
+                "serve_batch(step_budgets=...) over a ShardedGraph is not "
+                "supported: the pod-sharded engine allocates Eq. 2 budgets "
+                "from cfg.n_steps; serve multi-interest lanes on an "
+                "unsharded replica"
+            )
         if rank is not None:
             raise ValueError(
                 "serve_batch(rank=...) over a ShardedGraph is not "
@@ -261,15 +528,27 @@ def serve_batch(
         graph.n_boards, cfg.count_boards,
     ):
         scores, ids, steps, n_high = walk_lib.recommend_with_stats_batched(
-            graph, pins, weights, user_feats, keys, cfg
+            graph, pins, weights, user_feats, keys, cfg,
+            step_budgets=step_budgets,
         )
-    else:
+    elif step_budgets is None:
 
         def one(qp, qw, uf, k):
             return walk_lib.recommend_with_stats(graph, qp, qw, uf, k, cfg)
 
         scores, ids, steps, n_high = jax.vmap(one)(
             pins, weights, user_feats, keys
+        )
+    else:
+
+        def one_budgeted(qp, qw, uf, k, sb):
+            return walk_lib.recommend_with_stats(
+                graph, qp, qw, uf, k, cfg, step_budget=sb
+            )
+
+        scores, ids, steps, n_high = jax.vmap(one_budgeted)(
+            pins, weights, user_feats, keys,
+            jnp.asarray(step_budgets, jnp.int32),
         )
     if rank is not None:
         from repro.serving import ranker as ranker_lib

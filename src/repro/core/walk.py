@@ -423,11 +423,20 @@ def pixie_random_walk(
     user_feat: Array,      # () int32 personalization feature (e.g. language)
     key: Array,
     cfg: WalkConfig,
+    step_budget=None,      # optional () int32 override of cfg.n_steps
 ) -> WalkResult:
     """PIXIERANDOMWALKMULTIPLE: biased, weighted, early-stopped, boosted.
 
     Returns dense per-slot visit counts; combine with
     ``counter_lib.boost_combine`` + ``topk_dense`` for recommendations.
+
+    ``step_budget`` overrides the Eq. 2 total ``cfg.n_steps`` as DATA (a
+    Python int or a traced int32 scalar) — the multi-interest query layer
+    gives each interest-cluster lane its own budget without recompiling
+    per budget value.  It must be <= ``cfg.n_steps``: the while loop's
+    static chunk bound stays ``cfg.max_chunks()``, so a smaller budget
+    exhausts via the per-slot ``steps_taken < n_q`` check while a larger
+    one would be silently truncated.
     """
     if cfg.n_v < 1:
         raise ValueError(
@@ -455,7 +464,7 @@ def pixie_random_walk(
         jnp.where(valid_q, query_weights, 0.0),
         degs,
         jnp.asarray(graph.max_pin_degree),
-        cfg.n_steps,
+        cfg.n_steps if step_budget is None else step_budget,
     )
     slot_of_walker, _ = sampling.allocate_walkers(n_q, w)
     query_of_walker = jnp.take(safe_q, slot_of_walker).astype(jnp.int32)
@@ -562,14 +571,20 @@ def recommend_with_stats(
     user_feat: Array,
     key: Array,
     cfg: WalkConfig,
+    step_budget=None,
 ) -> Tuple[Array, Array, Array, Array]:
     """recommend plus walk telemetry -> (scores, ids, steps_taken, n_high).
 
     ``steps_taken``/``n_high`` are Algorithm 3's early-stop observables —
     the serving layer exports them so a fleet can see how much of the step
     budget early stopping is actually saving (paper §4's latency lever).
+    ``step_budget`` is the optional per-lane Eq. 2 budget override
+    (see ``pixie_random_walk``).
     """
-    res = pixie_random_walk(graph, query_pins, query_weights, user_feat, key, cfg)
+    res = pixie_random_walk(
+        graph, query_pins, query_weights, user_feat, key, cfg,
+        step_budget=step_budget,
+    )
     boosted = counter_lib.boost_combine(res.counts)
     scores, ids = counter_lib.topk_dense(boosted, cfg.top_k)
     return scores, ids, res.steps_taken, res.n_high
@@ -606,6 +621,7 @@ def pixie_random_walk_batched(
     user_feats: Array,     # (n_queries,) int32 personalization features
     keys: Array,           # (n_queries,) per-query PRNG keys (random.split)
     cfg: WalkConfig,
+    step_budgets: Optional[Array] = None,  # (n_queries,) int32 Eq. 2 totals
 ) -> WalkResult:
     """PIXIERANDOMWALKMULTIPLE over a whole serving batch, batch-natively.
 
@@ -634,6 +650,14 @@ def pixie_random_walk_batched(
     fields lead with the batch axis: counts ``(n_queries, n_slots,
     n_pins)``, board_counts ``(n_queries, n_slots, n_boards) | None``,
     steps_taken / n_high ``(n_queries, n_slots)``.
+
+    ``step_budgets`` optionally overrides the Eq. 2 total PER QUERY LANE
+    as data — the multi-interest layer rides its interest clusters on this
+    axis, each with a budget proportional to cluster importance, and ragged
+    users (different k) still share one compiled program because budgets
+    are array values, not shapes.  Each budget must be <= ``cfg.n_steps``
+    (the static chunk bound); per-lane parity with the per-query engine at
+    the same budget is preserved exactly.
     """
     if cfg.n_v < 1:
         raise ValueError(
@@ -661,12 +685,21 @@ def pixie_random_walk_batched(
     degs = graph.pin_degree(safe_q) * valid_q.astype(graph.p2b.offsets.dtype)
 
     # Eq. 1-2 per query — the same traced program the vmapped path runs
-    n_q = jax.vmap(
-        lambda v, qw, dg: sampling.allocate_steps(
-            jnp.where(v, qw, 0.0), dg,
-            jnp.asarray(graph.max_pin_degree), cfg.n_steps,
-        )
-    )(valid_q, query_weights, degs)                            # (B, S)
+    if step_budgets is None:
+        n_q = jax.vmap(
+            lambda v, qw, dg: sampling.allocate_steps(
+                jnp.where(v, qw, 0.0), dg,
+                jnp.asarray(graph.max_pin_degree), cfg.n_steps,
+            )
+        )(valid_q, query_weights, degs)                        # (B, S)
+    else:
+        n_q = jax.vmap(
+            lambda v, qw, dg, bt: sampling.allocate_steps(
+                jnp.where(v, qw, 0.0), dg,
+                jnp.asarray(graph.max_pin_degree), bt,
+            )
+        )(valid_q, query_weights, degs,
+          jnp.asarray(step_budgets, jnp.int32))                # (B, S)
     slot_of_walker_q, _ = jax.vmap(
         lambda nq: sampling.allocate_walkers(nq, w)
     )(n_q)                                                     # (B, w)
@@ -772,6 +805,7 @@ def recommend_with_stats_batched(
     user_feats: Array,     # (n_queries,)
     keys: Array,           # (n_queries,) per-query PRNG keys
     cfg: WalkConfig,
+    step_budgets: Optional[Array] = None,
 ) -> Tuple[Array, Array, Array, Array]:
     """Batch-native ``recommend_with_stats``: one fused engine, whole batch.
 
@@ -779,16 +813,111 @@ def recommend_with_stats_batched(
     n_high (B, n_slots))`` — bit-identical to vmapping
     ``recommend_with_stats`` over the same per-query keys; the walk runs on
     the batch-native engine and only the cheap Eq. 3 booster / top-k run
-    under vmap.
+    under vmap.  ``step_budgets`` is the optional (B,) per-lane Eq. 2
+    budget override (see ``pixie_random_walk_batched``).
     """
     res = pixie_random_walk_batched(
-        graph, query_pins, query_weights, user_feats, keys, cfg
+        graph, query_pins, query_weights, user_feats, keys, cfg,
+        step_budgets=step_budgets,
     )
     boosted = jax.vmap(counter_lib.boost_combine)(res.counts)
     scores, ids = jax.vmap(lambda b: counter_lib.topk_dense(b, cfg.top_k))(
         boosted
     )
     return scores, ids, res.steps_taken, res.n_high
+
+
+# ---------------------------------------------------------------------------
+# Multi-interest merge: Eq. 3 across a user's interest-cluster lanes
+# ---------------------------------------------------------------------------
+
+# id-lane sentinel that sorts AFTER every real pin id
+_MERGE_ID_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def merge_interest_topk(
+    scores: Array,      # (k, top_k) float32 per-cluster boosted scores
+    ids: Array,         # (k, top_k) int32 per-cluster pin ids, -1 padded
+    importance: Array,  # (k,) float32 cluster importance, 0 for pad lanes
+    top_k: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """Merge one user's per-cluster top-k lists: Eq. 3 across clusters.
+
+    The multi-hit booster applied a second time at the USER level:
+
+        V[p] = (sum_c I_c * sqrt(V_c[p]))**2
+
+    — the importance-weighted form of ``counter_lib.boost_combine``, so a
+    pin surfacing in several of the user's interest clusters beats a
+    same-mass single-cluster pin, exactly the paper's Eq. 3 rationale.
+
+    Bit-reproducible BY CONSTRUCTION, which is what lets the fused serving
+    path and the per-cluster oracle share this function and agree
+    bit-identically (verdict ``multi_interest_agrees``):
+
+      * entries are canonically ordered first — ``lax.sort`` on
+        (id, contribution) — so equal inputs reach the sum in one order
+        no matter how lanes were produced;
+      * per-id sums are explicit left-to-right shift-adds (run length is
+        bounded by k: within a lane ids are distinct), never a float
+        ``Reduce`` whose association XLA may retile per program shape;
+      * ties in the final top-k break on the id-sorted entry index, i.e.
+        by ascending pin id — deterministic across batch compositions.
+
+    Lanes with ``importance <= 0`` are padding (ragged users).  A user
+    with exactly ONE live lane passes its lane through VERBATIM — k=1
+    collapses bit-identically to the flat homefeed path instead of
+    round-tripping scores through sqrt/square.
+
+    Returns ``(scores (top_k,), ids (top_k,))``, id -1 / score 0 padded,
+    with ``top_k`` defaulting to the per-lane top_k.
+    """
+    if scores.ndim != 2 or scores.shape != ids.shape:
+        raise ValueError(
+            f"scores/ids must be matching (k, top_k), got {scores.shape} "
+            f"vs {ids.shape}"
+        )
+    k, per_lane_k = scores.shape
+    out_k = per_lane_k if top_k is None else top_k
+    live_lane = importance > 0
+    valid = live_lane[:, None] & (ids >= 0) & (scores > 0)
+    contrib = jnp.where(
+        valid, importance[:, None] * jnp.sqrt(scores), 0.0
+    ).reshape(-1)
+    sort_ids = jnp.where(valid, ids, _MERGE_ID_SENTINEL).reshape(-1)
+    sid, sc = jax.lax.sort((sort_ids, contrib), num_keys=2)
+
+    # left-to-right sequential per-id sums via shift-adds: a pin appears in
+    # at most k lanes (per-lane ids are distinct), so k-1 shifted adds
+    # cover every run; each pass appends exactly one term to the running
+    # sum, so the association is a fixed left-to-right chain — elementwise
+    # adds XLA cannot reassociate, unlike a Reduce
+    acc = sc
+    for d in range(1, k):
+        same = jnp.concatenate(
+            [sid[d:] == sid[:-d],
+             jnp.zeros((d,), bool)]
+        )
+        shifted = jnp.concatenate([sc[d:], jnp.zeros((d,), sc.dtype)])
+        acc = acc + jnp.where(same, shifted, 0.0)
+
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sid[1:] != sid[:-1]]
+    )
+    owner = first & (sid != _MERGE_ID_SENTINEL)
+    merged = jnp.where(owner, acc * acc, -jnp.inf)
+    vals, idx = jax.lax.top_k(merged, out_k)
+    got = vals > -jnp.inf
+    merged_scores = jnp.where(got, vals, 0.0).astype(scores.dtype)
+    merged_ids = jnp.where(got, jnp.take(sid, idx), -1).astype(jnp.int32)
+
+    # exact k=1 collapse: a single live lane is returned verbatim
+    if out_k == per_lane_k:
+        single = jnp.sum(live_lane.astype(jnp.int32)) == 1
+        lane = jnp.argmax(live_lane)
+        merged_scores = jnp.where(single, scores[lane], merged_scores)
+        merged_ids = jnp.where(single, ids[lane], merged_ids)
+    return merged_scores, merged_ids
 
 
 # ---------------------------------------------------------------------------

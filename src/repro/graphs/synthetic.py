@@ -8,12 +8,19 @@ benchmark substrate generates graphs with those properties planted, plus the
 LDA-style topic vectors §3.2's pruning consumes (we generate Dirichlet topic
 mixtures directly instead of running LDA on pin descriptions — same interface,
 documented in DESIGN.md).
+The multi-interest serving layer adds a USER substrate on top: a seeded
+sampler of synthetic action histories with PLANTED multi-topic users
+(``sample_user_histories``) — each user acts on pins drawn from a small
+set of planted interest topics, so the PinnerSage-style clustering in
+``core/service.build_user_query`` has real structure to recover and the
+open-loop traffic generator (serving/traffic.py) can drive the
+multi-interest intake with user-shaped load.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -185,6 +192,100 @@ def small_test_graph(seed: int = 0) -> SyntheticGraph:
             mean_board_size=30, popularity_exponent=0.6, seed=seed,
         )
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class UserHistoryConfig:
+    """Knobs of the planted multi-topic user sampler."""
+
+    n_users: int = 16
+    n_interests: int = 3        # planted topics per user
+    mean_actions: int = 30      # Poisson mean actions per user
+    max_age_hours: float = 72.0
+    offtopic_frac: float = 0.1  # actions ignoring the planted interests
+    seed: int = 0
+
+
+class UserHistory(NamedTuple):
+    """One sampled user: an action history plus its planted ground truth."""
+
+    actions: list              # List[service.UserAction]
+    topics: np.ndarray         # (n_interests,) planted interest topic ids
+    mixture: np.ndarray        # (n_interests,) interest mixture weights
+
+
+# action-type distribution of the sampler (weights from service.py's table
+# don't matter here — only that the MIX is fixed and seeded)
+_ACTION_TYPES = ("save", "click", "like", "view")
+_ACTION_PROBS = (0.3, 0.3, 0.2, 0.2)
+
+
+def sample_user_histories(
+    sg: SyntheticGraph, cfg: UserHistoryConfig
+) -> List[UserHistory]:
+    """Seeded synthetic action histories with PLANTED multi-topic users.
+
+    Every user gets ``n_interests`` distinct planted topics and a Dirichlet
+    mixture over them; each action picks a planted topic by the mixture
+    (or, with ``offtopic_frac``, any pin at all), then a pin of that topic
+    weighted by graph degree — heavy users of a topic act on its popular
+    pins, like the §5.1 homefeed assumption.  Deterministic for a given
+    (graph, cfg): same seed, same histories, byte for byte.
+
+    Returns the actions ALONGSIDE the planted ground truth, so tests can
+    check the clustering layer recovers the planted structure and the
+    traffic harness can label requests.
+    """
+    from repro.core.service import UserAction
+
+    if cfg.n_interests < 1:
+        raise ValueError(f"n_interests must be >= 1, got {cfg.n_interests}")
+    rng = np.random.default_rng(cfg.seed)
+    nt = sg.pin_topics.shape[1]
+    if cfg.n_interests > nt:
+        raise ValueError(
+            f"n_interests={cfg.n_interests} exceeds the graph's "
+            f"{nt} topics"
+        )
+    pin_main_topic = sg.pin_topics.argmax(axis=1)
+    degs = np.asarray(sg.graph.p2b.degrees(), np.float64)
+    pools, pool_probs = [], []
+    for t in range(nt):
+        pool = np.where((pin_main_topic == t) & (degs > 0))[0]
+        pools.append(pool)
+        w = degs[pool] if pool.size else None
+        pool_probs.append(w / w.sum() if pool.size else None)
+    # only plant topics that actually have connected pins
+    plantable = np.array([t for t in range(nt) if pools[t].size > 0])
+    if plantable.size < cfg.n_interests:
+        raise ValueError(
+            f"only {plantable.size} topics have connected pins; cannot "
+            f"plant {cfg.n_interests} interests per user"
+        )
+    connected = np.where(degs > 0)[0]
+    conn_probs = degs[connected] / degs[connected].sum()
+
+    users: List[UserHistory] = []
+    for _ in range(cfg.n_users):
+        topics = rng.choice(plantable, size=cfg.n_interests, replace=False)
+        mixture = rng.dirichlet(np.full(cfg.n_interests, 2.0))
+        n_actions = max(cfg.n_interests, int(rng.poisson(cfg.mean_actions)))
+        actions = []
+        for _ in range(n_actions):
+            if rng.random() < cfg.offtopic_frac:
+                pin = int(rng.choice(connected, p=conn_probs))
+            else:
+                t = int(topics[rng.choice(cfg.n_interests, p=mixture)])
+                pin = int(rng.choice(pools[t], p=pool_probs[t]))
+            kind = str(rng.choice(_ACTION_TYPES, p=_ACTION_PROBS))
+            age = float(rng.uniform(0.0, cfg.max_age_hours))
+            actions.append(UserAction(pin=pin, action=kind, age_hours=age))
+        users.append(UserHistory(
+            actions=actions,
+            topics=np.asarray(topics, np.int32),
+            mixture=mixture.astype(np.float32),
+        ))
+    return users
 
 
 def top_degree_pins(sg: SyntheticGraph, k: int = 16) -> np.ndarray:

@@ -130,3 +130,89 @@ def recommend_two_stage(
         backend=backend, with_stats=with_stats,
         rank=rank, scenario=scenario,
     )
+
+
+def recommend_multi_interest(
+    graph: PinBoardGraph,
+    batch,                      # service.UserBatch (users -> cluster lanes)
+    key: Array,
+    walk_cfg: walk_lib.WalkConfig,
+    backend: Optional[str] = None,
+    with_stats: bool = False,
+    rank: "Optional[ranker_lib.RankRequest]" = None,
+    scenario: Optional[Array] = None,   # (n_users,) head index per user
+) -> Tuple[Array, ...]:
+    """Multi-interest serving: every user's interest clusters in ONE walk.
+
+    The PinnerSage-shaped request path end to end:
+
+      1. all users' cluster lanes (``service.batch_user_queries``) ride the
+         PR 5 query axis of ONE ``serve_batch`` call — per-lane Eq. 2 step
+         budgets from cluster importance, constant ``pallas_call`` count no
+         matter how many clusters the batch carries (lanes add rows, not
+         kernel launches);
+      2. each user's lanes gather back through the host-static lane map
+         and merge with ``walk.merge_interest_topk`` — Eq. 3 across
+         clusters, importance-weighted, bit-reproducible, so the fused
+         path agrees bit-for-bit with per-cluster single-query walks
+         merged the same way (verdict ``multi_interest_agrees``);
+      3. single-cluster users (k=1) pass their lane through VERBATIM —
+         the flat §5.1 homefeed path, unchanged.
+
+    ``key`` is either a scalar PRNG key (split into one stream per LANE)
+    or a ``(n_lanes,)`` typed key array — the bucketed server derives
+    per-(user, cluster) streams by double ``fold_in`` and passes them
+    here, keeping a user's recommendations independent of batch
+    composition.
+
+    ``rank`` turns the step two-stage ON THE MERGED candidate set: the
+    user-level query-bag the scenario ranker head re-scores is built from
+    all of the user's interests at once (``walk_cfg.top_k`` is overridden
+    to ``rank.cfg.n_candidates`` so the merge emits a full candidate
+    bag), with ``scenario`` indexed per USER, not per lane.
+
+    Returns ``(scores, ids)`` each ``(n_users, top_k)``; with
+    ``with_stats=True`` appends the LANE-level ``(steps_taken, n_high)``
+    telemetry — per-cluster observables, mapped to users by
+    ``batch.lane_user`` — so a fleet can see which interest burns budget.
+    """
+    import numpy as np
+
+    if rank is not None and walk_cfg.top_k != rank.cfg.n_candidates:
+        walk_cfg = dataclasses.replace(
+            walk_cfg, top_k=rank.cfg.n_candidates
+        )
+    if scenario is not None and rank is None:
+        raise ValueError(
+            "scenario= selects a ranker head and needs rank=; a bare "
+            "multi-interest retrieval has no scenario axis"
+        )
+    from repro.core import service
+
+    scores, ids, steps, n_high = service.serve_batch(
+        graph, batch.pins, batch.weights, batch.feats, key, walk_cfg,
+        backend=backend, with_stats=True,
+        step_budgets=batch.step_budgets,
+    )
+
+    lane_map = np.asarray(batch.lane_of_user)        # (U, k_max), static
+    take_idx = jnp.asarray(np.where(lane_map >= 0, lane_map, 0))
+    live = jnp.asarray((lane_map >= 0).astype(np.float32))
+    lane_scores = jnp.take(scores, take_idx, axis=0)  # (U, k_max, K)
+    lane_ids = jnp.take(ids, take_idx, axis=0)
+    lane_imp = jnp.take(batch.importance, take_idx) * live
+    merged_scores, merged_ids = jax.vmap(walk_lib.merge_interest_topk)(
+        lane_scores, lane_ids, lane_imp
+    )
+    if rank is not None:
+        from repro.serving import ranker as ranker_lib
+
+        if scenario is None:
+            scenario = jnp.zeros((batch.n_users,), jnp.int32)
+        merged_scores, merged_ids = ranker_lib.rank_candidates(
+            rank.params, rank.cfg, graph, merged_ids, merged_scores,
+            scenario,
+        )
+    if with_stats:
+        return merged_scores, merged_ids, steps, n_high
+    return merged_scores, merged_ids

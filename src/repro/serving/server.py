@@ -181,6 +181,25 @@ class _Pending:
     key: jax.Array        # per-request PRNG stream (fold_in at submit)
     t_enqueue: float      # logical seconds (wall by default)
     scenario: int = 0     # ranker head index (ranked servers only)
+    budget: int = 0       # per-lane Eq. 2 step total (0 = cfg.n_steps)
+    user_id: Optional[int] = None   # owning user request (cluster lanes)
+    cluster_idx: int = 0  # lane index within the owning user
+
+
+@dataclasses.dataclass
+class _UserAssembly:
+    """One multi-interest user awaiting its cluster-lane results."""
+
+    n_clusters: int
+    importance: np.ndarray           # (k,) float32, normalized
+    t_enqueue: float
+    parts: Dict[int, Tuple[np.ndarray, np.ndarray]] = dataclasses.field(
+        default_factory=dict
+    )
+    wait_ms: float = 0.0
+    compute_ms: float = 0.0
+    generation: int = 0
+    batch_seq: int = -1
 
 
 @dataclasses.dataclass
@@ -213,6 +232,8 @@ class PixieServer:
         max_queue_per_bucket: Optional[int] = None,
         stats_capacity: int = 4096,
         ranker=None,
+        pin_topics: Optional[np.ndarray] = None,
+        n_clusters: int = 3,
     ):
         """``backend`` overrides cfg.backend ("xla" | "pallas") so a fleet
         can flip every replica onto the fused Pallas walk engine at server
@@ -244,9 +265,34 @@ class PixieServer:
         selects each request's head (related-pins vs homefeed).  Ranked
         results keep the ``(scores, ids)`` contract, now ``final_k`` wide.
         Ranker params are closed over like the walk config; a sharded
-        replica rejects ``ranker`` (stage 2 needs the full CSR)."""
+        replica rejects ``ranker`` (stage 2 needs the full CSR).
+
+        ``pin_topics`` opens the MULTI-INTEREST intake (``submit_user``):
+        action histories cluster host-side into up to ``n_clusters``
+        interest lanes (``service.build_user_query`` over this topic
+        table), each lane routes through the normal shape buckets with an
+        importance-proportional Eq. 2 step budget, and ``harvest``
+        reassembles users from their lane results via
+        ``walk.merge_interest_topk``.  Budgets ride every dispatched batch
+        as a ``(batch,)`` data array (flat requests carry the full
+        ``cfg.n_steps`` — bit-identical to the budget-less program), so
+        ragged users share the per-bucket compiled programs; bucket CHOICE
+        keys on each cluster lane's own pin count, never on k."""
         if backend is not None and backend != cfg.backend:
             cfg = dataclasses.replace(cfg, backend=backend)
+        if pin_topics is not None and ranker is not None:
+            raise ValueError(
+                "a multi-interest replica can't rank in-batch: stage 2 "
+                "re-scores the MERGED per-user candidate bag, which only "
+                "exists after harvest; rank via "
+                "recommend.recommend_multi_interest(rank=...) instead"
+            )
+        if n_clusters < 1:
+            raise ValueError(f"n_clusters must be >= 1, got {n_clusters}")
+        self.pin_topics = (
+            None if pin_topics is None else np.asarray(pin_topics)
+        )
+        self.n_clusters = int(n_clusters)
         self.ranker = ranker
         self.graph = graph
         self.cfg = cfg
@@ -286,6 +332,10 @@ class PixieServer:
             s: [] for _, s in self._buckets
         }
         self._inflight: List[_InFlight] = []
+        self._users: Dict[int, _UserAssembly] = {}
+        # jit cache keys on (k, top_k) shapes: users with the same cluster
+        # count share one compiled merge program
+        self._merge = jax.jit(walk_lib.merge_interest_topk)
         self._build_serve()
 
     def _build_serve(self) -> None:
@@ -299,6 +349,12 @@ class PixieServer:
                     "candidate neighborhoods from the full CSR, which a "
                     "node-range shard doesn't hold; rank on an unsharded "
                     "replica"
+                )
+            if self.pin_topics is not None:
+                raise ValueError(
+                    "a sharded replica can't serve multi-interest users: "
+                    "per-lane step budgets are not threaded through the "
+                    "pod-sharded engine; serve them on an unsharded replica"
                 )
             graph, mesh, axis, slack = (
                 self.graph, self.mesh, self.axis, self.slack
@@ -317,7 +373,19 @@ class PixieServer:
             # swap reuses the compiled program (no retrace) — pinned by
             # _plain_serve._cache_size() in tests/test_traffic.py
             if getattr(self, "_plain_serve", None) is None:
-                if self.ranker is None:
+                if self.pin_topics is not None:
+                    # multi-interest replica: per-lane Eq. 2 budgets ride
+                    # every batch as a (batch,) DATA array — flat requests
+                    # carry cfg.n_steps, which allocates bit-identically
+                    # to the static budget (core/sampling.allocate_steps)
+                    self._plain_serve = jax.jit(
+                        lambda graph, pins, weights, feats, keys, budgets:
+                            service.serve_batch(
+                                graph, pins, weights, feats, keys, cfg,
+                                step_budgets=budgets,
+                            )
+                    )
+                elif self.ranker is None:
                     self._plain_serve = jax.jit(
                         lambda graph, pins, weights, feats, keys:
                             service.serve_batch(
@@ -420,6 +488,85 @@ class PixieServer:
         ))
         return req_id
 
+    def submit_user(
+        self,
+        actions: Sequence[service.UserAction],
+        user_feat: int = 0,
+        now: Optional[float] = None,
+        req_id: Optional[int] = None,
+        half_life_hours: float = 24.0,
+    ) -> Optional[int]:
+        """Enqueue one multi-interest USER (an action history, not a query).
+
+        The PinnerSage intake: the history clusters host-side into up to
+        ``n_clusters`` interest lanes (``service.build_user_query`` over
+        the replica's ``pin_topics``), and EACH lane enqueues like a flat
+        request — routed to the smallest bucket fitting its own pin count,
+        budgeted by cluster importance (``service.cluster_step_budgets``
+        splits the flat path's ``cfg.n_steps`` across the user's lanes),
+        keyed ``fold_in(fold_in(server_key, req_id), cluster_idx)`` so
+        every (user, cluster) pair owns a PRNG stream independent of batch
+        composition.  ``harvest`` reassembles the user once all lanes
+        return and emits ONE merged ``QueryResult`` under the returned
+        request id (Eq. 3 across clusters via ``walk.merge_interest_topk``;
+        a single-cluster user's lane passes through verbatim — the flat
+        homefeed path).
+
+        Admission is all-or-nothing: if any lane would overflow its bucket
+        queue the WHOLE user sheds (returns None, one ``stats.dropped``) —
+        partially-walked users would silently skew the merge.
+        """
+        if self.pin_topics is None:
+            raise ValueError(
+                "submit_user needs a multi-interest replica; pass "
+                "pin_topics= to PixieServer to open the clustered intake"
+            )
+        uq = service.build_user_query(
+            actions, self.pin_topics, n_slots=self.max_slots,
+            n_clusters=self.n_clusters, half_life_hours=half_life_hours,
+            user_feat=user_feat,
+        )
+        budgets = service.cluster_step_budgets(uq.importance, self.cfg.n_steps)
+        if now is None:
+            now = time.perf_counter()
+        if req_id is None:
+            req_id = self._seq
+            self._seq += 1
+        else:
+            self._seq = max(self._seq, req_id + 1)
+        # all-or-nothing admission: count this user's demand per bucket
+        lanes = []
+        demand: Dict[int, int] = {}
+        for ci in range(uq.n_clusters):
+            n = int(np.sum(uq.cluster_pins[ci] >= 0))
+            _, slots = self._route(n)
+            demand[slots] = demand.get(slots, 0) + 1
+            lanes.append((ci, slots, n))
+        if self.max_queue_per_bucket is not None:
+            for slots, extra in demand.items():
+                if len(self._queues[slots]) + extra > self.max_queue_per_bucket:
+                    self.stats.dropped += 1
+                    return None
+        user_key = jax.random.fold_in(self._key, req_id)
+        for ci, slots, n in lanes:
+            # cluster rows fill valid entries first, so the prefix copy is
+            # the whole lane; padding past it is bit-invariant to the walk
+            qp = np.full(slots, -1, np.int32)
+            qw = np.zeros(slots, np.float32)
+            qp[:n] = uq.cluster_pins[ci][:n]
+            qw[:n] = uq.cluster_weights[ci][:n]
+            self._queues[slots].append(_Pending(
+                req_id=req_id, pins=qp, weights=qw, feat=int(user_feat),
+                key=jax.random.fold_in(user_key, ci), t_enqueue=now,
+                budget=int(budgets[ci]), user_id=req_id, cluster_idx=ci,
+            ))
+        self._users[req_id] = _UserAssembly(
+            n_clusters=uq.n_clusters,
+            importance=np.asarray(uq.importance, np.float32),
+            t_enqueue=now,
+        )
+        return req_id
+
     # -- batch formation ------------------------------------------------------
     def _dispatch(self, batch_size: int, slots: int, now: float) -> None:
         """Form one batch from a bucket queue and enqueue the jitted call.
@@ -449,6 +596,12 @@ class PixieServer:
         )
         if self.ranker is not None:
             args += (jnp.asarray(scen),)
+        if self.pin_topics is not None:
+            budgets = np.full((batch_size,), self.cfg.n_steps, np.int32)
+            for i, e in enumerate(entries):
+                if e.budget:
+                    budgets[i] = e.budget
+            args += (jnp.asarray(budgets),)
         t_wall = time.perf_counter()
         scores, ids = self._serve(*args)
         self._inflight.append(_InFlight(
@@ -516,6 +669,17 @@ class PixieServer:
             s_np, i_np = np.asarray(fl.scores), np.asarray(fl.ids)
             for i, e in enumerate(fl.entries):
                 wait_ms = max(0.0, (fl.t_dispatch - e.t_enqueue) * 1e3)
+                if e.user_id is not None:
+                    # a cluster lane: park it in the user's assembly; the
+                    # merged user-level result is emitted below once every
+                    # lane has returned
+                    asm = self._users[e.user_id]
+                    asm.parts[e.cluster_idx] = (s_np[i], i_np[i])
+                    asm.wait_ms = max(asm.wait_ms, wait_ms)
+                    asm.compute_ms = max(asm.compute_ms, compute_ms)
+                    asm.generation = max(asm.generation, fl.generation)
+                    asm.batch_seq = max(asm.batch_seq, fl.batch_seq)
+                    continue
                 out.append(QueryResult(
                     req_id=e.req_id, scores=s_np[i], ids=i_np[i],
                     generation=fl.generation, wait_ms=wait_ms,
@@ -526,6 +690,31 @@ class PixieServer:
                 self.stats.compute_ms.append(compute_ms)
                 self.stats.latencies_ms.append(wait_ms + compute_ms)
         self._inflight = []
+        # emit users whose lanes all returned: Eq. 3 across clusters via
+        # the SAME bit-reproducible merge the fused service path uses.
+        # wait/compute are the max over the user's lanes (the user is done
+        # when its slowest interest is), batch_seq/generation the last
+        # lane's — one queries/latency sample per USER, not per lane.
+        done = [rid for rid, a in self._users.items()
+                if len(a.parts) == a.n_clusters]
+        for rid in sorted(done):
+            asm = self._users.pop(rid)
+            scores = jnp.asarray(
+                np.stack([asm.parts[c][0] for c in range(asm.n_clusters)])
+            )
+            ids = jnp.asarray(
+                np.stack([asm.parts[c][1] for c in range(asm.n_clusters)])
+            )
+            ms, mi = self._merge(scores, ids, jnp.asarray(asm.importance))
+            out.append(QueryResult(
+                req_id=rid, scores=np.asarray(ms), ids=np.asarray(mi),
+                generation=asm.generation, wait_ms=asm.wait_ms,
+                compute_ms=asm.compute_ms, batch_seq=asm.batch_seq,
+            ))
+            self.stats.queries += 1
+            self.stats.wait_ms.append(asm.wait_ms)
+            self.stats.compute_ms.append(asm.compute_ms)
+            self.stats.latencies_ms.append(asm.wait_ms + asm.compute_ms)
         return out
 
     def flush(self, now: Optional[float] = None) -> List[QueryResult]:

@@ -41,13 +41,21 @@ from repro.serving.server import PixieServer, QueryResult
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One offered request: arrival time plus the query payload."""
+    """One offered request: arrival time plus the query payload.
+
+    Two payload shapes share the schedule: a FLAT query (``pins`` +
+    ``weights``, the classic homefeed request) or a MULTI-INTEREST user
+    (``actions`` set — a raw action history the server clusters into
+    interest lanes via ``submit_user``).  ``actions`` wins when both are
+    present; flat requests leave it ``None``.
+    """
 
     req_id: int
     t_arrival: float            # seconds since epoch start
     pins: Tuple[int, ...]
     weights: Tuple[float, ...]
     user_feat: int
+    actions: Optional[Tuple] = None   # Tuple[service.UserAction, ...]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +105,43 @@ def poisson_requests(
             pins=tuple(int(p) for p in pins),
             weights=tuple(float(w) for w in weights),
             user_feat=int(rng.integers(0, cfg.n_feats)),
+        ))
+    return out
+
+
+def poisson_user_requests(
+    histories: Sequence, cfg: OpenLoopConfig
+) -> List[Request]:
+    """Open-loop arrivals whose payloads are USER ACTION HISTORIES.
+
+    ``histories`` is a sequence of ``graphs.synthetic.UserHistory`` (or
+    anything with ``.actions``); arrival ``i`` carries history
+    ``i % len(histories)`` — the round-robin keeps every planted user in
+    rotation while the Poisson schedule stays identical to the flat
+    generator's for the same ``(seed, offered_qps, n_requests)``, so QPS
+    sweeps compare flat vs multi-interest serving under the SAME arrival
+    pattern.  Feats draw from the same seeded stream position the flat
+    generator uses for sizes, so the schedules stay seeded-deterministic
+    but are NOT bitwise-coupled to flat payloads (they don't need to be:
+    the request ids, not the payload stream, seed the walks).
+    """
+    if cfg.offered_qps <= 0:
+        raise ValueError(f"offered_qps must be > 0, got {cfg.offered_qps}")
+    if not histories:
+        raise ValueError("poisson_user_requests needs at least one history")
+    rng = np.random.default_rng(cfg.seed)
+    gaps = rng.exponential(1.0 / cfg.offered_qps, size=cfg.n_requests)
+    arrivals = np.cumsum(gaps)
+    out: List[Request] = []
+    for i in range(cfg.n_requests):
+        h = histories[i % len(histories)]
+        out.append(Request(
+            req_id=i,
+            t_arrival=float(arrivals[i]),
+            pins=(),
+            weights=(),
+            user_feat=int(rng.integers(0, cfg.n_feats)),
+            actions=tuple(h.actions),
         ))
     return out
 
@@ -165,6 +210,16 @@ def run_open_loop(
     ``swap_at``/``swap_graph`` exercise the daily graph reload (§3.3)
     UNDER load: after offering ``swap_at`` requests the new graph swaps
     in; requests dispatched before the swap carry the old generation.
+
+    Multi-interest requests (``Request.actions`` set) route through
+    ``server.submit_user``; each user surfaces as ONE harvested result
+    once its slowest cluster lane lands.  The executor model then sees
+    only user-FINAL batches: a user's ``compute_ms``/``wait_ms`` are the
+    max over its lanes and its ``batch_seq`` the last lane's, so the
+    queueing curve is an honest APPROXIMATION under multi-interest load
+    (batches holding only non-final lanes don't advance the executor).
+    The bit-level regression signal is the ``multi_interest_agrees``
+    verdict, never this model's latency numbers.
     """
     requests = sorted(requests, key=lambda r: r.t_arrival)
     busy_until = 0.0
@@ -196,8 +251,25 @@ def run_open_loop(
             n_dropped += 1
             server.stats.dropped += 1
             continue
-        server.submit(list(req.pins), list(req.weights), req.user_feat,
-                      now=req.t_arrival, req_id=req.req_id)
+        if req.actions is not None:
+            # multi-interest user: the server clusters the history into
+            # lanes; all-or-nothing admission may shed the whole user
+            # (returns None) — already counted in server.stats.dropped.
+            admitted = server.submit_user(
+                list(req.actions), req.user_feat,
+                now=req.t_arrival, req_id=req.req_id,
+            )
+            if admitted is None:
+                n_dropped += 1
+                server.pump(now=req.t_arrival)
+                _account()
+                busy_until = _advance_executor(
+                    harvested, dispatch_time, busy_until
+                )
+                continue
+        else:
+            server.submit(list(req.pins), list(req.weights), req.user_feat,
+                          now=req.t_arrival, req_id=req.req_id)
         server.pump(now=req.t_arrival)  # full-bucket dispatches
         _account()
         # fold harvested compute into the executor model as batches land

@@ -90,3 +90,22 @@ def test_two_stage_recsys_example_smoke():
     ).all()
     # the two scenario heads rank the same retrieval differently
     assert not np.array_equal(fused_scores[0], fused_scores[1])
+
+
+def test_multi_interest_user_example_smoke():
+    mod = _load("multi_interest_user")
+    scores, ids, results, agree = mod.main(
+        n_pins=400, n_boards=60, n_users=3, n_clusters=2, n_steps=512,
+        n_walkers=64, top_k=8,
+    )
+    scores, ids = np.asarray(scores), np.asarray(ids)
+    assert scores.shape == ids.shape == (3, 8)
+    assert agree  # server path bit-identical to the fused path
+    assert len(results) == 3
+    live = ids >= 0
+    assert live.any(axis=1).all()  # every user got recommendations
+    assert (ids[live] < 400).all()
+    # merged scores sorted descending per user over the live prefix
+    for u in range(3):
+        s = scores[u][live[u]]
+        assert (np.diff(s) <= 0).all()

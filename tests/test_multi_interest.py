@@ -1,0 +1,560 @@
+"""Multi-interest users as a first-class query layer.
+
+The contract under test (service.UserQuery -> walk budget plumbing ->
+recommend.recommend_multi_interest -> PixieServer.submit_user):
+
+  * **Clustering is a pure function of the action multiset**: the same
+    actions in any order build the SAME ``UserQuery`` (pins, weights,
+    importance, lane order) — agglomeration is seeded-free determinstic
+    numpy with canonical tie-breaks, never RNG.
+  * **Lanes, not launches**: all of a batch's cluster lanes ride the PR 5
+    query axis of ONE batched walk — the ``pallas_call`` count of a
+    multi-interest serve step is CONSTANT as k grows (jaxpr-pinned).
+  * **Verdict-16 parity** (``multi_interest_agrees``): the fused path —
+    per-lane Eq. 2 budgets as traced data + ``merge_interest_topk`` —
+    is BIT-identical to the per-cluster oracle (independent single-query
+    walks, each with its cluster's budget, merged host-side by the same
+    jitted merge at the live-k shape), across backend x gather x k.
+  * **k=1 collapses exactly**: a single-cluster user's merged result is
+    its lane VERBATIM — the flat §5.1 homefeed path, bit for bit.
+  * **Budgets are data, not shape**: ``step_budgets`` rides the batch as
+    an int32 array; ``None`` vs the full-budget array is bit-identical,
+    so ragged users share compiled programs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import service, walk as walk_lib
+from repro.core.service import UserAction
+from repro.graphs import synthetic
+from repro.kernels.introspect import pallas_grids
+from repro.serving.recommend import recommend_multi_interest
+
+
+@pytest.fixture(scope="module")
+def sg():
+    return synthetic.small_test_graph()
+
+
+@pytest.fixture(scope="module")
+def histories(sg):
+    cfg = synthetic.UserHistoryConfig(
+        n_users=16, n_interests=3, mean_actions=14, seed=5
+    )
+    return synthetic.sample_user_histories(sg, cfg)
+
+
+def _cfg(**kw):
+    kw = {
+        "n_steps": 768, "n_walkers": 32, "chunk_steps": 4, "top_k": 16,
+        "n_p": 40, "n_v": 3, "backend": "pallas", **kw,
+    }
+    return walk_lib.WalkConfig(**kw)
+
+
+def _user_batch(sg, histories, n_users, n_clusters, n_steps, n_slots=8):
+    uqs = [
+        service.build_user_query(
+            h.actions, sg.pin_topics, n_slots=n_slots, n_clusters=n_clusters
+        )
+        for h in histories[:n_users]
+    ]
+    return service.batch_user_queries(uqs, n_steps=n_steps), uqs
+
+
+# ---------------------------------------------------------------------------
+# UserQuery construction: determinism + clustering invariants
+# ---------------------------------------------------------------------------
+
+
+def test_user_query_order_independent(sg, histories):
+    """Shuffled action order -> bit-identical UserQuery."""
+    actions = list(histories[0].actions)
+    uq = service.build_user_query(actions, sg.pin_topics, n_slots=8)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        perm = [actions[i] for i in rng.permutation(len(actions))]
+        uq2 = service.build_user_query(perm, sg.pin_topics, n_slots=8)
+        np.testing.assert_array_equal(uq.cluster_pins, uq2.cluster_pins)
+        np.testing.assert_array_equal(
+            np.asarray(uq.cluster_weights).view(np.uint32),
+            np.asarray(uq2.cluster_weights).view(np.uint32),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(uq.importance).view(np.uint32),
+            np.asarray(uq2.importance).view(np.uint32),
+        )
+
+
+def test_user_query_clustering_invariants(sg, histories):
+    """Clusters partition the acted pins; importance sums to 1, sorted
+    descending; every lane's slots are the cluster's heaviest pins."""
+    for h in histories[:6]:
+        uq = service.build_user_query(
+            h.actions, sg.pin_topics, n_slots=8, n_clusters=3
+        )
+        pins = np.asarray(uq.cluster_pins)
+        acted = sorted({a.pin for a in h.actions})
+        placed = sorted(int(p) for p in pins[pins >= 0])
+        # every placed pin acted, no pin in two clusters (slots may
+        # truncate a big cluster, so placed is a SUBSET of acted)
+        assert len(placed) == len(set(placed))
+        assert set(placed) <= set(acted)
+        imp = np.asarray(uq.importance)
+        assert imp.shape == (uq.n_clusters,)
+        np.testing.assert_allclose(imp.sum(), 1.0, rtol=1e-6)
+        assert (np.diff(imp) <= 0).all()  # lanes ordered by importance
+        assert (imp > 0).all()
+        # padding slots carry zero weight, live slots positive
+        w = np.asarray(uq.cluster_weights)
+        assert (w[pins < 0] == 0).all()
+        assert (w[pins >= 0] > 0).all()
+
+
+def test_user_query_k_caps_at_distinct_pins(sg):
+    """A user with fewer distinct pins than n_clusters gets one cluster
+    per pin, never an empty lane."""
+    acts = [UserAction(pin=3, action="save", age_hours=0.0),
+            UserAction(pin=3, action="click", age_hours=1.0)]
+    uq = service.build_user_query(acts, sg.pin_topics, n_slots=4,
+                                  n_clusters=3)
+    assert uq.n_clusters == 1
+    assert int(uq.cluster_pins[0, 0]) == 3
+    np.testing.assert_allclose(np.asarray(uq.importance), [1.0])
+
+
+def test_cluster_step_budgets():
+    imp = np.asarray([0.6, 0.3, 0.1], np.float32)
+    b = service.cluster_step_budgets(imp, 1000)
+    assert b.dtype == np.int32
+    np.testing.assert_array_equal(b, [600, 300, 100])
+    # a live lane never rounds to zero steps; a dead lane stays zero
+    tiny = np.asarray([0.9995, 0.0005, 0.0], np.float32)
+    np.testing.assert_array_equal(
+        service.cluster_step_budgets(tiny, 100), [99, 1, 0]
+    )
+
+
+def test_batch_user_queries_lane_maps(sg, histories):
+    batch, uqs = _user_batch(sg, histories, 4, 3, n_steps=1536)
+    lane_user = np.asarray(batch.lane_user)
+    lane_of_user = np.asarray(batch.lane_of_user)
+    n_lanes = batch.pins.shape[0]
+    assert n_lanes == sum(u.n_clusters for u in uqs)
+    # lane_of_user is the exact inverse of lane_user
+    for u in range(batch.n_users):
+        row = lane_of_user[u]
+        live = row[row >= 0]
+        assert (lane_user[live] == u).all()
+        assert len(live) == uqs[u].n_clusters
+    # budgets recompute per user from importance
+    for u in range(batch.n_users):
+        row = lane_of_user[u]
+        live = row[row >= 0]
+        np.testing.assert_array_equal(
+            np.asarray(batch.step_budgets)[live],
+            service.cluster_step_budgets(uqs[u].importance, 1536),
+        )
+
+
+def test_batch_user_queries_slot_mismatch_message(sg, histories):
+    """The error names the integer slot counts, not a shape tuple."""
+    a = service.build_user_query(histories[0].actions, sg.pin_topics,
+                                 n_slots=8)
+    b = service.build_user_query(histories[1].actions, sg.pin_topics,
+                                 n_slots=4)
+    with pytest.raises(ValueError, match=r"4 slots but the batch has 8"):
+        service.batch_user_queries([a, b], n_steps=100)
+
+
+# ---------------------------------------------------------------------------
+# merge_interest_topk: the bit-reproducible Eq. 3 cross-cluster merge
+# ---------------------------------------------------------------------------
+
+
+def test_merge_single_lane_verbatim():
+    """k=1 (and k>1 with one live lane) passes the lane through VERBATIM —
+    no sqrt/square round trip, so the flat path collapse is exact."""
+    s = jnp.asarray([[2.0, 1.5, 0.0]])
+    i = jnp.asarray([[7, 3, -1]], jnp.int32)
+    ms, mi = walk_lib.merge_interest_topk(s, i, jnp.asarray([1.0]))
+    np.testing.assert_array_equal(np.asarray(ms), np.asarray(s[0]))
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(i[0]))
+    # one live + one padding lane: still verbatim
+    s2 = jnp.concatenate([s, jnp.zeros_like(s)])
+    i2 = jnp.concatenate([i, jnp.full_like(i, -1)])
+    ms2, mi2 = walk_lib.merge_interest_topk(
+        s2, i2, jnp.asarray([1.0, 0.0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ms2).view(np.uint32), np.asarray(ms).view(np.uint32)
+    )
+    np.testing.assert_array_equal(np.asarray(mi2), np.asarray(mi))
+
+
+def test_merge_eq3_values_and_tiebreak():
+    """Eq. 3 across clusters: V[p] = (sum_c imp_c * sqrt(V_c[p]))^2,
+    multi-cluster hits boosted, score ties broken by ascending pin id."""
+    scores = jnp.asarray([[4.0, 1.0, 0.0], [4.0, 1.0, 0.0]])
+    ids = jnp.asarray([[2, 5, -1], [7, 2, -1]], jnp.int32)
+    imp = jnp.asarray([0.5, 0.5])
+    ms, mi = walk_lib.merge_interest_topk(scores, ids, imp)
+    # pin 2: (.5*sqrt(4) + .5*sqrt(1))^2 = 2.25; pin 7: (.5*2)^2 = 1;
+    # pin 5: (.5*1)^2 = .25
+    np.testing.assert_allclose(np.asarray(ms), [2.25, 1.0, 0.25])
+    np.testing.assert_array_equal(np.asarray(mi), [2, 7, 5])
+
+
+def test_merge_lane_order_invariant():
+    scores = jnp.asarray([[4.0, 1.0], [9.0, 4.0], [1.0, 0.0]])
+    ids = jnp.asarray([[2, 5], [7, 2], [5, -1]], jnp.int32)
+    imp = jnp.asarray([0.5, 0.3, 0.2])
+    a = walk_lib.merge_interest_topk(scores, ids, imp)
+    perm = jnp.asarray([2, 0, 1])
+    b = walk_lib.merge_interest_topk(scores[perm], ids[perm], imp[perm])
+    np.testing.assert_array_equal(
+        np.asarray(a[0]).view(np.uint32), np.asarray(b[0]).view(np.uint32)
+    )
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_merge_padding_lanes_are_noops():
+    """Zero-importance lanes change nothing bitwise — the fused path's
+    k_max padding is invisible to the merge."""
+    scores = jnp.asarray([[4.0, 1.0], [9.0, 4.0]])
+    ids = jnp.asarray([[2, 5], [7, 2]], jnp.int32)
+    imp = jnp.asarray([0.6, 0.4])
+    a = walk_lib.merge_interest_topk(scores, ids, imp)
+    pad_s = jnp.concatenate([scores, jnp.asarray([[123.0, 5.0]])])
+    pad_i = jnp.concatenate([ids, jnp.asarray([[1, 4]], jnp.int32)])
+    pad_imp = jnp.concatenate([imp, jnp.asarray([0.0])])
+    b = walk_lib.merge_interest_topk(pad_s, pad_i, pad_imp)
+    np.testing.assert_array_equal(
+        np.asarray(a[0]).view(np.uint32), np.asarray(b[0]).view(np.uint32)
+    )
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+# ---------------------------------------------------------------------------
+# Budgets are data: traced step budgets == static cfg.n_steps programs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_step_budgets_none_equals_full_array(sg, backend):
+    """step_budgets=None (every legacy caller) is bit-identical to an
+    explicit full-budget array: the traced Eq. 2 allocation reproduces
+    the static one exactly for budgets < 2^24."""
+    g = sg.graph
+    cfg = _cfg(backend=backend)
+    qs = synthetic.top_degree_pins(sg, 8)
+    pins = jnp.asarray(np.asarray(qs[:8]).reshape(4, 2), jnp.int32)
+    weights = jnp.full((4, 2), 1.0, jnp.float32)
+    feats = jnp.zeros((4,), jnp.int32)
+    key = jax.random.key(2)
+    a = service.serve_batch(g, pins, weights, feats, key, cfg,
+                            with_stats=True)
+    b = service.serve_batch(
+        g, pins, weights, feats, key, cfg, with_stats=True,
+        step_budgets=jnp.full((4,), cfg.n_steps, jnp.int32),
+    )
+    for x, y, name in zip(a, b, ("scores", "ids", "steps", "n_high")):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=name
+        )
+
+
+# ---------------------------------------------------------------------------
+# Verdict 16: fused multi-interest vs the per-cluster oracle
+# ---------------------------------------------------------------------------
+
+
+def _oracle_users(g, batch, uqs, lane_keys, cfg):
+    """Per-cluster single-query walks + the same jitted merge at each
+    user's LIVE-k shape (the fused path pads to k_max; padding lanes are
+    proven bitwise-invisible above)."""
+    single = jax.jit(
+        lambda qp, qw, uf, k, sb: walk_lib.recommend_with_stats(
+            g, qp, qw, uf, k, cfg, step_budget=sb
+        )
+    )
+    merge = jax.jit(walk_lib.merge_interest_topk, static_argnames=())
+    out_s, out_i = [], []
+    lane_of_user = np.asarray(batch.lane_of_user)
+    for u, uq in enumerate(uqs):
+        lanes = lane_of_user[u]
+        lanes = lanes[lanes >= 0]
+        ss, ii = [], []
+        for li in lanes:
+            s, i, _, _ = single(
+                batch.pins[li], batch.weights[li], batch.feats[li],
+                lane_keys[li], batch.step_budgets[li],
+            )
+            ss.append(s)
+            ii.append(i)
+        ms, mi = merge(
+            jnp.stack(ss), jnp.stack(ii), jnp.asarray(uq.importance)
+        )
+        out_s.append(np.asarray(ms))
+        out_i.append(np.asarray(mi))
+    return np.stack(out_s), np.stack(out_i)
+
+
+@pytest.mark.parametrize("gather_mode", ["scalar", "dma"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_multi_interest_agrees_with_oracle(sg, histories, backend,
+                                           gather_mode):
+    """The acceptance matrix heart: fused multi-interest serving (all
+    lanes in ONE batched walk, budgets as data, jitted merge) bit-equals
+    per-cluster independent walks merged host-side."""
+    if backend == "xla" and gather_mode == "dma":
+        pytest.skip("gather_mode is a pallas-kernel axis")
+    g = sg.graph
+    cfg = _cfg(backend=backend, gather_mode=gather_mode)
+    batch, uqs = _user_batch(sg, histories, 4, 3, n_steps=cfg.n_steps)
+    key = jax.random.key(17)
+    lane_keys = jax.random.split(key, batch.pins.shape[0])
+    ms, mi = recommend_multi_interest(g, batch, lane_keys, cfg)
+    os_, oi = _oracle_users(g, batch, uqs, lane_keys, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(ms).view(np.uint32), os_.view(np.uint32)
+    )
+    np.testing.assert_array_equal(np.asarray(mi), oi)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_k1_collapses_to_flat_serve(sg, histories, backend):
+    """n_clusters=1 users through the multi-interest path == the flat
+    homefeed serve_batch on the same single-cluster queries, bit for
+    bit (the verbatim lane passthrough, end to end)."""
+    g = sg.graph
+    cfg = _cfg(backend=backend)
+    batch, uqs = _user_batch(sg, histories, 3, 1, n_steps=cfg.n_steps)
+    key = jax.random.key(23)
+    lane_keys = jax.random.split(key, batch.pins.shape[0])
+    ms, mi = recommend_multi_interest(g, batch, lane_keys, cfg)
+    fs, fi = service.serve_batch(
+        g, batch.pins, batch.weights, batch.feats, lane_keys, cfg
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ms).view(np.uint32), np.asarray(fs).view(np.uint32)
+    )
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(fi))
+
+
+# ---------------------------------------------------------------------------
+# Lowering pin: clusters add lanes, never pallas_calls
+# ---------------------------------------------------------------------------
+
+
+def test_multi_interest_lowers_to_constant_calls(sg, histories):
+    """The pallas_call count of a multi-interest serve step is constant
+    as k grows from 1 to 4: cluster lanes ride the batch (query) axis of
+    the SAME 2-call chunk program — lanes scale rows, not launches."""
+    g = sg.graph
+    cfg = _cfg()
+    structures = {}
+    for k in (1, 2, 4):
+        batch, _ = _user_batch(sg, histories, 4, k, n_steps=cfg.n_steps)
+        n_lanes = batch.pins.shape[0]
+
+        def step(key, batch=batch, n_lanes=n_lanes):
+            return recommend_multi_interest(
+                g, batch, jax.random.split(key, n_lanes), cfg
+            )
+
+        grids = pallas_grids(jax.make_jaxpr(step)(jax.random.key(0)))
+        structures[k] = (len(grids), sorted(len(g_) for g_ in grids))
+    assert structures[1] == structures[2] == structures[4], structures
+    assert structures[1][0] == 2  # the 2 walk-engine calls per chunk
+
+
+# ---------------------------------------------------------------------------
+# Sampler-driven end to end (the workload generator feeding the server)
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_histories_build_valid_batches(sg, histories):
+    batch, uqs = _user_batch(sg, histories, len(histories), 3,
+                             n_steps=1024)
+    pins = np.asarray(batch.pins)
+    assert ((pins >= -1) & (pins < sg.graph.n_pins)).all()
+    assert (np.asarray(batch.step_budgets) >= 0).all()
+    # every user's budgets sum to <= n_steps (Eq. 2 floor rounding)
+    lane_of_user = np.asarray(batch.lane_of_user)
+    for u in range(batch.n_users):
+        live = lane_of_user[u][lane_of_user[u] >= 0]
+        assert np.asarray(batch.step_budgets)[live].sum() <= 1024 + len(live)
+
+
+# ---------------------------------------------------------------------------
+# Server intake: submit_user -> bucketed dispatch -> harvest reassembly
+# ---------------------------------------------------------------------------
+
+
+def _drain(srv):
+    out = []
+    while srv.pending():
+        srv.pump(now=srv.next_deadline())
+    out.extend(srv.harvest())
+    return {r.req_id: r for r in out}
+
+
+def test_server_submit_user_matches_fused_path(sg, histories):
+    """The bucketed server's per-user merged results are bit-identical to
+    recommend_multi_interest on the same lanes with the same
+    fold_in(fold_in(server_key, req_id), cluster_idx) streams."""
+    from repro.serving.server import PixieServer
+
+    g = sg.graph
+    cfg = _cfg(backend="xla", n_steps=256)
+    users = histories[:4]
+    srv = PixieServer(
+        g, cfg, batch_size=8, n_slots=8, seed=42,
+        pin_topics=sg.pin_topics, n_clusters=3,
+    )
+    rids = [
+        srv.submit_user(u.actions, user_feat=i % 4, now=0.001 * i,
+                        req_id=100 + i)
+        for i, u in enumerate(users)
+    ]
+    res = _drain(srv)
+    assert sorted(res) == sorted(rids)
+
+    uqs = [
+        service.build_user_query(u.actions, sg.pin_topics, n_slots=8,
+                                 n_clusters=3)
+        for u in users
+    ]
+    batch = service.batch_user_queries(uqs, n_steps=cfg.n_steps)
+    skey = jax.random.key(42)
+    lane_keys = []
+    lane_of_user = np.asarray(batch.lane_of_user)
+    for li in range(batch.pins.shape[0]):
+        u = int(batch.lane_user[li])
+        ci = int(np.where(lane_of_user[u] == li)[0][0])
+        lane_keys.append(
+            jax.random.fold_in(jax.random.fold_in(skey, rids[u]), ci)
+        )
+    feats = np.asarray(batch.lane_user) % 4
+    batch = batch._replace(feats=jnp.asarray(feats, jnp.int32))
+    ms, mi = recommend_multi_interest(g, batch, jnp.stack(lane_keys), cfg)
+    for u, rid in enumerate(rids):
+        np.testing.assert_array_equal(
+            res[rid].scores.view(np.uint32),
+            np.asarray(ms[u]).view(np.uint32), err_msg=f"user {u} scores",
+        )
+        np.testing.assert_array_equal(
+            res[rid].ids, np.asarray(mi[u]), err_msg=f"user {u} ids"
+        )
+
+
+def test_server_user_results_batch_composition_independent(sg, histories):
+    """Submission order, batch size, and interleaved flushes never change
+    a user's merged recommendations — per-(user, cluster) streams, not
+    batch position, seed the walks."""
+    from repro.serving.server import PixieServer
+
+    g = sg.graph
+    cfg = _cfg(backend="xla", n_steps=256)
+    users = histories[:5]
+
+    def run(order, batch_size, interleave):
+        srv = PixieServer(
+            g, cfg, batch_size=batch_size, n_slots=8, seed=42,
+            pin_topics=sg.pin_topics, n_clusters=3,
+        )
+        out = []
+        for j, i in enumerate(order):
+            srv.submit_user(users[i].actions, user_feat=i % 4,
+                            now=0.01 * j, req_id=100 + i)
+            if interleave:
+                out.extend(srv.flush())
+        d = _drain(srv)
+        d.update({r.req_id: r for r in out})
+        return d
+
+    a = run(range(5), 8, False)
+    b = run(list(reversed(range(5))), 4, True)
+    assert sorted(a) == sorted(b)
+    for rid in a:
+        np.testing.assert_array_equal(
+            a[rid].scores.view(np.uint32), b[rid].scores.view(np.uint32)
+        )
+        np.testing.assert_array_equal(a[rid].ids, b[rid].ids)
+
+
+def test_server_submit_user_requires_pin_topics(sg, histories):
+    from repro.serving.server import PixieServer
+
+    srv = PixieServer(sg.graph, _cfg(backend="xla", n_steps=256),
+                      batch_size=4, n_slots=8)
+    with pytest.raises(ValueError, match="pin_topics"):
+        srv.submit_user(histories[0].actions)
+
+
+def test_open_loop_user_traffic_replays_bitwise(sg, histories):
+    """The open-loop harness drives submit_user end to end; the same
+    seeded schedule replayed against a server with a DIFFERENT batch
+    size serves every user bit-identically."""
+    from repro.serving import traffic
+    from repro.serving.server import PixieServer
+
+    cfg = _cfg(backend="xla", n_steps=256)
+    ol = traffic.OpenLoopConfig(offered_qps=500.0, n_requests=10, seed=5)
+    reqs = traffic.poisson_user_requests(histories[:4], ol)
+    assert all(r.actions is not None for r in reqs)
+
+    def run(batch_size):
+        srv = PixieServer(
+            sg.graph, cfg, batch_size=batch_size, n_slots=8, seed=9,
+            pin_topics=sg.pin_topics, n_clusters=2,
+        )
+        return traffic.run_open_loop(srv, reqs)
+
+    a, b = run(4), (run(7))
+    assert a.n_served == b.n_served == 10
+    for rid in a.results:
+        np.testing.assert_array_equal(
+            a.results[rid].scores.view(np.uint32),
+            b.results[rid].scores.view(np.uint32),
+        )
+        np.testing.assert_array_equal(a.results[rid].ids, b.results[rid].ids)
+
+
+def test_multi_interest_then_rank(sg, histories):
+    """rank= chains the stage-2 scenario head onto the MERGED per-user
+    candidate bag: walk top_k widens to n_candidates, scenario indexes
+    per USER, and the ranked output keeps the two-stage contracts."""
+    from repro.serving import ranker as ranker_lib
+
+    g = sg.graph
+    rcfg = ranker_lib.RankerConfig(
+        n_items=g.n_pins, d_model=16, n_neighbors=4,
+        n_candidates=16, final_k=6,
+    )
+    rank = ranker_lib.RankRequest(
+        ranker_lib.init_ranker_params(jax.random.key(7), rcfg), rcfg
+    )
+    cfg = _cfg(backend="xla", n_steps=256, top_k=4)  # top_k overridden
+    batch, _ = _user_batch(sg, histories, 3, 2, n_steps=cfg.n_steps)
+    lane_keys = jax.random.split(jax.random.key(29), batch.pins.shape[0])
+    scen = jnp.asarray([0, 1, 0], jnp.int32)
+    scores, ids = recommend_multi_interest(
+        g, batch, lane_keys, cfg, rank=rank, scenario=scen
+    )
+    scores, ids = np.asarray(scores), np.asarray(ids)
+    assert scores.shape == ids.shape == (3, rcfg.final_k)
+    finite = np.isfinite(scores)
+    assert finite.any(axis=1).all()
+    assert ((ids[finite] >= 0) & (ids[finite] < g.n_pins)).all()
+    assert (ids[~finite] == -1).all()
+    assert (np.diff(scores, axis=1) <= 0).all()
+    # scenario without rank raises
+    with pytest.raises(ValueError, match="scenario"):
+        recommend_multi_interest(g, batch, lane_keys, cfg, scenario=scen)

@@ -238,3 +238,38 @@ def test_two_stage_underfull_candidates_return_minus1():
     finite = np.isfinite(scores)
     assert finite.sum() == 1 and items[finite][0] == 0
     np.testing.assert_array_equal(items[~finite], -1)
+
+
+def test_build_query_float_sum_order_independent():
+    """Repeated actions on one pin must sum in CANONICAL order, not
+    arrival order.  The weights here are crafted so naive left-to-right
+    f64 accumulation lands on opposite sides of an f32 rounding boundary
+    depending on order: 1.0 + 2^-24 sits exactly on the round-to-even
+    midpoint, and the two ~1.15*2^-54 crumbs (each below 1.0's f64
+    half-ulp, together above it) decide which way it tips — BEFORE the
+    canonical-order fix, abcd summed to f32 1.0 but cdab to 1.0000001."""
+    import math
+
+    age_cd = 24.0 * (53 - math.log2(1.15))
+    a = service.UserAction(pin=7, action="save", age_hours=0.0)
+    b = service.UserAction(pin=7, action="like", age_hours=552.0)
+    c = service.UserAction(pin=7, action="like", age_hours=age_cd)
+    d = service.UserAction(pin=7, action="like", age_hours=age_cd)
+    _, w_ref = service.build_query([a, b, c, d], n_slots=2)
+    for order in ([c, d, a, b], [b, a, d, c], [d, b, c, a]):
+        _, w = service.build_query(order, n_slots=2)
+        np.testing.assert_array_equal(
+            np.asarray(w_ref).view(np.uint32), np.asarray(w).view(np.uint32),
+            err_msg=f"order {[x.action for x in order]}",
+        )
+
+
+def test_batch_queries_slot_mismatch_names_integer_slot_count():
+    """The ragged-batch error reports '3 slots', never the shape tuple
+    '(3,)' masquerading as a count."""
+    q0 = (np.asarray([1, 2, 5], np.int32),
+          np.asarray([1.0, 0.5, 0.1], np.float32))
+    q1 = (np.asarray([3, 4], np.int32), np.asarray([1.0, 0.5], np.float32))
+    with pytest.raises(ValueError, match=r"the batch has 3 slots") as ei:
+        service.batch_queries([q0, q1], [0, 0])
+    assert "(3,)" not in str(ei.value)

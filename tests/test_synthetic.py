@@ -1,0 +1,148 @@
+"""Invariants of the synthetic pin-board graph generator and the planted
+multi-topic user-history sampler (graphs/synthetic.py).
+
+These are the workload's ground-truth guarantees every benchmark and
+agreement verdict leans on: same seed -> same graph and same histories
+byte for byte; pin popularity heavy-tailed (§3.2's graph pruning target);
+heldout future-saves disjoint from the training CSR (the hit-rate
+evaluation's train/test split); sampled users ACTUALLY multi-topic (the
+clustering layer has planted structure to recover).
+"""
+
+import numpy as np
+import pytest
+
+from repro.graphs import synthetic
+
+
+@pytest.fixture(scope="module")
+def sg():
+    return synthetic.small_test_graph(seed=0)
+
+
+@pytest.fixture(scope="module")
+def histories(sg):
+    cfg = synthetic.UserHistoryConfig(
+        n_users=12, n_interests=3, mean_actions=24, seed=11
+    )
+    return synthetic.sample_user_histories(sg, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Graph generator
+# ---------------------------------------------------------------------------
+
+
+def test_generate_seeded_deterministic():
+    cfg = synthetic.SyntheticGraphConfig(
+        n_pins=400, n_boards=60, n_topics=8, seed=13
+    )
+    a = synthetic.generate(cfg)
+    b = synthetic.generate(cfg)
+    np.testing.assert_array_equal(np.asarray(a.graph.p2b.offsets),
+                                  np.asarray(b.graph.p2b.offsets))
+    np.testing.assert_array_equal(np.asarray(a.graph.p2b.targets),
+                                  np.asarray(b.graph.p2b.targets))
+    np.testing.assert_array_equal(np.asarray(a.graph.b2p.targets),
+                                  np.asarray(b.graph.b2p.targets))
+    np.testing.assert_array_equal(a.pin_topics, b.pin_topics)
+    np.testing.assert_array_equal(a.heldout_pins, b.heldout_pins)
+    np.testing.assert_array_equal(a.heldout_boards, b.heldout_boards)
+    # and a different seed is a different graph
+    c = synthetic.generate(
+        synthetic.SyntheticGraphConfig(n_pins=400, n_boards=60,
+                                       n_topics=8, seed=14)
+    )
+    assert not np.array_equal(np.asarray(a.graph.p2b.targets),
+                              np.asarray(c.graph.p2b.targets))
+
+
+def test_pin_degree_heavy_tailed(sg):
+    """Zipf-ish popularity: the top 10% of pins hold well more than 10%
+    of the edges (several times the uniform share)."""
+    degs = np.sort(np.asarray(sg.graph.p2b.degrees(), np.int64))[::-1]
+    total = degs.sum()
+    assert total > 0
+    top = max(1, len(degs) // 10)
+    top_share = degs[:top].sum() / total
+    assert top_share > 0.25, f"top-10% share {top_share:.3f} not heavy-tailed"
+
+
+def test_heldout_disjoint_from_training(sg):
+    """Every heldout (board, pin) future-save is absent from the training
+    CSR in BOTH directions — the hit-rate metric never rewards recalling
+    an edge the walk could simply read."""
+    p2b_off = np.asarray(sg.graph.p2b.offsets)
+    p2b_tgt = np.asarray(sg.graph.p2b.targets)
+    b2p_off = np.asarray(sg.graph.b2p.offsets)
+    b2p_tgt = np.asarray(sg.graph.b2p.targets)
+    n_pins = sg.graph.n_pins
+    assert len(sg.heldout_pins) == len(sg.heldout_boards) > 0
+    for pin, board in zip(sg.heldout_pins, sg.heldout_boards):
+        pin, lo = int(pin), int(board)  # heldout boards are LOCAL rows
+        nbrs = p2b_tgt[p2b_off[pin]:p2b_off[pin + 1]]
+        assert (n_pins + lo) not in nbrs, (pin, lo)
+        members = b2p_tgt[b2p_off[lo]:b2p_off[lo + 1]]
+        assert pin not in members, (pin, lo)
+
+
+# ---------------------------------------------------------------------------
+# User-history sampler
+# ---------------------------------------------------------------------------
+
+
+def test_histories_seeded_deterministic(sg, histories):
+    cfg = synthetic.UserHistoryConfig(
+        n_users=12, n_interests=3, mean_actions=24, seed=11
+    )
+    again = synthetic.sample_user_histories(sg, cfg)
+    assert len(again) == len(histories)
+    for a, b in zip(histories, again):
+        assert a.actions == b.actions
+        np.testing.assert_array_equal(a.topics, b.topics)
+        np.testing.assert_array_equal(
+            a.mixture.view(np.uint32), b.mixture.view(np.uint32)
+        )
+
+
+def test_histories_planted_structure(sg, histories):
+    """The planted ground truth is recoverable: distinct planted topics,
+    mixtures on the simplex, and the bulk of each user's actions land on
+    pins whose main topic is one of the planted ones (only the seeded
+    offtopic fraction may stray)."""
+    pin_main_topic = sg.pin_topics.argmax(axis=1)
+    for h in histories:
+        assert len(set(h.topics.tolist())) == len(h.topics) == 3
+        np.testing.assert_allclose(h.mixture.sum(), 1.0, rtol=1e-5)
+        assert len(h.actions) >= 3
+        planted = set(h.topics.tolist())
+        on_topic = sum(
+            1 for a in h.actions if int(pin_main_topic[a.pin]) in planted
+        )
+        assert on_topic / len(h.actions) > 0.5, (
+            f"only {on_topic}/{len(h.actions)} actions on planted topics"
+        )
+
+
+def test_histories_actions_well_formed(sg, histories):
+    degs = np.asarray(sg.graph.p2b.degrees())
+    for h in histories:
+        for a in h.actions:
+            assert 0 <= a.pin < sg.graph.n_pins
+            assert degs[a.pin] > 0          # acted pins are connected
+            assert a.action in ("save", "click", "like", "view")
+            assert 0.0 <= a.age_hours <= 72.0
+
+
+def test_histories_validate_config(sg):
+    with pytest.raises(ValueError, match="n_interests"):
+        synthetic.sample_user_histories(
+            sg, synthetic.UserHistoryConfig(n_users=1, n_interests=0)
+        )
+    with pytest.raises(ValueError, match="exceeds"):
+        synthetic.sample_user_histories(
+            sg,
+            synthetic.UserHistoryConfig(
+                n_users=1, n_interests=sg.pin_topics.shape[1] + 1
+            ),
+        )

@@ -10,7 +10,7 @@ Run locally after the smokes:
 
     PYTHONPATH=src python -m benchmarks.run \
         --only smoke earlystop_fused widepack dma_gather batchfuse \
-        sharded traffic two_stage multi_interest
+        sharded traffic two_stage multi_interest chaos
     PYTHONPATH=src python -m benchmarks.check_verdicts
 
 Exit code 0 iff every verdict is present and truthy.
@@ -62,6 +62,12 @@ VERDICTS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     # collapsing exactly to the flat homefeed path, with a constant
     # pallas_call count as k grows (jaxpr-pinned: lanes, not launches)
     ("BENCH_serving.json", ("multi_interest", "multi_interest_agrees")),
+    # bench_chaos (merged): degraded-mode serving — chaos-run shed budgets
+    # replayed through an unloaded submit(budget=...) oracle bit-identically
+    # across backend x gather, zero-fault chaos == plain open-loop run
+    # bit-for-bit, and dead-shard serving kills-and-counts walkers, zeroes
+    # the dead shard's counts, quantifies overlap@k, and revives bit-clean
+    ("BENCH_serving.json", ("chaos", "degraded_serving_agrees")),
     # bench_earlystop_fused: fused in-VMEM tally == naive recount
     ("results/bench.json", ("earlystop_fused", "counting",
                             "fused_matches_naive")),

@@ -25,7 +25,7 @@ BENCH_SERVING_PATH = os.path.join(
 # merged suite means adding its section name HERE, nowhere else
 MERGED_SECTIONS = (
     "widepack", "dma", "batchfuse", "sharded", "traffic", "two_stage",
-    "multi_interest",
+    "multi_interest", "chaos",
 )
 
 

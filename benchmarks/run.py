@@ -16,6 +16,7 @@ import time
 
 from benchmarks import (
     bench_batchfuse,
+    bench_chaos,
     bench_dma_gather,
     bench_earlystop_fused,
     bench_fig1_runtime,
@@ -66,6 +67,8 @@ SUITES = {
     "multi_interest": ("Multi-interest users: clustered queries as budgeted "
                        "lanes on the batch axis + Eq. 3 cross-cluster merge",
                        bench_multi_interest.run),
+    "chaos": ("Degraded-mode serving: elastic shed budgets, dead-shard "
+              "tolerance, seeded fault injection", bench_chaos.run),
 }
 
 VERDICT_KEYS = (
@@ -77,7 +80,7 @@ VERDICT_KEYS = (
     "widepack_backends_agree", "incremental_matches_full",
     "dma_backends_agree", "batch_engine_agrees", "sharded_engine_agrees",
     "traffic_buckets_agree", "two_stage_backends_agree",
-    "multi_interest_agrees",
+    "multi_interest_agrees", "degraded_serving_agrees",
 )
 
 

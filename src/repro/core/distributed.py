@@ -253,6 +253,12 @@ class ShardedBatchedWalkResult(NamedTuple):
     n_high: Array                   # (B, n_slots) int32, query pins debited
     dropped: Array                  # () int32 routing-overflow drops (total)
     max_occupancy: Array            # () int32 fullest route bucket seen
+    # () int32 walkers lost to DEAD shards (``shard_dead_at``): residents
+    # at the death superstep + walkers routed toward a dead shard after
+    # it.  Telemetry distinct from ``dropped`` (capacity overflow): drops
+    # tune ``slack``, kills quantify fault damage.  None on the healthy
+    # code path (no fault schedule supplied).
+    killed: Optional[Array] = None
 
 
 def pixie_walk_sharded_batched(
@@ -266,6 +272,7 @@ def pixie_walk_sharded_batched(
     *,
     slack: float = 2.0,
     unroll: bool = False,
+    shard_dead_at: Optional[Array] = None,
 ) -> ShardedBatchedWalkResult:
     """The batched fused walk engine on a node-range-sharded graph.
 
@@ -282,6 +289,25 @@ def pixie_walk_sharded_batched(
     mode (launch/dryrun.py): python loops instead of ``while``/``fori``,
     every chunk runs — mathematically identical (stopped rows are frozen
     by masking either way), just loop-free for XLA cost analysis.
+
+    ``shard_dead_at`` (optional ``(n_shards,)`` int32) is DEGRADED MODE:
+    shard ``s`` is dead from absolute superstep ``shard_dead_at[s]``
+    onward (``np.iinfo(np.int32).max`` = never dies).  A dead shard's
+    residents die with it, walkers routed toward it die in flight (both
+    tallied in ``killed`` — distinct from capacity ``dropped``), its
+    homed walkers stop being (re)injected, and any walker killed this way
+    re-enters at its (live) home shard on its next restart draw — the
+    ordinary PR 6 kill/rebirth-at-home machinery, no new collective.  At
+    harvest a shard that died before the walk finished contributes ZERO
+    counts/board counts and leaves the ``n_high`` tally: its HBM is gone,
+    so Eq. 3 counting renormalizes over the surviving shards and the
+    quality cost surfaces as overlap@k against an all-alive oracle
+    (serving/resilience.py), never as a silent score shift.  Pure data on
+    the replicated spec — flipping liveness never retraces — and
+    ``None`` (every existing caller) traces the exact healthy program,
+    byte-for-byte.  An all-``INT32_MAX`` schedule is value-identical to
+    ``None`` (the masks it introduces are all-true), which is how the
+    serving layer keeps one compiled program for both weathers.
     """
     if query_pins.ndim != 2:
         raise ValueError(
@@ -309,6 +335,16 @@ def pixie_walk_sharded_batched(
             f"has {s_axis} devices"
         )
     n_shards = s_axis
+    # degraded mode is a PYTHON-level branch: shard_dead_at=None traces
+    # the healthy program untouched (no dead masks in the jaxpr at all)
+    faulty = shard_dead_at is not None
+    if faulty:
+        shard_dead_at = jnp.asarray(shard_dead_at, jnp.int32)
+        if shard_dead_at.shape != (n_shards,):
+            raise ValueError(
+                f"shard_dead_at must be ({n_shards},) — one death "
+                f"superstep per shard — got {shard_dead_at.shape}"
+            )
     w = cfg.n_walkers
     w_total = n_queries * w
     pps = graph.pins_per_shard
@@ -330,12 +366,16 @@ def pixie_walk_sharded_batched(
     safe_q = jnp.where(valid_q, query_pins, 0)
     qid_of_walker = jnp.repeat(jnp.arange(n_queries, dtype=jnp.int32), w)
 
-    def local_walk(p2b_off, p2b_tgt, b2p_off, b2p_tgt, qp, qw, vq, ks):
+    def local_walk(p2b_off, p2b_tgt, b2p_off, b2p_tgt, qp, qw, vq, ks,
+                   *fault):
         p2b_off, p2b_tgt = p2b_off[0], p2b_tgt[0]
         b2p_off, b2p_tgt = b2p_off[0], b2p_tgt[0]
         sid = jax.lax.axis_index(axis)
         pin_lo = sid * pps
         board_lo = sid * bps
+        if faulty:
+            (dead_at,) = fault            # (S,) replicated death schedule
+            dead_self = jnp.take(dead_at, sid)
 
         # ---- replicated Eq. 1-2 setup: the same traced arithmetic as the
         # unsharded engine; query-pin degrees come from each shard's owned
@@ -371,14 +411,23 @@ def pixie_walk_sharded_batched(
         valid_row = vq.reshape(-1)
         n_q_row = n_q.reshape(-1)
 
-        def superstep(sstate, rb, row_active, first):
+        def superstep(sstate, rb, row_active, first, step_abs):
             """One global hop for every live walker resident on this shard.
 
             ``rb`` is the whole batch's (w_total, 4) counter-RNG row for
             this absolute step; walkers index it by GLOBAL walker id, so
             each consumes bit-for-bit the unsharded engine's draws.
+            ``step_abs`` is the absolute superstep index (None unless a
+            fault schedule is active): liveness = ``step_abs < dead_at``.
             """
-            res_v, res_g, res_p, counts, bcounts, high, dropped, occ = sstate
+            if faulty:
+                (res_v, res_g, res_p, counts, bcounts, high, dropped,
+                 occ, killed) = sstate
+                alive_vec = step_abs < dead_at                 # (S,) bool
+                self_alive = step_abs < dead_self              # () bool
+            else:
+                (res_v, res_g, res_p, counts, bcounts, high, dropped,
+                 occ) = sstate
             restart = rb[:, 0] < jnp.uint32(alpha_u32)         # (w_total,)
             active_w = jnp.take(row_active, row_of_walker)     # (w_total,)
 
@@ -393,6 +442,16 @@ def pixie_walk_sharded_batched(
                 & jnp.take(active_w, res_g)
             )
             inject = (restart | first) & active_w & (home_of_walker == sid)
+            if faulty:
+                # a dead shard kills its residents (tallied once, at the
+                # death superstep) and stops (re)injecting its homed
+                # walkers; a killed walker re-enters at its home on its
+                # next restart draw — the ordinary rebirth path
+                killed = killed + jnp.where(
+                    step_abs == dead_self, jnp.sum(res_v), 0
+                ).astype(jnp.int32)
+                res_live = res_live & self_alive
+                inject = inject & self_alive
             cand_v = jnp.concatenate([res_live, inject])
             cand_g = jnp.concatenate(
                 [res_g, jnp.arange(w_total, dtype=jnp.int32)]
@@ -418,6 +477,15 @@ def pixie_walk_sharded_batched(
             dest1 = jnp.where(sel_v, jnp.where(ok1, b_pick // bps, home),
                               n_shards)
             pay1 = jnp.where(ok1, b_pick, qpin)
+            if faulty:
+                # walkers bound for a dead shard die in flight (the drop
+                # sentinel keeps them out of the fabric); rebirth-at-home
+                # on their next restart draw, like capacity drops
+                tgt_dead1 = (dest1 < n_shards) & ~jnp.take(
+                    alive_vec, jnp.minimum(dest1, n_shards - 1)
+                )
+                killed = killed + jnp.sum(tgt_dead1).astype(jnp.int32)
+                dest1 = jnp.where(tgt_dead1, n_shards, dest1)
             v1, (g1, p1, f1), d1, o1 = _route(
                 axis, n_shards, cap, dest1,
                 (sel_g, pay1, ok1.astype(jnp.int32)),
@@ -446,6 +514,12 @@ def pixie_walk_sharded_batched(
             # dead-end boards and in-flight restarts continue at the query
             nxt = jnp.where(ok2, pin_pick, qpin1)
             dest2 = jnp.where(v1, nxt // pps, n_shards)
+            if faulty:
+                tgt_dead2 = (dest2 < n_shards) & ~jnp.take(
+                    alive_vec, jnp.minimum(dest2, n_shards - 1)
+                )
+                killed = killed + jnp.sum(tgt_dead2).astype(jnp.int32)
+                dest2 = jnp.where(tgt_dead2, n_shards, dest2)
             v2, (g2, p2, e2), d2, o2 = _route(
                 axis, n_shards, cap, dest2,
                 (g1, nxt, ok2.astype(jnp.int32)),
@@ -467,14 +541,19 @@ def pixie_walk_sharded_batched(
                 query_events=qev, n_queries=n_queries,
             )
             occ = jnp.maximum(occ, jnp.maximum(o1, o2))
-            return (
+            out = (
                 v2, g2, p2, counts, bcounts, high,
                 dropped + d0 + d1 + d2, occ,
             )
+            return out + (killed,) if faulty else out
 
         def chunk_body(it, state):
-            (res_v, res_g, res_p, counts, bcounts, high,
-             steps_taken, row_active, dropped, occ) = state
+            if faulty:
+                (res_v, res_g, res_p, counts, bcounts, high,
+                 steps_taken, row_active, dropped, occ, killed) = state
+            else:
+                (res_v, res_g, res_p, counts, bcounts, high,
+                 steps_taken, row_active, dropped, occ) = state
             step_base = it * cfg.chunk_steps
             # replicated whole-batch counter RNG: identical arithmetic to
             # _walk_chunk_batched, so walker q*w+i draws its unsharded bits
@@ -489,33 +568,51 @@ def pixie_walk_sharded_batched(
             first0 = it == 0
             sstate = (res_v, res_g, res_p, counts, bcounts, high,
                       dropped, occ)
+            if faulty:
+                sstate = sstate + (killed,)
             if unroll:
                 for s in range(cfg.chunk_steps):
                     sstate = superstep(
-                        sstate, rbits[s], row_active, first0 & (s == 0)
+                        sstate, rbits[s], row_active, first0 & (s == 0),
+                        (step_base + s) if faulty else None,
                     )
             else:
                 sstate = jax.lax.fori_loop(
                     0, cfg.chunk_steps,
                     lambda s, st: superstep(
-                        st, rbits[s], row_active, first0 & (s == 0)
+                        st, rbits[s], row_active, first0 & (s == 0),
+                        (step_base + s) if faulty else None,
                     ),
                     sstate,
                 )
-            (res_v, res_g, res_p, counts, bcounts, high,
-             dropped, occ) = sstate
+            if faulty:
+                (res_v, res_g, res_p, counts, bcounts, high,
+                 dropped, occ, killed) = sstate
+            else:
+                (res_v, res_g, res_p, counts, bcounts, high,
+                 dropped, occ) = sstate
             steps_taken = steps_taken + walkers_per_slot * row_active.astype(
                 jnp.int32
             ) * cfg.chunk_steps
             # the chunk-boundary fold: psum of the carried per-shard
             # tallies IS the global Algorithm 3 statistic (ownership
             # partitions the bins, crossings sum)
-            g_high = jax.lax.psum(high, axis)
+            if faulty:
+                # a dead shard's bins die with it, so its crossing tally
+                # leaves the early-stop statistic the moment it does —
+                # the statistic always describes HARVESTABLE counts
+                alive_h = dead_self > (step_base + cfg.chunk_steps - 1)
+                g_high = jax.lax.psum(
+                    jnp.where(alive_h, high, 0), axis
+                )
+            else:
+                g_high = jax.lax.psum(high, axis)
             row_active = (
                 valid_row & (steps_taken < n_q_row) & (g_high <= cfg.n_p)
             )
-            return (res_v, res_g, res_p, counts, bcounts, high,
-                    steps_taken, row_active, dropped, occ)
+            out = (res_v, res_g, res_p, counts, bcounts, high,
+                   steps_taken, row_active, dropped, occ)
+            return out + (killed,) if faulty else out
 
         state = (
             jnp.zeros((recv,), jnp.bool_),
@@ -530,25 +627,44 @@ def pixie_walk_sharded_batched(
             jnp.asarray(0, jnp.int32),
             jnp.asarray(0, jnp.int32),
         )
+        if faulty:
+            state = state + (jnp.asarray(0, jnp.int32),)   # killed tally
         if unroll:
             # cost-model mode: loop-free, every chunk runs (stopped rows
             # are frozen by masking, so the math is unchanged)
             for it in range(cfg.max_chunks()):
                 state = chunk_body(jnp.asarray(it, jnp.int32), state)
+            n_chunks = jnp.asarray(cfg.max_chunks(), jnp.int32)
         else:
             def cond(st_it):
                 st, it = st_it
                 return jnp.any(st[7]) & (it < cfg.max_chunks())
 
-            state, _ = jax.lax.while_loop(
+            state, n_chunks = jax.lax.while_loop(
                 cond,
                 lambda st_it: (
                     chunk_body(st_it[1], st_it[0]), st_it[1] + 1
                 ),
                 (state, jnp.asarray(0, jnp.int32)),
             )
-        (_, _, _, counts, bcounts, high,
-         steps_taken, _, dropped, occ) = state
+        if faulty:
+            (_, _, _, counts, bcounts, high,
+             steps_taken, _, dropped, occ, killed) = state
+            # harvest liveness: a shard that died before the walk ended
+            # harvests NOTHING (its HBM left with it) — zero its counts,
+            # board counts, and crossing tally BEFORE the query-pin
+            # debit, so the merge renormalizes over survivors; a shard
+            # whose death superstep the walk never reached was healthy
+            # the whole time and harvests normally
+            supersteps_run = n_chunks * cfg.chunk_steps
+            keep = (dead_self >= supersteps_run).astype(jnp.int32)
+            counts = counts * keep
+            if cfg.count_boards:
+                bcounts = bcounts * keep
+            high = high * keep
+        else:
+            (_, _, _, counts, bcounts, high,
+             steps_taken, _, dropped, occ) = state
 
         # ---- query-pin debit, mirroring the unsharded engine bit-for-bit
         # (position-only ownership: invalid slots hit all-zero bins, the
@@ -566,7 +682,7 @@ def pixie_walk_sharded_batched(
         n_high = g_high - q_reached
         dropped_total = jax.lax.psum(dropped, axis)
         occ_max = jax.lax.pmax(occ, axis)
-        return (
+        out = (
             c3.reshape(-1)[None],
             bcounts[None] if cfg.count_boards else None,
             steps_taken.reshape(n_queries, n_slots),
@@ -574,24 +690,35 @@ def pixie_walk_sharded_batched(
             dropped_total,
             occ_max,
         )
+        if faulty:
+            out = out + (jax.lax.psum(killed, axis),)
+        return out
 
     shd = P(axis, None)
     rep = P()
     fn = shard_map(
         local_walk,
         mesh=mesh,
-        in_specs=(shd, shd, shd, shd, rep, rep, rep, rep),
+        in_specs=(shd, shd, shd, shd, rep, rep, rep, rep)
+        + ((rep,) if faulty else ()),
         out_specs=(
             shd, shd if cfg.count_boards else None, rep, rep, rep, rep
-        ),
+        ) + ((rep,) if faulty else ()),
         check_rep=False,
     )
-    counts, bcounts, steps_taken, n_high, dropped, occ = fn(
+    args = (
         graph.p2b_offsets, graph.p2b_targets,
         graph.b2p_offsets, graph.b2p_targets,
         safe_q, jnp.where(valid_q, query_weights, 0.0),
         valid_q, keys,
     )
+    if faulty:
+        counts, bcounts, steps_taken, n_high, dropped, occ, killed = fn(
+            *args, shard_dead_at
+        )
+    else:
+        counts, bcounts, steps_taken, n_high, dropped, occ = fn(*args)
+        killed = None
     return ShardedBatchedWalkResult(
         counts=counts,
         board_counts=bcounts,
@@ -599,6 +726,7 @@ def pixie_walk_sharded_batched(
         n_high=n_high,
         dropped=dropped,
         max_occupancy=occ,
+        killed=killed,
     )
 
 
@@ -643,17 +771,21 @@ def recommend_sharded_batched(
     axis: str = "model",
     *,
     slack: float = 2.0,
+    shard_dead_at: Optional[Array] = None,
 ) -> Tuple[Array, Array, Array, Array, Array]:
     """Batch-native sharded serving: walk + hierarchical boosted top-k.
 
     Returns ``(scores (B, top_k), ids (B, top_k), steps_taken (B,
     n_slots), n_high (B, n_slots), dropped ())`` — the sharded twin of
     ``walk.recommend_with_stats_batched`` plus the routing-drop telemetry
-    ``serve_batch(with_stats=True)`` surfaces.
+    ``serve_batch(with_stats=True)`` surfaces.  ``shard_dead_at`` is the
+    degraded-mode liveness schedule (``pixie_walk_sharded_batched``);
+    the hierarchical top-k needs no change — a dead shard's owned counts
+    arrive zeroed, so its candidates simply never win a slot.
     """
     res = pixie_walk_sharded_batched(
         graph, query_pins, query_weights, keys, cfg, mesh, axis,
-        slack=slack,
+        slack=slack, shard_dead_at=shard_dead_at,
     )
     n_queries, n_slots = query_pins.shape
     scores, ids = _hierarchical_topk(

@@ -396,6 +396,7 @@ def serve_batch(
     rank=None,
     scenario: jnp.ndarray | None = None,
     step_budgets: jnp.ndarray | None = None,
+    shard_dead_at: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, ...]:
     """One SPMD serving step: Pixie over a whole query batch.
 
@@ -471,6 +472,15 @@ def serve_batch(
     programs because budgets never enter a shape.  ``None`` (every
     existing caller) leaves the classic static ``cfg.n_steps`` in place —
     same program, same results.  Unsupported over a ``ShardedGraph``.
+
+    ``shard_dead_at`` (optional ``(n_shards,)`` int32, ``ShardedGraph``
+    only) is the degraded-mode liveness schedule: shard ``s`` is dead
+    from absolute superstep ``shard_dead_at[s]`` onward (``INT32_MAX`` =
+    never).  Walkers routed to a dead shard are killed and reborn at
+    home, dead shards' counts drop out of the merge, and the killed
+    total is reported through the engine's telemetry — see
+    ``distributed.pixie_walk_sharded_batched``.  Data, not shape: the
+    serving layer flips liveness without retracing.
     """
     if backend is not None and backend != cfg.backend:
         cfg = dataclasses.replace(cfg, backend=backend)
@@ -516,13 +526,19 @@ def serve_batch(
             )
         scores, ids, steps, n_high, dropped = (
             dist_lib.recommend_sharded_batched(
-                graph, pins, weights, keys, cfg, mesh, axis, slack=slack
+                graph, pins, weights, keys, cfg, mesh, axis, slack=slack,
+                shard_dead_at=shard_dead_at,
             )
         )
         if with_stats:
             return scores, ids, steps, n_high, dropped
         return scores, ids
 
+    if shard_dead_at is not None:
+        raise ValueError(
+            "serve_batch(shard_dead_at=...) needs a ShardedGraph: an "
+            "unsharded replica has no shards to lose"
+        )
     if cfg.backend == "pallas" and walk_lib.batched_engine_fits(
         int(pins.shape[0]), int(pins.shape[1]), graph.n_pins,
         graph.n_boards, cfg.count_boards,

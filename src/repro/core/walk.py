@@ -433,10 +433,12 @@ def pixie_random_walk(
     ``step_budget`` overrides the Eq. 2 total ``cfg.n_steps`` as DATA (a
     Python int or a traced int32 scalar) — the multi-interest query layer
     gives each interest-cluster lane its own budget without recompiling
-    per budget value.  It must be <= ``cfg.n_steps``: the while loop's
-    static chunk bound stays ``cfg.max_chunks()``, so a smaller budget
-    exhausts via the per-slot ``steps_taken < n_q`` check while a larger
-    one would be silently truncated.
+    per budget value.  Budgets are CLAMPED to ``cfg.n_steps``: the while
+    loop's static chunk bound stays ``cfg.max_chunks()``, so a smaller
+    budget exhausts via the per-slot ``steps_taken < n_q`` check, and a
+    larger one — which the loop could never actually walk — is bounded
+    up front instead of silently truncating with inconsistent
+    ``steps_taken`` bookkeeping.
     """
     if cfg.n_v < 1:
         raise ValueError(
@@ -464,7 +466,8 @@ def pixie_random_walk(
         jnp.where(valid_q, query_weights, 0.0),
         degs,
         jnp.asarray(graph.max_pin_degree),
-        cfg.n_steps if step_budget is None else step_budget,
+        cfg.n_steps if step_budget is None
+        else jnp.minimum(jnp.asarray(step_budget, jnp.int32), cfg.n_steps),
     )
     slot_of_walker, _ = sampling.allocate_walkers(n_q, w)
     query_of_walker = jnp.take(safe_q, slot_of_walker).astype(jnp.int32)
@@ -655,9 +658,10 @@ def pixie_random_walk_batched(
     as data — the multi-interest layer rides its interest clusters on this
     axis, each with a budget proportional to cluster importance, and ragged
     users (different k) still share one compiled program because budgets
-    are array values, not shapes.  Each budget must be <= ``cfg.n_steps``
-    (the static chunk bound); per-lane parity with the per-query engine at
-    the same budget is preserved exactly.
+    are array values, not shapes.  Each budget is clamped to
+    ``cfg.n_steps`` (the static chunk bound — a bigger budget could never
+    be walked anyway); per-lane parity with the per-query engine at the
+    same budget is preserved exactly.
     """
     if cfg.n_v < 1:
         raise ValueError(
@@ -699,7 +703,8 @@ def pixie_random_walk_batched(
                 jnp.asarray(graph.max_pin_degree), bt,
             )
         )(valid_q, query_weights, degs,
-          jnp.asarray(step_budgets, jnp.int32))                # (B, S)
+          jnp.minimum(jnp.asarray(step_budgets, jnp.int32),
+                      cfg.n_steps))                            # (B, S)
     slot_of_walker_q, _ = jax.vmap(
         lambda nq: sampling.allocate_walkers(nq, w)
     )(n_q)                                                     # (B, w)

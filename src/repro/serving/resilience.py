@@ -1,0 +1,143 @@
+"""Degraded-mode serving policy: elastic walk budgets + degradation metrics.
+
+The paper's headline number (1,200 QPS at 60 ms p99, §4.4) is a FAIR-
+WEATHER number; this module is the bad-day policy layer.  Pixie's step
+budget is naturally elastic — Eq. 2 allocates steps per query and fewer
+steps is a lower-quality-but-valid Monte Carlo estimate, which Related
+Pins runs in production as graceful quality degradation under load.  The
+PR 9 ``step_budgets``-as-data machinery makes the knob free at serving
+time: budgets are a ``(batch,)`` int32 array riding every dispatched
+batch, so shrinking one NEVER retraces a program.
+
+Two pieces live here, both pure functions (the whole point — chaos runs
+replay bit-identically from a seed):
+
+  * ``elastic_step_budget`` — the deadline-aware shed policy
+    ``PixieServer`` applies at DISPATCH time: once a request's queue wait
+    has eaten past ``shed_start_ms`` of its ``deadline_ms``, its step
+    budget shrinks linearly toward ``min_budget_frac`` (never below —
+    availability over quality, a shed request is served, not dropped).
+    Deterministic from the logical clock: the same (submit, dispatch)
+    times always produce the same budget, which is what lets the
+    ``degraded_serving_agrees`` verdict compare a loaded chaos run
+    bit-for-bit against an unloaded oracle dispatched with the same
+    shrunk budgets.
+
+  * ``overlap_at_k`` — the degradation metric for dead-shard serving:
+    fraction of the all-shards-alive oracle's top-k ids the degraded run
+    recovered.  Dead shards renormalize counting over survivors
+    (core/distributed.py) but the quality loss must be QUANTIFIED, never
+    silent — the chaos bench reports this per fault scenario.
+
+Admission control (bounded intake queues) lives on the server
+(``max_queue_per_bucket``); ``ResilienceConfig`` can carry the bound so
+the whole degraded-mode policy is one object, and submit-time rejections
+are accounted per bucket in ``ServerStats.rejected``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Degraded-mode serving policy for one ``PixieServer`` replica.
+
+    ``deadline_ms`` is the per-request end-to-end latency target (the
+    paper's 60 ms p99); ``shed_start_ms`` is the queue wait at which
+    budget shrink begins (waits below it serve the FULL budget, so an
+    unloaded replica is bit-identical to one with no resilience layer at
+    all — the zero-fault leg of the chaos verdict); ``min_budget_frac``
+    floors the shrink (a request past its whole deadline still gets this
+    fraction of its steps — served late and coarse beats dropped).
+
+    ``max_queue_per_bucket`` optionally carries the admission bound so
+    the policy is self-contained; ``None`` defers to the server argument.
+    ``elastic=False`` keeps admission accounting but never shrinks a
+    budget (the knob for ranked replicas, whose compiled program has no
+    budgets axis).
+    """
+
+    deadline_ms: float = 60.0
+    shed_start_ms: float = 10.0
+    min_budget_frac: float = 0.25
+    elastic: bool = True
+    max_queue_per_bucket: Optional[int] = None
+
+    def __post_init__(self):
+        if self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {self.deadline_ms}"
+            )
+        if not 0 <= self.shed_start_ms < self.deadline_ms:
+            raise ValueError(
+                f"shed_start_ms={self.shed_start_ms} must lie in "
+                f"[0, deadline_ms={self.deadline_ms}): shrink must start "
+                "before the deadline or the policy can never engage"
+            )
+        if not 0 < self.min_budget_frac <= 1:
+            raise ValueError(
+                f"min_budget_frac={self.min_budget_frac} must be in "
+                "(0, 1]: zero-step service is a drop wearing a hat"
+            )
+
+
+def elastic_step_budget(
+    n_steps: int, wait_ms: float, rcfg: ResilienceConfig
+) -> int:
+    """Deadline-aware Eq. 2 budget for one request at dispatch time.
+
+    A pure host-side function of ``(n_steps, wait_ms, policy)`` — no
+    clocks, no RNG — so the server's shed decision replays exactly:
+
+      * ``wait_ms <= shed_start_ms``          -> full ``n_steps``;
+      * linear shrink across the remaining deadline window, floored at
+        ``min_budget_frac * n_steps`` (and never below 1 step);
+      * waits past the deadline hold at the floor — quality degrades,
+        availability doesn't.
+
+    ``n_steps`` is the request's own lane budget (a multi-interest
+    cluster lane sheds proportionally from its importance-scaled
+    allocation), never above the engine's static ``cfg.n_steps`` bound.
+    """
+    if wait_ms <= rcfg.shed_start_ms:
+        return int(n_steps)
+    span = rcfg.deadline_ms - rcfg.shed_start_ms
+    frac = (rcfg.deadline_ms - wait_ms) / span
+    frac = max(rcfg.min_budget_frac, min(1.0, frac))
+    return max(1, int(frac * n_steps))
+
+
+def overlap_at_k(
+    ids_a: np.ndarray, ids_b: np.ndarray, k: Optional[int] = None
+) -> float:
+    """Top-k id overlap between a degraded run and its oracle, in [0, 1].
+
+    Set intersection over the first ``k`` ids of each row (default: the
+    full width), averaged over the batch; ids < 0 (padding) are ignored.
+    1.0 means the degraded run recovered the oracle's candidate set
+    exactly; the chaos bench reports this per dead-shard scenario so the
+    quality cost of a fault is a NUMBER, not a silent ranking shift.
+    """
+    a = np.atleast_2d(np.asarray(ids_a))
+    b = np.atleast_2d(np.asarray(ids_b))
+    if a.shape[0] != b.shape[0]:
+        raise ValueError(
+            f"overlap_at_k got {a.shape[0]} degraded rows vs "
+            f"{b.shape[0]} oracle rows; compare the same queries"
+        )
+    if k is None:
+        k = min(a.shape[1], b.shape[1])
+    fracs = []
+    for i in range(a.shape[0]):
+        sa = set(int(x) for x in a[i, :k] if x >= 0)
+        sb = set(int(x) for x in b[i, :k] if x >= 0)
+        if not sb:
+            fracs.append(1.0 if not sa else 0.0)
+            continue
+        fracs.append(len(sa & sb) / len(sb))
+    return float(np.mean(fracs)) if fracs else 1.0

@@ -47,6 +47,10 @@ import numpy as np
 
 from repro.core import service, walk as walk_lib
 from repro.core.graph import PinBoardGraph
+from repro.serving.resilience import ResilienceConfig, elastic_step_budget
+
+# "this shard never dies": the liveness sentinel for sharded replicas
+_NEVER_DIES = np.iinfo(np.int32).max
 
 
 class LatencyRing:
@@ -86,6 +90,13 @@ class LatencyRing:
             return self._buf[: self._n].copy()
         return np.roll(self._buf, -self._head)
 
+    def percentile(self, p: float) -> float:
+        """Exact percentile over the retained window; 0.0 when empty (an
+        idle replica's dashboard shows 0, not a NaN crash)."""
+        if not self._n:
+            return 0.0
+        return float(np.percentile(self.values(), p))
+
     def __len__(self) -> int:
         return self._n
 
@@ -110,7 +121,11 @@ class ServerStats:
     compute_ms: LatencyRing = None
     queries: int = 0
     batches: int = 0
-    dropped: int = 0
+    dropped: int = 0          # total refused work (rejections + harness drops)
+    # submit-time admission rejections PER BUCKET (keyed by n_slots) —
+    # previously these were folded into ``dropped`` with no bucket
+    # attribution, so an operator couldn't see WHICH shape was overloaded
+    rejected: Dict[int, int] = None
     graph_generation: int = 0
 
     def __post_init__(self):
@@ -120,6 +135,13 @@ class ServerStats:
             self.wait_ms = LatencyRing(self.capacity)
         if self.compute_ms is None:
             self.compute_ms = LatencyRing(self.capacity)
+        if self.rejected is None:
+            self.rejected = {}
+
+    @property
+    def rejected_total(self) -> int:
+        """Submit-time rejections across every bucket."""
+        return sum(self.rejected.values())
 
     def percentile(self, p: float, which: str = "latency") -> float:
         ring = {
@@ -127,9 +149,7 @@ class ServerStats:
             "wait": self.wait_ms,
             "compute": self.compute_ms,
         }[which]
-        if not len(ring):
-            return 0.0
-        return float(np.percentile(ring.values(), p))
+        return ring.percentile(p)
 
     def qps(self, wall_seconds: float) -> float:
         return self.queries / max(wall_seconds, 1e-9)
@@ -141,14 +161,18 @@ class QueryResult:
     Unpacks as ``scores, ids = result`` (the historical flush() contract)
     and additionally carries the request id, the graph generation the
     batch dispatched under (§3.3: results produced before a swap report
-    the OLD generation), and the latency split.
+    the OLD generation), the latency split, and ``budget`` — the Eq. 2
+    step total the request actually dispatched with (the full lane budget
+    unless the resilience layer shed it; a multi-interest user reports
+    the sum over its cluster lanes).  Degraded service is visible on the
+    result, never silent.
     """
 
     __slots__ = ("req_id", "scores", "ids", "generation", "wait_ms",
-                 "compute_ms", "latency_ms", "batch_seq")
+                 "compute_ms", "latency_ms", "batch_seq", "budget")
 
     def __init__(self, req_id, scores, ids, generation, wait_ms,
-                 compute_ms, batch_seq):
+                 compute_ms, batch_seq, budget=0):
         self.req_id = req_id
         self.scores = scores
         self.ids = ids
@@ -157,6 +181,7 @@ class QueryResult:
         self.compute_ms = compute_ms
         self.latency_ms = wait_ms + compute_ms
         self.batch_seq = batch_seq
+        self.budget = budget
 
     def __iter__(self):
         return iter((self.scores, self.ids))
@@ -188,18 +213,26 @@ class _Pending:
 
 @dataclasses.dataclass
 class _UserAssembly:
-    """One multi-interest user awaiting its cluster-lane results."""
+    """One multi-interest user awaiting its cluster-lane results.
+
+    ``generation`` is stamped at ``submit_user`` — the user's lanes are
+    guaranteed to dispatch under that generation because ``swap_graph``
+    drains every queue before moving the handle (the generation barrier);
+    the old harvest-side ``max`` over lane generations could silently
+    blend walks from two graphs into one merged result.
+    """
 
     n_clusters: int
     importance: np.ndarray           # (k,) float32, normalized
     t_enqueue: float
+    generation: int
     parts: Dict[int, Tuple[np.ndarray, np.ndarray]] = dataclasses.field(
         default_factory=dict
     )
     wait_ms: float = 0.0
     compute_ms: float = 0.0
-    generation: int = 0
     batch_seq: int = -1
+    budget: int = 0                  # summed dispatched lane budgets
 
 
 @dataclasses.dataclass
@@ -211,6 +244,7 @@ class _InFlight:
     t_dispatch: float         # logical clock (matches submit's ``now``)
     t_dispatch_wall: float    # wall clock, for the compute measurement
     batch_seq: int
+    budgets: List[int] = None  # per-entry dispatched Eq. 2 step totals
 
 
 class PixieServer:
@@ -234,6 +268,7 @@ class PixieServer:
         ranker=None,
         pin_topics: Optional[np.ndarray] = None,
         n_clusters: int = 3,
+        resilience: Optional[ResilienceConfig] = None,
     ):
         """``backend`` overrides cfg.backend ("xla" | "pallas") so a fleet
         can flip every replica onto the fused Pallas walk engine at server
@@ -277,7 +312,23 @@ class PixieServer:
         as a ``(batch,)`` data array (flat requests carry the full
         ``cfg.n_steps`` — bit-identical to the budget-less program), so
         ragged users share the per-bucket compiled programs; bucket CHOICE
-        keys on each cluster lane's own pin count, never on k."""
+        keys on each cluster lane's own pin count, never on k.
+
+        ``resilience`` (a ``serving.resilience.ResilienceConfig``) turns
+        on degraded-mode serving: once a request's queue wait passes
+        ``shed_start_ms``, it dispatches with a deadline-proportionally
+        SHRUNK step budget instead of being dropped — budgets are data on
+        the same ``(batch,)`` axis the multi-interest lanes use, so
+        shedding never retraces.  Elastic shedding needs the budgets
+        axis: ranked replicas must set ``elastic=False`` (their compiled
+        program carries a scenario axis instead) and sharded replicas
+        reject elastic configs (the pod engine allocates from
+        ``cfg.n_steps``).  A sharded replica additionally gets the shard
+        liveness controls ``kill_shard``/``revive_shards``: dead shards
+        ride every dispatched batch as a ``(n_shards,)`` death-superstep
+        array (data, no retrace), walkers routed to them are killed and
+        reborn at home, and counting renormalizes over survivors
+        (core/distributed.py)."""
         if backend is not None and backend != cfg.backend:
             cfg = dataclasses.replace(cfg, backend=backend)
         if pin_topics is not None and ranker is not None:
@@ -302,6 +353,25 @@ class PixieServer:
         self.axis = axis
         self.slack = slack
         self.max_wait_ms = float(max_wait_ms)
+        if resilience is not None:
+            if ranker is not None and resilience.elastic:
+                raise ValueError(
+                    "elastic shedding rides the step_budgets data axis, "
+                    "which a ranked replica's compiled program doesn't "
+                    "carry (its batch axis is scenario); use "
+                    "ResilienceConfig(elastic=False) for admission-only"
+                )
+            if resilience.max_queue_per_bucket is not None:
+                if (max_queue_per_bucket is not None
+                        and max_queue_per_bucket
+                        != resilience.max_queue_per_bucket):
+                    raise ValueError(
+                        f"max_queue_per_bucket given twice and disagreeing: "
+                        f"server={max_queue_per_bucket} vs "
+                        f"resilience={resilience.max_queue_per_bucket}"
+                    )
+                max_queue_per_bucket = resilience.max_queue_per_bucket
+        self.resilience = resilience
         self.max_queue_per_bucket = max_queue_per_bucket
         self.stats = ServerStats(capacity=stats_capacity)
         self._key = jax.random.key(seed)
@@ -356,16 +426,33 @@ class PixieServer:
                     "per-lane step budgets are not threaded through the "
                     "pod-sharded engine; serve them on an unsharded replica"
                 )
+            if self.resilience is not None and self.resilience.elastic:
+                raise ValueError(
+                    "a sharded replica can't shed elastically: the pod "
+                    "engine allocates every walker from the static "
+                    "cfg.n_steps bound; use ResilienceConfig(elastic="
+                    "False) for admission control + dead-shard tolerance"
+                )
             graph, mesh, axis, slack = (
                 self.graph, self.mesh, self.axis, self.slack
             )
+            # shard liveness rides every dispatch as a (n_shards,) DATA
+            # array of death supersteps (INT32_MAX = never dies), so
+            # kill_shard/revive_shards never retrace; a graph swap
+            # revives everything (the daily reload replaces the pods)
+            self._shard_dead_at = np.full(
+                (graph.n_shards,), _NEVER_DIES, np.int32
+            )
             sharded = jax.jit(
-                lambda pins, weights, feats, keys: service.serve_batch(
+                lambda pins, weights, feats, keys, dead: service.serve_batch(
                     graph, pins, weights, feats, keys, cfg,
-                    mesh=mesh, axis=axis, slack=slack,
+                    mesh=mesh, axis=axis, slack=slack, shard_dead_at=dead,
                 )
             )
-            self._serve = lambda _g, p, w, f, k: sharded(p, w, f, k)
+            self._serve = lambda _g, p, w, f, k: sharded(
+                p, w, f, k, jnp.asarray(self._shard_dead_at)
+            )
+            self._takes_budgets = False
         else:
             # ONE jitted callable for every bucket: jit's compile cache is
             # keyed on argument shapes, so each (batch, n_slots) bucket
@@ -373,23 +460,20 @@ class PixieServer:
             # swap reuses the compiled program (no retrace) — pinned by
             # _plain_serve._cache_size() in tests/test_traffic.py
             if getattr(self, "_plain_serve", None) is None:
-                if self.pin_topics is not None:
-                    # multi-interest replica: per-lane Eq. 2 budgets ride
-                    # every batch as a (batch,) DATA array — flat requests
-                    # carry cfg.n_steps, which allocates bit-identically
-                    # to the static budget (core/sampling.allocate_steps)
+                if self.ranker is None:
+                    # EVERY non-ranker replica compiles the budgeted
+                    # program: per-lane Eq. 2 budgets ride every batch as
+                    # a (batch,) DATA array.  Flat requests carry
+                    # cfg.n_steps, which allocates bit-identically to the
+                    # static budget (core/sampling.allocate_steps), so
+                    # multi-interest lanes, elastic shed budgets, and
+                    # plain traffic all share the same cached programs —
+                    # shedding can never retrace
                     self._plain_serve = jax.jit(
                         lambda graph, pins, weights, feats, keys, budgets:
                             service.serve_batch(
                                 graph, pins, weights, feats, keys, cfg,
                                 step_budgets=budgets,
-                            )
-                    )
-                elif self.ranker is None:
-                    self._plain_serve = jax.jit(
-                        lambda graph, pins, weights, feats, keys:
-                            service.serve_batch(
-                                graph, pins, weights, feats, keys, cfg
                             )
                     )
                 else:
@@ -405,6 +489,7 @@ class PixieServer:
                             )
                     )
             self._serve = self._plain_serve
+            self._takes_budgets = self.ranker is None
 
     # -- request path ---------------------------------------------------------
     def _route(self, n_pins: int) -> Tuple[int, int]:
@@ -428,8 +513,15 @@ class PixieServer:
         now: Optional[float] = None,
         req_id: Optional[int] = None,
         scenario: int = 0,
+        budget: Optional[int] = None,
     ) -> Optional[int]:
         """Enqueue one request; returns its request id (None if shed).
+
+        ``budget`` pins the request's Eq. 2 step total (1..cfg.n_steps)
+        instead of the full ``cfg.n_steps`` — the replay knob the chaos
+        verdict uses to dispatch an unloaded oracle with the exact shrunk
+        budgets a loaded run shed to.  Elastic shedding may shrink it
+        further at dispatch, never grow it.
 
         ``scenario`` picks the request's ranker head on a two-stage
         replica (``ranker.cfg.scenario_id`` maps names to indices);
@@ -463,6 +555,18 @@ class PixieServer:
                 f"scenario={scenario} out of range for heads "
                 f"{list(self.ranker.cfg.scenarios)}"
             )
+        if budget is not None and not 1 <= int(budget) <= self.cfg.n_steps:
+            raise ValueError(
+                f"budget={budget} outside [1, cfg.n_steps="
+                f"{self.cfg.n_steps}]: the engine's chunk grid is sized "
+                "for cfg.n_steps and a zero-step walk is a drop"
+            )
+        if budget is not None and not getattr(self, "_takes_budgets", False):
+            raise ValueError(
+                "this replica's compiled program has no budgets axis "
+                "(ranked or sharded); per-request budgets need a plain "
+                "or multi-interest replica"
+            )
         n = len(pins)
         _, slots = self._route(n)
         if now is None:
@@ -475,7 +579,11 @@ class PixieServer:
         queue = self._queues[slots]
         if (self.max_queue_per_bucket is not None
                 and len(queue) >= self.max_queue_per_bucket):
+            # dropped stays the TOTAL refused-work counter; rejected is
+            # the per-bucket breakdown an operator needs to see WHICH
+            # shape is overloaded
             self.stats.dropped += 1
+            self.stats.rejected[slots] = self.stats.rejected.get(slots, 0) + 1
             return None
         qp = np.full(slots, -1, np.int32)
         qw = np.zeros(slots, np.float32)
@@ -485,6 +593,7 @@ class PixieServer:
             req_id=req_id, pins=qp, weights=qw, feat=int(user_feat),
             key=jax.random.fold_in(self._key, req_id), t_enqueue=now,
             scenario=int(scenario),
+            budget=0 if budget is None else int(budget),
         ))
         return req_id
 
@@ -546,6 +655,9 @@ class PixieServer:
             for slots, extra in demand.items():
                 if len(self._queues[slots]) + extra > self.max_queue_per_bucket:
                     self.stats.dropped += 1
+                    self.stats.rejected[slots] = (
+                        self.stats.rejected.get(slots, 0) + 1
+                    )
                     return None
         user_key = jax.random.fold_in(self._key, req_id)
         for ci, slots, n in lanes:
@@ -564,6 +676,9 @@ class PixieServer:
             n_clusters=uq.n_clusters,
             importance=np.asarray(uq.importance, np.float32),
             t_enqueue=now,
+            # stamped HERE, not at harvest: swap_graph's drain barrier
+            # guarantees every lane dispatches under this generation
+            generation=self.stats.graph_generation,
         )
         return req_id
 
@@ -596,19 +711,30 @@ class PixieServer:
         )
         if self.ranker is not None:
             args += (jnp.asarray(scen),)
-        if self.pin_topics is not None:
+        if self._takes_budgets:
+            rcfg = self.resilience
+            shed = rcfg is not None and rcfg.elastic
             budgets = np.full((batch_size,), self.cfg.n_steps, np.int32)
             for i, e in enumerate(entries):
-                if e.budget:
-                    budgets[i] = e.budget
+                b = e.budget if e.budget else self.cfg.n_steps
+                if shed:
+                    # deadline-aware elastic shed: queue wait on the
+                    # LOGICAL clock, so a chaos replay reproduces every
+                    # shrink bit-for-bit
+                    wait_ms = max(0.0, (now - e.t_enqueue) * 1e3)
+                    b = elastic_step_budget(b, wait_ms, rcfg)
+                budgets[i] = b
             args += (jnp.asarray(budgets),)
+            entry_budgets = [int(budgets[i]) for i in range(n_real)]
+        else:
+            entry_budgets = [self.cfg.n_steps] * n_real
         t_wall = time.perf_counter()
         scores, ids = self._serve(*args)
         self._inflight.append(_InFlight(
             entries=entries, scores=scores, ids=ids,
             generation=self.stats.graph_generation,
             t_dispatch=now, t_dispatch_wall=t_wall,
-            batch_seq=self._batch_seq,
+            batch_seq=self._batch_seq, budgets=entry_budgets,
         ))
         self._batch_seq += 1
         self.stats.batches += 1
@@ -677,13 +803,14 @@ class PixieServer:
                     asm.parts[e.cluster_idx] = (s_np[i], i_np[i])
                     asm.wait_ms = max(asm.wait_ms, wait_ms)
                     asm.compute_ms = max(asm.compute_ms, compute_ms)
-                    asm.generation = max(asm.generation, fl.generation)
                     asm.batch_seq = max(asm.batch_seq, fl.batch_seq)
+                    asm.budget += fl.budgets[i]
                     continue
                 out.append(QueryResult(
                     req_id=e.req_id, scores=s_np[i], ids=i_np[i],
                     generation=fl.generation, wait_ms=wait_ms,
                     compute_ms=compute_ms, batch_seq=fl.batch_seq,
+                    budget=fl.budgets[i],
                 ))
                 self.stats.queries += 1
                 self.stats.wait_ms.append(wait_ms)
@@ -693,8 +820,10 @@ class PixieServer:
         # emit users whose lanes all returned: Eq. 3 across clusters via
         # the SAME bit-reproducible merge the fused service path uses.
         # wait/compute are the max over the user's lanes (the user is done
-        # when its slowest interest is), batch_seq/generation the last
-        # lane's — one queries/latency sample per USER, not per lane.
+        # when its slowest interest is), batch_seq the last lane's, the
+        # generation the one stamped at submit_user (the swap_graph drain
+        # barrier guarantees every lane ran under it) — one queries/
+        # latency sample per USER, not per lane.
         done = [rid for rid, a in self._users.items()
                 if len(a.parts) == a.n_clusters]
         for rid in sorted(done):
@@ -710,6 +839,7 @@ class PixieServer:
                 req_id=rid, scores=np.asarray(ms), ids=np.asarray(mi),
                 generation=asm.generation, wait_ms=asm.wait_ms,
                 compute_ms=asm.compute_ms, batch_seq=asm.batch_seq,
+                budget=asm.budget,
             ))
             self.stats.queries += 1
             self.stats.wait_ms.append(asm.wait_ms)
@@ -736,14 +866,76 @@ class PixieServer:
         return out
 
     # -- graph swap (the daily reload, §3.3) -----------------------------------
-    def swap_graph(self, new_graph) -> None:
+    def swap_graph(self, new_graph, now: Optional[float] = None) -> None:
         """Swap in the freshly built daily graph, under load.
 
         Increments the generation exactly once; batches already in flight
         (or already dispatched) keep serving from the OLD graph handle —
         the swap never blocks serving, and their results report the old
         generation.  A same-shape plain-graph swap reuses the compiled
-        serve programs (the graph is a jit ARGUMENT, not a closure)."""
+        serve programs (the graph is a jit ARGUMENT, not a closure).
+
+        The GENERATION BARRIER: every still-queued request dispatches on
+        the old graph (partial batches padded, async — the swap doesn't
+        block on compute) before the handle moves.  Without it a multi-
+        interest user whose cluster lanes straddled the swap would merge
+        walks from two different graphs into one result; with it the
+        generation stamped at ``submit_user`` is always the generation
+        every lane actually ran under.  ``now`` injects the logical clock
+        for deterministic harness replays (defaults to wall time).
+
+        A sharded replica's swap also revives all shards (the daily
+        reload replaces the pods)."""
+        if now is None:
+            now = time.perf_counter()
+        for batch_size, slots in self._buckets:
+            while self._queues[slots]:
+                self._dispatch(batch_size, slots, now)
         self.graph = new_graph
         self.stats.graph_generation += 1
         self._build_serve()
+
+    # -- shard liveness (degraded-mode serving) --------------------------------
+    def kill_shard(self, shard: int, at_superstep: int = 0) -> None:
+        """Mark one pod shard dead from absolute superstep ``at_superstep``
+        of every subsequently dispatched walk (0 = dead from the start).
+
+        Pure data: the liveness array rides the next dispatch, nothing
+        retraces.  Walkers routed to a dead shard are killed and reborn
+        at their home shard, walkers homed there stop being (re)injected,
+        and its counts drop out of the merge — counting renormalizes over
+        the survivors (core/distributed.py).  The quality cost is
+        quantified by ``resilience.overlap_at_k`` against an all-alive
+        oracle in benchmarks/bench_chaos.py, never silent."""
+        from repro.core import distributed as dist_lib
+
+        if not isinstance(self.graph, dist_lib.ShardedGraph):
+            raise ValueError(
+                "kill_shard needs a sharded replica; a plain graph has "
+                "no shards to lose"
+            )
+        if not 0 <= int(shard) < self._shard_dead_at.shape[0]:
+            raise ValueError(
+                f"shard {shard} out of range for "
+                f"{self._shard_dead_at.shape[0]} shards"
+            )
+        if int(at_superstep) < 0:
+            raise ValueError(
+                f"at_superstep={at_superstep} must be >= 0"
+            )
+        self._shard_dead_at[int(shard)] = int(at_superstep)
+
+    def revive_shards(self) -> None:
+        """Bring every shard back to life (subsequent dispatches only)."""
+        from repro.core import distributed as dist_lib
+
+        if not isinstance(self.graph, dist_lib.ShardedGraph):
+            raise ValueError("revive_shards needs a sharded replica")
+        self._shard_dead_at[:] = _NEVER_DIES
+
+    def dead_shards(self) -> List[int]:
+        """Shards currently marked dead (empty on a healthy replica)."""
+        dead = getattr(self, "_shard_dead_at", None)
+        if dead is None:
+            return []
+        return [int(i) for i in np.flatnonzero(dead != _NEVER_DIES)]

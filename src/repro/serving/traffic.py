@@ -27,6 +27,26 @@ absolute curve is only meaningful on TPU hosts; the shape (wait exploding
 as offered load approaches capacity) and the ``traffic_buckets_agree``
 verdict (bucketed deadline-aware serving bit-identical to the
 single-bucket flush oracle) are host-independent.
+
+CHAOS MODE: ``FaultSchedule`` injects faults as pure functions of a seed
+(``sample_fault_schedule``) driven through the same virtual clock, so a
+chaos run is bit-reproducible on interpret-mode CPU hosts:
+
+  * **traffic bursts** — a deterministic time-warp applied to the arrival
+    schedule up front (``apply_traffic_bursts``): arrivals inside a burst
+    window compress toward its start, spiking instantaneous offered QPS
+    without touching payloads or request ids (walks unchanged);
+  * **dispatch latency spikes** — suppression windows on the DISPATCH
+    clock: any batch formation that would fire inside a window defers to
+    its end (the device hiccuped, the intake didn't), so queue waits grow
+    and the resilience layer's elastic budgets shrink, deterministically;
+  * **shard deaths** — at the event's logical time the harness calls
+    ``server.kill_shard``; every later dispatch rides the dead-shard
+    tolerance path in core/distributed.py.
+
+Zero faults + resilience thresholds that never engage reproduce the plain
+open-loop run bit-for-bit — the ``degraded_serving_agrees`` verdict leans
+on exactly that.
 """
 
 from __future__ import annotations
@@ -146,6 +166,157 @@ def poisson_user_requests(
     return out
 
 
+# ---------------------------------------------------------------------------
+# Seeded fault injection (degraded-mode serving, serving/resilience.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault on the virtual clock.
+
+    ``kind`` is ``"latency_spike"`` (dispatch suppression over
+    ``[t_start, t_start + duration_s)``), ``"traffic_burst"`` (arrivals in
+    the window compress toward ``t_start`` by ``factor``), or
+    ``"shard_death"`` (``shard`` dies at walk superstep ``at_superstep``
+    for every batch dispatched at or after ``t_start``).
+    """
+
+    kind: str
+    t_start: float
+    duration_s: float = 0.0
+    factor: float = 1.0
+    shard: int = -1
+    at_superstep: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A set of fault events, a pure function of the chaos seed.
+
+    Immutable and host-side: applying the same schedule to the same
+    request list and server seed replays the whole degraded run
+    bit-for-bit (budgets, batch composition, walks, everything).
+    """
+
+    events: Tuple[FaultEvent, ...] = ()
+
+    def of_kind(self, kind: str) -> Tuple[FaultEvent, ...]:
+        return tuple(
+            sorted(
+                (e for e in self.events if e.kind == kind),
+                key=lambda e: e.t_start,
+            )
+        )
+
+    def defer(self, t: float) -> float:
+        """Earliest non-suppressed instant at or after ``t``.
+
+        A dispatch landing inside a latency-spike window slides to the
+        window's end; cascading windows chain (the loop runs to a fixed
+        point, so overlapping spikes behave like one long one).
+        """
+        spikes = self.of_kind("latency_spike")
+        moved = True
+        while moved:
+            moved = False
+            for e in spikes:
+                if e.t_start <= t < e.t_start + e.duration_s:
+                    t = e.t_start + e.duration_s
+                    moved = True
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Knobs for ``sample_fault_schedule`` — how much of each fault kind.
+
+    ``horizon_s`` spans the window fault start times draw from (uniform,
+    seeded).  ``n_shards`` must be set when ``n_shard_deaths > 0`` (the
+    victim shard draws from it); ``death_max_superstep`` bounds the drawn
+    in-walk death step.
+    """
+
+    horizon_s: float
+    seed: int = 0
+    n_spikes: int = 0
+    spike_duration_s: float = 0.05
+    n_bursts: int = 0
+    burst_duration_s: float = 0.2
+    burst_factor: float = 4.0
+    n_shard_deaths: int = 0
+    n_shards: int = 0
+    death_max_superstep: int = 8
+
+    def __post_init__(self):
+        if self.horizon_s <= 0:
+            raise ValueError(f"horizon_s must be > 0, got {self.horizon_s}")
+        if self.burst_factor < 1.0:
+            raise ValueError(
+                f"burst_factor={self.burst_factor} must be >= 1 (a burst "
+                "compresses arrivals; use fewer requests to thin traffic)"
+            )
+        if self.n_shard_deaths > 0 and self.n_shards < 1:
+            raise ValueError(
+                "n_shard_deaths > 0 needs n_shards (the victim pool)"
+            )
+
+
+def sample_fault_schedule(cfg: ChaosConfig) -> FaultSchedule:
+    """Draw a fault schedule — same ``ChaosConfig`` -> same schedule."""
+    rng = np.random.default_rng(cfg.seed)
+    events: List[FaultEvent] = []
+    for _ in range(cfg.n_spikes):
+        events.append(FaultEvent(
+            kind="latency_spike",
+            t_start=float(rng.uniform(0.0, cfg.horizon_s)),
+            duration_s=cfg.spike_duration_s,
+        ))
+    for _ in range(cfg.n_bursts):
+        events.append(FaultEvent(
+            kind="traffic_burst",
+            t_start=float(rng.uniform(0.0, cfg.horizon_s)),
+            duration_s=cfg.burst_duration_s,
+            factor=cfg.burst_factor,
+        ))
+    for _ in range(cfg.n_shard_deaths):
+        events.append(FaultEvent(
+            kind="shard_death",
+            t_start=float(rng.uniform(0.0, cfg.horizon_s)),
+            shard=int(rng.integers(0, cfg.n_shards)),
+            at_superstep=int(rng.integers(0, cfg.death_max_superstep + 1)),
+        ))
+    events.sort(key=lambda e: (e.t_start, e.kind))
+    return FaultSchedule(events=tuple(events))
+
+
+def apply_traffic_bursts(
+    requests: Sequence[Request], faults: FaultSchedule
+) -> List[Request]:
+    """Deterministic arrival time-warp for every burst event.
+
+    Arrivals inside ``[t_start, t_start + duration_s)`` compress toward
+    ``t_start`` by ``factor`` (monotone within the window, so arrival
+    ORDER never changes); payloads and request ids are untouched, so the
+    walks — keyed by request id — are bit-identical to the unwarped
+    run's, only their queueing differs.  Applied once, up front: the
+    burst is part of the offered schedule, not a serving-time effect.
+    """
+    out = list(requests)
+    for e in faults.of_kind("traffic_burst"):
+        warped = []
+        for r in out:
+            t = r.t_arrival
+            if e.t_start <= t < e.t_start + e.duration_s:
+                t = e.t_start + (t - e.t_start) / e.factor
+            warped.append(
+                dataclasses.replace(r, t_arrival=t) if t != r.t_arrival
+                else r
+            )
+        out = warped
+    return out
+
+
 @dataclasses.dataclass
 class TrafficReport:
     """Aggregate + per-request accounting of one open-loop run."""
@@ -161,9 +332,18 @@ class TrafficReport:
     compute_ms: np.ndarray        # measured device round-trip
     results: Dict[int, QueryResult]  # req_id -> result (scores/ids/gen)
     generations: Dict[int, int]   # req_id -> graph generation served under
+    # submit-time admission rejections (bounded bucket queues) — part of
+    # n_dropped, broken out so total refused work is attributable
+    n_rejected: int = 0
+    # req_id -> the Eq. 2 step budget the request actually dispatched
+    # with (shrunk under elastic shed) — the replay record the chaos
+    # verdict feeds back through ``submit(budget=...)``
+    budgets: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def drop_rate(self) -> float:
+        """Total refused work (backlog sheds + admission rejections)
+        over offered — rejections are NOT extra on top of n_dropped."""
         return self.n_dropped / max(self.n_offered, 1)
 
     @property
@@ -182,6 +362,7 @@ class TrafficReport:
             "n_offered": self.n_offered,
             "n_served": self.n_served,
             "n_dropped": self.n_dropped,
+            "n_rejected": self.n_rejected,
             "drop_rate": round(self.drop_rate, 4),
             "p50_ms": round(self.percentile(50), 3),
             "p95_ms": round(self.percentile(95), 3),
@@ -201,6 +382,7 @@ def run_open_loop(
     max_backlog_s: Optional[float] = None,
     swap_at: Optional[int] = None,
     swap_graph=None,
+    faults: Optional[FaultSchedule] = None,
 ) -> TrafficReport:
     """Offer ``requests`` to ``server`` on the virtual clock.
 
@@ -210,6 +392,14 @@ def run_open_loop(
     ``swap_at``/``swap_graph`` exercise the daily graph reload (§3.3)
     UNDER load: after offering ``swap_at`` requests the new graph swaps
     in; requests dispatched before the swap carry the old generation.
+
+    ``faults`` injects the seeded chaos schedule: traffic bursts warp the
+    arrival times up front (``apply_traffic_bursts``), latency spikes
+    defer every dispatch landing in their window to the window's end
+    (waits grow, elastic budgets shrink — all on the virtual clock, so
+    the degraded run replays bit-for-bit), and shard deaths call
+    ``server.kill_shard`` once the clock passes their start time.  An
+    empty schedule is exactly no schedule.
 
     Multi-interest requests (``Request.actions`` set) route through
     ``server.submit_user``; each user surfaces as ONE harvested result
@@ -221,11 +411,19 @@ def run_open_loop(
     The bit-level regression signal is the ``multi_interest_agrees``
     verdict, never this model's latency numbers.
     """
+    if faults is not None:
+        requests = apply_traffic_bursts(requests, faults)
+        deaths = list(faults.of_kind("shard_death"))
+        eff = faults.defer          # dispatch-time suppression mapping
+    else:
+        deaths = []
+        eff = lambda t: t
     requests = sorted(requests, key=lambda r: r.t_arrival)
     busy_until = 0.0
     harvested: List[QueryResult] = []
     dispatch_time: Dict[int, float] = {}  # batch_seq -> logical dispatch t
     n_dropped = 0
+    rejected_before = server.stats.rejected_total
 
     def _account():
         """Harvest any newly dispatched batches and note dispatch times."""
@@ -234,16 +432,24 @@ def run_open_loop(
         harvested.extend(server.harvest())
 
     for i, req in enumerate(requests):
+        while deaths and deaths[0].t_start <= req.t_arrival:
+            e = deaths.pop(0)
+            server.kill_shard(e.shard, at_superstep=e.at_superstep)
         if swap_at is not None and i == swap_at:
             if swap_graph is None:
                 raise ValueError("swap_at set but no swap_graph given")
-            server.swap_graph(swap_graph)
-        # fire every deadline that ripens before this arrival, in order
+            # the swap's generation barrier may dispatch queued partials
+            # on the old graph — account them before serving continues
+            server.swap_graph(swap_graph, now=eff(req.t_arrival))
+            _account()
+        # fire every deadline that ripens before this arrival, in order;
+        # a deadline landing in a latency-spike window fires (with every
+        # other dispatch due by then) at the window's end
         while True:
             d = server.next_deadline()
             if d is None or d > req.t_arrival:
                 break
-            server.pump(now=d)
+            server.pump(now=eff(d))
             _account()
         if max_backlog_s is not None and (
             busy_until - req.t_arrival > max_backlog_s
@@ -259,18 +465,23 @@ def run_open_loop(
                 list(req.actions), req.user_feat,
                 now=req.t_arrival, req_id=req.req_id,
             )
-            if admitted is None:
-                n_dropped += 1
-                server.pump(now=req.t_arrival)
-                _account()
-                busy_until = _advance_executor(
-                    harvested, dispatch_time, busy_until
-                )
-                continue
         else:
-            server.submit(list(req.pins), list(req.weights), req.user_feat,
-                          now=req.t_arrival, req_id=req.req_id)
-        server.pump(now=req.t_arrival)  # full-bucket dispatches
+            admitted = server.submit(
+                list(req.pins), list(req.weights), req.user_feat,
+                now=req.t_arrival, req_id=req.req_id,
+            )
+        if admitted is None:
+            # admission rejection (bounded bucket queue): counted here so
+            # the drop rate reflects TOTAL refused work, and per-bucket
+            # in server.stats.rejected
+            n_dropped += 1
+            server.pump(now=eff(req.t_arrival))
+            _account()
+            busy_until = _advance_executor(
+                harvested, dispatch_time, busy_until
+            )
+            continue
+        server.pump(now=eff(req.t_arrival))  # full-bucket dispatches
         _account()
         # fold harvested compute into the executor model as batches land
         busy_until = _advance_executor(harvested, dispatch_time, busy_until)
@@ -278,7 +489,7 @@ def run_open_loop(
     # drain: remaining partials dispatch at their deadlines
     while server.pending():
         d = server.next_deadline()
-        server.pump(now=d)
+        server.pump(now=eff(d))
         _account()
     busy_until = _advance_executor(harvested, dispatch_time, busy_until)
 
@@ -290,6 +501,7 @@ def run_open_loop(
     lat, wait, queue, comp = [], [], [], []
     results: Dict[int, QueryResult] = {}
     generations: Dict[int, int] = {}
+    budgets: Dict[int, int] = {}
     for seq in sorted(per_batch):
         rs = per_batch[seq]
         t_d = dispatch_time[seq]
@@ -305,6 +517,7 @@ def run_open_loop(
             comp.append(r.compute_ms)
             results[r.req_id] = r
             generations[r.req_id] = r.generation
+            budgets[r.req_id] = int(r.budget)
 
     makespan = max(
         [busy] + [r.t_arrival for r in requests[-1:]]
@@ -324,6 +537,8 @@ def run_open_loop(
         compute_ms=np.asarray(comp),
         results=results,
         generations=generations,
+        n_rejected=server.stats.rejected_total - rejected_before,
+        budgets=budgets,
     )
 
 
